@@ -1,0 +1,87 @@
+"""Pallas kernel microbenchmarks (interpret mode on this CPU container).
+
+Wall-clock numbers here are *interpreter* times — meaningless as TPU
+performance, reported only to show the harness. The meaningful output is
+(a) kernel-vs-oracle agreement across a shape sweep and (b) the VMEM
+working-set accounting of the chosen BlockSpecs, checked against the 16 MB
+budget the kernel claims in its docstring.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Check, table
+from repro.core.aimc import AimcConfig, program_linear
+from repro.kernels import ops, ref
+
+SHAPES = [  # (B, K, N)
+    (8, 256, 256),
+    (64, 1024, 1024),
+    (128, 512, 2048),
+    (16, 300, 200),      # ragged -> padding path
+]
+
+
+def vmem_bytes(bb: int, m: int, bn: int) -> int:
+    """Per-grid-step VMEM working set of kernels/aimc_mvm.py."""
+    return (bb * m * 4          # x block f32
+            + m * bn * 1        # stationary int8 weight panel
+            + bb * bn * 4       # read-noise block f32
+            + bb * bn * 4       # output block f32
+            + bn * 4 + 4)       # s_w row + s_x scalar
+
+
+def run(verbose: bool = True) -> dict:
+    cfg = AimcConfig(tile_rows=256, impl="ref")
+    rows, max_err = [], 0.0
+    for (b, k, n) in SHAPES:
+        kx, kw = jax.random.split(jax.random.PRNGKey(b + k + n))
+        x = jax.random.normal(kx, (b, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32) * 0.05
+        st = program_linear(w, cfg)
+        kb, m, np_ = st.w_q.shape
+        from repro.core.quant import sym_scale
+        xf = jnp.pad(x, ((0, 0), (0, kb * m - k)))
+        s_x = sym_scale(xf).reshape(1, 1)
+        noise = jnp.zeros((kb, b, np_), jnp.float32)
+
+        y_ref = ops.aimc_matmul(xf, st.w_q, st.s_w, s_x, noise,
+                                adc_step=cfg.adc_step, impl="ref")
+        t0 = time.perf_counter()
+        y_pal = ops.aimc_matmul(xf, st.w_q, st.s_w, s_x, noise,
+                                adc_step=cfg.adc_step,
+                                impl="pallas_interpret")
+        jax.block_until_ready(y_pal)
+        t1 = time.perf_counter()
+        err = float(jnp.max(jnp.abs(y_ref - y_pal)))
+        max_err = max(max_err, err)
+        rows.append([f"{b}x{k}x{n}", f"{err:.2e}",
+                     f"{(t1 - t0) * 1e3:.0f}ms (interp)"])
+    vm = vmem_bytes(128, 512, 512)
+    if verbose:
+        print(table("AIMC crossbar kernel vs oracle", ["B x K x N",
+                    "max |kernel - oracle|", "interpret time"], rows))
+        print(f"  default BlockSpec VMEM working set: {vm / 2**20:.2f} MiB "
+              f"(budget 16 MiB)")
+        print()
+    return {"max_err": max_err, "vmem": vm}
+
+
+def checks(results=None) -> list[Check]:
+    results = results or run(verbose=False)
+    return [
+        Check("kernel-oracle max abs err < 1e-5",
+              1.0 if results["max_err"] < 1e-5 else 0.0, 1.0, rtol=0.01),
+        Check("VMEM working set under 16 MiB",
+              1.0 if results["vmem"] < 16 * 2**20 else 0.0, 1.0, rtol=0.01),
+    ]
+
+
+if __name__ == "__main__":
+    res = run()
+    for c in checks(res):
+        print(c.row())

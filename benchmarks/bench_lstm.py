@@ -1,0 +1,92 @@
+"""Paper Fig. 10 + Fig. 11 — LSTM exploration (§VIII).
+
+PTB character LSTM, n_h in {256, 512, 750}, digital 1/2/5-core references vs
+AIMC cases 1-4. Checks (§VIII headline claims):
+  * n_h=750 speedup up to 9.4x / energy 9.3x (high-power),
+  * n_h=256 gains only 1.0-1.5x (working set already fits caches),
+  * multi-core case 4 is ~10% FASTER than case 1 (unlike the MLP),
+  * AIMC run time grows sub-quadratically with n_h (~1.4x avg step),
+  * cell dequeue+activation dominates the analog run time (Fig. 11).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Check, fmt_e, fmt_t, table
+from repro.core.costmodel import HIGH_POWER, LOW_POWER, evaluate, speedup
+from repro.core.workloads import lstm_workloads
+
+NHS = (256, 512, 750)
+CASES = ["dig_1c", "dig_2c", "dig_5c",
+         "ana_case1", "ana_case2", "ana_case3", "ana_case4"]
+
+
+def run(verbose: bool = True) -> dict:
+    results = {}
+    for sysc in (HIGH_POWER, LOW_POWER):
+        res = {}
+        for nh in NHS:
+            w = lstm_workloads(nh)
+            res[nh] = {c: evaluate(w[c], sysc) for c in CASES}
+        results[sysc.name] = res
+        if verbose:
+            rows = []
+            for nh in NHS:
+                dig = res[nh]["dig_1c"]
+                for c in CASES:
+                    r = res[nh][c]
+                    s, e = speedup(dig, r)
+                    rows.append([nh, c, fmt_t(r.time_s), fmt_e(r.energy_j),
+                                 f"{s:.1f}x", f"{e:.1f}x"])
+            print(table(f"LSTM — {sysc.name} system (Fig. 10)",
+                        ["n_h", "case", "time/inf", "energy/inf",
+                         "speedup", "energy gain"], rows))
+            print()
+    if verbose:
+        rows = []
+        res = results["high-power"]
+        for nh in NHS:
+            for case in ("ana_case1", "ana_case4"):
+                r = res[nh][case]
+                tot = sum(r.breakdown.values()) or 1.0
+                deq_act = (r.breakdown["analog_dequeue"]
+                           + r.breakdown["digital_ops"]) / tot
+                q = r.breakdown["analog_queue"] / tot
+                rows.append([nh, case, f"{deq_act:.0%}", f"{q:.0%}"])
+        print(table("LSTM sub-ROI shares, high-power (Fig. 11)",
+                    ["n_h", "case", "dequeue+activation", "queue"], rows))
+        print()
+    return results
+
+
+def checks(results=None) -> list[Check]:
+    results = results or run(verbose=False)
+    hp = results["high-power"]
+    s750, e750 = speedup(hp[750]["dig_1c"], hp[750]["ana_case1"])
+    s256, _ = speedup(hp[256]["dig_1c"], hp[256]["ana_case1"])
+    # analog run-time growth with n_h (paper: ~1.4x average step)
+    t256 = hp[256]["ana_case1"].time_s
+    t512 = hp[512]["ana_case1"].time_s
+    t750 = hp[750]["ana_case1"].time_s
+    growth = ((t512 / t256) + (t750 / t512)) / 2
+    r = hp[750]["ana_case1"].breakdown
+    share = ((r["analog_dequeue"] + r["digital_ops"])
+             / (sum(r.breakdown.values()) if hasattr(r, "breakdown")
+                else sum(r.values())))
+    return [
+        Check("LSTM n_h=750 speedup (high-power)", s750, 9.4),
+        Check("LSTM n_h=750 energy gain (high-power)", e750, 9.3),
+        Check("LSTM n_h=256 speedup (1.0-1.5x band)", s256, 1.5, rtol=0.45),
+        Check("analog run-time growth per size step (~1.4x)", growth, 1.4,
+              rtol=0.3),
+        Check("case4 ~10% faster than case1 (n_h=750)",
+              hp[750]["ana_case1"].time_s / hp[750]["ana_case4"].time_s,
+              1.10, rtol=0.15),
+        Check("cell dequeue+activation dominates (<=81.8%)", share, 0.75,
+              rtol=0.3),
+    ]
+
+
+if __name__ == "__main__":
+    res = run()
+    for c in checks(res):
+        print(c.row())

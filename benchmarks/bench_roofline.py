@@ -1,0 +1,76 @@
+"""§Roofline — the dry-run-derived roofline table (EXPERIMENTS.md §Roofline).
+
+Reads ``experiments/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+prints, per (arch x shape x mesh x exec x variant) cell:
+
+  compute_s     HLO_FLOPs / peak_FLOPs        (while-aware, per device)
+  memory_s      HLO_bytes / HBM_bw
+  collective_s  collective wire bytes / ICI link bw
+  dominant      the bottleneck term
+  useful        MODEL_FLOPS / HLO_FLOPs
+  RL%           roofline fraction: (MODEL_FLOPS/peak) / max(term)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load(dryrun_dir: str = DRYRUN_DIR, variant: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if variant is not None and r.get("variant") != variant:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:9.3f}"
+
+
+def run(verbose: bool = True, variant: str | None = None) -> dict:
+    recs = load(variant=variant)
+    ok = [r for r in recs if r.get("ok")]
+    bad = [r for r in recs if not r.get("ok")]
+    rows = []
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                       r.get("variant", ""))):
+        rl = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], r["mesh"], r.get("exec", "?"),
+            r.get("variant", "?"),
+            fmt_ms(rl["compute_s"]), fmt_ms(rl["memory_s"]),
+            fmt_ms(rl["collective_s"]),
+            rl["dominant"].replace("_s", ""),
+            f"{r.get('useful_ratio', 0.0):.3f}",
+            f"{rl.get('roofline_fraction', 0.0) * 100:5.1f}%",
+            f"{r['memory']['peak_bytes'] / 2**30:7.2f}",
+        ])
+    if verbose:
+        if rows:
+            print(table("Roofline terms per cell (ms per step, per device)",
+                        ["arch", "shape", "mesh", "exec", "variant",
+                         "compute", "memory", "collective", "dominant",
+                         "useful", "RL%", "peakGiB"], rows))
+        for r in bad:
+            print(f"  FAILED cell: {r['arch']}/{r['shape']}/{r['mesh']}: "
+                  f"{r.get('error', '?')}")
+        print(f"\n  {len(ok)} compiled cells, {len(bad)} failures")
+        print()
+    return {"ok": len(ok), "failed": len(bad), "records": ok}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Shared table/validation helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Check:
+    """One validation of a paper claim."""
+    name: str
+    measured: float
+    target: float
+    rtol: float = 0.15           # the paper reports 3 significant digits at best
+
+    @property
+    def ok(self) -> bool:
+        return abs(self.measured - self.target) <= self.rtol * abs(self.target)
+
+    def row(self) -> str:
+        flag = "PASS" if self.ok else "FAIL"
+        return (f"  [{flag}] {self.name:52s} measured={self.measured:8.2f}  "
+                f"paper={self.target:8.2f}  (rtol {self.rtol:.0%})")
+
+
+def table(title: str, header: list[str], rows: list[list]) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(header)]
+    out = [f"== {title} =="]
+    out.append("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    out.append("  ".join("-" * w for w in widths))
+    for r in rows:
+        out.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def fmt_t(seconds: float) -> str:
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:.1f}us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:.2f}ms"
+    return f"{seconds:.3f}s"
+
+
+def fmt_e(joules: float) -> str:
+    if joules < 1e-3:
+        return f"{joules * 1e6:.1f}uJ"
+    if joules < 1.0:
+        return f"{joules * 1e3:.2f}mJ"
+    return f"{joules:.3f}J"

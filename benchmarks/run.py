@@ -1,0 +1,62 @@
+"""Benchmark harness front door: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One module per paper table/figure (DESIGN.md §7):
+
+  bench_mlp       Fig. 7 / Fig. 8   (MLP cases, both systems)
+  bench_lstm      Fig. 10 / Fig. 11 (LSTM n_h sweep, cases)
+  bench_cnn       Fig. 13 / Fig. 14 (CNN-F/M/S, 8-core pipeline)
+  bench_coupling  §VII-B            (tight vs loose, analytical + lowered)
+  bench_accuracy  §III-C            (AIMC output fidelity vs digital)
+  bench_kernels   kernels/          (Pallas vs oracle + VMEM budget)
+  bench_roofline  §Roofline         (dry-run table; run dryrun first)
+
+Exit code 1 if any paper-claim validation fails.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (bench_accuracy, bench_cnn, bench_coupling,
+                        bench_kernels, bench_lstm, bench_mlp, bench_roofline)
+
+MODULES = [
+    ("MLP (paper Fig. 7/8)", bench_mlp),
+    ("LSTM (paper Fig. 10/11)", bench_lstm),
+    ("CNN (paper Fig. 13/14)", bench_cnn),
+    ("Coupling (paper §VII-B)", bench_coupling),
+    ("Fidelity (paper §III-C)", bench_accuracy),
+    ("Pallas kernels", bench_kernels),
+]
+
+
+def main() -> None:
+    all_checks = []
+    t_start = time.time()
+    for title, mod in MODULES:
+        print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
+        t0 = time.time()
+        results = mod.run(verbose=True)
+        checks = mod.checks(results)
+        all_checks.extend(checks)
+        for c in checks:
+            print(c.row())
+        print(f"  ({time.time() - t0:.1f}s)")
+
+    print(f"\n{'=' * 72}\nRoofline (dry-run table)\n{'=' * 72}")
+    bench_roofline.run(verbose=True)
+
+    n_fail = sum(1 for c in all_checks if not c.ok)
+    print(f"\n{'=' * 72}")
+    print(f"SUMMARY: {len(all_checks) - n_fail}/{len(all_checks)} paper-claim "
+          f"validations passed ({time.time() - t_start:.1f}s)")
+    if n_fail:
+        for c in all_checks:
+            if not c.ok:
+                print(c.row())
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Train a language model end-to-end with the production launcher.
+
+    PYTHONPATH=src python examples/train_lm.py            # CPU-sized demo
+    PYTHONPATH=src python examples/train_lm.py --full     # ~100M-param run
+
+Drives `repro.launch.train` — the same module a pod launch uses — through
+the full substrate: deterministic sharded data, FSDP+TP step function with
+gradient accumulation and remat, atomic checkpointing with auto-resume
+(kill it mid-run and re-launch: it continues), straggler monitor, heartbeat.
+
+The demo run uses the llama3.2-3b reduced config for a quick loss curve;
+--full trains a ~100M-parameter llama-family config for a few hundred steps
+(hours on this single-core container, minutes on real hardware — identical
+code path either way).
+"""
+
+import shutil
+import sys
+import tempfile
+
+from repro.launch import train
+
+full = "--full" in sys.argv
+ckpt = tempfile.mkdtemp(prefix="alpine_train_")
+try:
+    if full:
+        # ~100M params: 12L x 768d x 12H, 3072 ff, 32k vocab — registered as
+        # a one-off config through the same ArchSpec machinery.
+        import dataclasses
+        import repro.configs.llama32_3b as l3
+        from repro.configs import ArchSpec
+        from repro.models.transformer import TransformerConfig
+        cfg100m = TransformerConfig(
+            name="lm_100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=12, d_ff=3072, vocab=32000, q_chunk=256, kv_chunk=256)
+        spec = dataclasses.replace(l3.ARCH, model_cfg=cfg100m,
+                                   smoke_cfg=cfg100m)
+        # monkey-patch the registry entry for this process only
+        import repro.configs as configs
+        orig = configs.get_arch
+        configs.get_arch = lambda a: spec if a == "lm_100m" else orig(a)
+        train.main(["--arch", "lm_100m", "--smoke", "--steps", "300",
+                    "--global-batch", "8", "--seq-len", "512",
+                    "--ckpt-dir", ckpt, "--ckpt-every", "100",
+                    "--log-every", "10"])
+    else:
+        train.main(["--arch", "llama3.2-3b", "--smoke", "--steps", "60",
+                    "--global-batch", "8", "--seq-len", "64",
+                    "--ckpt-dir", ckpt, "--ckpt-every", "30",
+                    "--log-every", "10"])
+        print("\nresuming from the checkpoint to prove restart-exactness...")
+        train.main(["--arch", "llama3.2-3b", "--smoke", "--steps", "70",
+                    "--global-batch", "8", "--seq-len", "64",
+                    "--ckpt-dir", ckpt, "--ckpt-every", "100",
+                    "--log-every", "5"])
+finally:
+    shutil.rmtree(ckpt, ignore_errors=True)

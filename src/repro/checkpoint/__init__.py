@@ -1,0 +1,3 @@
+"""Atomic sharded checkpointing with elastic re-shard on restore."""
+from repro.checkpoint.checkpoint import (latest_step, restore, restore_latest,
+                                         save, save_async)

@@ -1,0 +1,28 @@
+"""arctic-480b — 128-expert top-2 MoE with dense residual FFN.
+
+[hf:Snowflake/snowflake-arctic-base; hf]. 35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128e top-2 + dense residual. Adafactor keeps the
+~half-terabyte of expert parameters trainable inside v5e HBM.
+"""
+from repro.configs import ArchSpec
+from repro.models.transformer import TransformerConfig
+
+ARCH = ArchSpec(
+    arch_id="arctic_480b",
+    family="moe",
+    module="transformer",
+    model_cfg=TransformerConfig(
+        name="arctic_480b", n_layers=35, d_model=7168, n_heads=56,
+        n_kv_heads=8, d_ff=4864, vocab=32000, n_experts=128, top_k=2,
+        moe_dense_residual=True, moe_dense_ff=4864, rope_theta=1e6),
+    smoke_cfg=TransformerConfig(
+        name="arctic_480b_smoke", n_layers=2, d_model=56, n_heads=7,
+        n_kv_heads=1, d_ff=64, vocab=128, n_experts=8, top_k=2,
+        moe_dense_residual=True, moe_dense_ff=64, q_chunk=16, kv_chunk=16),
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+    optimizer="adafactor",
+    param_dtype="bfloat16",
+    # FSDP re-gathers every weight per microbatch (x3 with remat recompute);
+    # microbatch=2 halves that wire at ~6 GB more activation memory (§Perf).
+    microbatch=2,
+)

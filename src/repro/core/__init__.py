@@ -1,0 +1,21 @@
+"""ALPINE core: the paper's contribution as composable JAX modules.
+
+  aimc      — tile programming / inference / noise-aware training (STE)
+  quant     — DAC/ADC fixed-point math (shared by kernel and oracle)
+  noise     — PCM non-idealities (programming / read / drift)
+  tile      — crossbar tile allocation (AIMClib mapMatrix)
+  aimclib   — programmer-facing queue/process/dequeue API
+  isa       — CM_* instruction accounting
+  costmodel — gem5-X-equivalent analytical performance/energy model
+  workloads — the paper's MLP/LSTM/CNN cases as cost-model IR
+  coupling  — tight (fused) vs loose (HBM-staged) execution
+"""
+
+from repro.core.aimc import (AimcConfig, AimcLinearState, aimc_apply,
+                             aimc_linear, aimc_linear_ste, program_linear)
+from repro.core.noise import DISABLED, NoiseModel
+
+__all__ = [
+    "AimcConfig", "AimcLinearState", "aimc_apply", "aimc_linear",
+    "aimc_linear_ste", "program_linear", "NoiseModel", "DISABLED",
+]

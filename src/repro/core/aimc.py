@@ -1,0 +1,174 @@
+"""The AIMC tile model — programming, inference and noise-aware training.
+
+This is the paper's contribution as a composable JAX module. A dense weight
+matrix is *programmed* (CM_INITIALIZE) onto one or more crossbar row blocks
+(`program_linear`), after which activations flow through the fused
+DAC -> crossbar -> ADC pipeline (`aimc_apply` = CM_QUEUE/CM_PROCESS/CM_DEQUEUE).
+
+Two usage modes, matching the paper and its cited training methodology:
+
+  * inference           — program once (with programming noise + drift folded
+    in), then apply many times; optional per-call read noise.
+  * noise-aware training — `aimc_linear_ste`: the forward pass re-programs on
+    the fly with a fresh noise draw (noise injection, [16]) and runs the full
+    quantized pipeline; the backward pass is a straight-through estimator
+    (gradients flow as if y = x @ W). This makes the AIMC path a drop-in,
+    differentiable replacement for any linear layer in the model zoo.
+
+Everything is a pytree / pure function: shardable under pjit, scannable under
+lax.scan, and checkpoint-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import noise as noise_lib
+from repro.core.quant import QMAX, adc_step_lsb, sym_scale
+from repro.kernels import ops as kernel_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class AimcConfig:
+    """Static configuration of the simulated AIMC tile + execution choices.
+
+    Hashable/frozen so it can be a jit static argument."""
+
+    tile_rows: int = 512           # M word lines (crossbar inputs)
+    tile_cols: int = 512           # N bit lines (crossbar outputs)
+    adc_alpha: float = 1.0         # ADC full-scale factor (quant.adc_step_lsb)
+    input_scale: float = 0.0       # 0.0 = dynamic (max-abs); >0 = fixed scale
+    noise: noise_lib.NoiseModel = noise_lib.DISABLED
+    impl: str = "ref"              # ref | pallas_interpret | pallas_tpu
+    out_dtype: str = "float32"
+
+    @property
+    def adc_step(self) -> float:
+        return adc_step_lsb(self.tile_rows, self.adc_alpha)
+
+
+# A programmed linear layer: conductance codes + effective scales.
+class AimcLinearState(NamedTuple):
+    w_q: jnp.ndarray   # int8 [KB, M, Np]
+    s_w: jnp.ndarray   # f32  [KB, Np] (drift gain/compensation folded in)
+    k: int             # logical in_features
+    n: int             # logical out_features
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def program_linear(w: jnp.ndarray, cfg: AimcConfig, key: jax.Array | None = None) -> AimcLinearState:
+    """CM_INITIALIZE: quantize + (noisily) program a [K, N] weight matrix.
+
+    Row blocks of `tile_rows` are independent physical-tile spans; each gets a
+    per-column conductance scale. Programming noise perturbs the stored codes;
+    drift and its digital compensation fold into the effective output scale.
+    """
+    k, n = w.shape
+    m = cfg.tile_rows
+    kb = _pad_to(k, m) // m
+    np_ = _pad_to(n, 128)  # lane alignment for the TPU kernel
+    w_pad = jnp.zeros((kb * m, np_), w.dtype).at[:k, :n].set(w)
+    w_blocks = w_pad.reshape(kb, m, np_).astype(jnp.float32)
+
+    s_w = sym_scale(w_blocks, axis=1).reshape(kb, np_)              # per (block, col)
+    codes = w_blocks / s_w[:, None, :]
+    if cfg.noise.enabled and key is not None:
+        codes = codes + noise_lib.programming_noise(key, codes, cfg.noise)
+    w_q = jnp.clip(jnp.round(codes), -QMAX, QMAX).astype(jnp.int8)
+
+    gain = cfg.noise.drift_gain() * cfg.noise.compensation_gain()
+    return AimcLinearState(w_q=w_q, s_w=s_w * gain, k=k, n=n)
+
+
+def aimc_apply(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig,
+               key: jax.Array | None = None) -> jnp.ndarray:
+    """CM_QUEUE + CM_PROCESS + CM_DEQUEUE on a programmed layer.
+
+    x: [..., K] -> [..., N]. Leading dims are flattened for the kernel.
+    """
+    *lead, k = x.shape
+    if k != state.k:
+        raise ValueError(f"in_features mismatch: {k} != {state.k}")
+    kb, m, np_ = state.w_q.shape
+    b = 1
+    for d in lead:
+        b *= d
+    xf = x.reshape(b, k).astype(jnp.float32)
+    if k != kb * m:
+        xf = jnp.pad(xf, ((0, 0), (0, kb * m - k)))
+
+    if cfg.input_scale > 0.0:
+        s_x = jnp.full((1, 1), cfg.input_scale, jnp.float32)
+    else:
+        s_x = sym_scale(xf).reshape(1, 1)
+
+    if cfg.noise.enabled and key is not None and cfg.noise.sigma_read > 0.0:
+        rnoise = noise_lib.read_noise(key, (kb, b, np_), m, cfg.noise)
+    else:
+        rnoise = jnp.zeros((kb, b, np_), jnp.float32)
+
+    y = kernel_ops.aimc_matmul(
+        xf, state.w_q, state.s_w, s_x, rnoise,
+        adc_step=cfg.adc_step, impl=cfg.impl,
+    )
+    y = y[:, : state.n].astype(jnp.dtype(cfg.out_dtype))
+    return y.reshape(*lead, state.n)
+
+
+# ---------------------------------------------------------------------------
+# Noise-aware training: straight-through estimator.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def aimc_linear_ste(x: jnp.ndarray, w: jnp.ndarray, key: jax.Array, cfg: AimcConfig):
+    """Differentiable AIMC linear: y = AIMC(x, W) fwd, y = x @ W bwd.
+
+    The forward pass programs W on the fly with a fresh programming-noise draw
+    and applies per-call read noise — i.e. noise-injection training [16] — so
+    the learned weights become robust to the analog non-idealities.
+    """
+    return _aimc_fwd_value(x, w, key, cfg)
+
+
+def _aimc_fwd_value(x, w, key, cfg):
+    kp, kr = (jax.random.split(key) if key is not None else (None, None))
+    state = program_linear(w, cfg, kp)
+    return aimc_apply(state, x, cfg, kr)
+
+
+def _aimc_fwd(x, w, key, cfg):
+    return _aimc_fwd_value(x, w, key, cfg), (x, w)
+
+
+def _aimc_bwd(cfg, res, g):
+    x, w = res
+    gf = g.astype(jnp.float32)
+    dx = gf @ w.T.astype(jnp.float32)
+    xl = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    gl = gf.reshape(-1, g.shape[-1])
+    dw = xl.T @ gl
+    return dx.astype(x.dtype).reshape(x.shape), dw.astype(w.dtype), None
+
+
+aimc_linear_ste.defvjp(_aimc_fwd, _aimc_bwd)
+
+
+def aimc_linear(x, w, cfg: AimcConfig, key: jax.Array | None = None,
+                state: AimcLinearState | None = None):
+    """Front door used by the model zoo.
+
+    * training / on-the-fly:     aimc_linear(x, w, cfg, key)        [STE]
+    * pre-programmed inference:  aimc_linear(x, None, cfg, key, state)
+    * cfg is None or technique off -> caller should use a plain matmul.
+    """
+    if state is not None:
+        return aimc_apply(state, x, cfg, key)
+    return aimc_linear_ste(x, w, key, cfg)

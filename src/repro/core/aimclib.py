@@ -1,0 +1,137 @@
+"""AIMClib — the programmer-facing library (paper §IV-C, Fig. 4), in JAX.
+
+Mirrors the C library's surface:
+
+  * ``map_matrix(name, w)``        — program a weight matrix onto crossbars at
+    packed offsets (tiling handled by `core.tile.TileAllocator`).
+  * ``map_gates(name, [W...])``    — place several same-height matrices side
+    by side so ONE process call computes all of them (the paper's LSTM trick,
+    §VIII-D: queue [h, x] once, dequeue all four gate pre-activations).
+  * ``queue_vector / process / dequeue_vector`` — the instruction-level data
+    flow of Fig. 4, for code that wants the explicit three-step shape.
+  * ``linear(name, x)``            — the fused convenience path every model
+    layer actually uses (identical math, one call).
+  * int8 <-> fp32 casting, digital activation helpers, and a host "checker"
+    mode — which is exactly `kernels/ref.py` (the oracle doubles as the
+    paper's debug-on-host checker program).
+
+The context also keeps per-matrix CM_* instruction counts so applications get
+cost-model accounting for free.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.core.aimc import AimcConfig, AimcLinearState, aimc_apply, program_linear
+from repro.core.tile import TileAllocator, TileMap
+
+
+class AimcContext:
+    """One context ~ the set of AIMC tiles private to a core (paper Fig. 2)."""
+
+    def __init__(self, cfg: AimcConfig, key: jax.Array | None = None):
+        self.cfg = cfg
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._alloc = TileAllocator(cfg.tile_rows, cfg.tile_cols)
+        self._states: dict[str, AimcLinearState] = {}
+        self._counts: dict[str, isa.CmCounts] = {}
+        self._pending: dict[str, jnp.ndarray] = {}   # queued inputs per matrix
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    # -- programming (CM_INITIALIZE) ----------------------------------------
+    def map_matrix(self, name: str, w: jnp.ndarray) -> AimcLinearState:
+        if name in self._states:
+            raise ValueError(f"matrix {name!r} already mapped")
+        k, n = w.shape
+        self._alloc.map_matrix(name, k, n)
+        state = program_linear(jnp.asarray(w), self.cfg, self._next_key())
+        self._states[name] = state
+        self._counts[name] = isa.initialize_counts(k, n)
+        return state
+
+    def map_gates(self, name: str, gates: Sequence[jnp.ndarray]) -> AimcLinearState:
+        """Concatenate same-height gate matrices column-wise and map them as a
+        single crossbar tenant — one queue + one process serves all gates."""
+        rows = gates[0].shape[0]
+        if any(g.shape[0] != rows for g in gates):
+            raise ValueError("gate matrices must share in_features")
+        self._alloc.map_side_by_side(
+            [f"{name}.g{i}" for i in range(len(gates))], rows, gates[0].shape[1]
+        )
+        w = jnp.concatenate([jnp.asarray(g) for g in gates], axis=1)
+        state = program_linear(w, self.cfg, self._next_key())
+        self._states[name] = state
+        self._counts[name] = isa.initialize_counts(*w.shape)
+        return state
+
+    # -- the Fig. 4 instruction-level flow -----------------------------------
+    def queue_vector(self, name: str, x: jnp.ndarray) -> None:
+        st = self._state(name)
+        self._counts[name] += isa.mvm_counts(st.k, st.n, self.cfg.tile_rows)
+        self._pending[name] = jnp.asarray(x)
+
+    def process(self, name: str) -> None:
+        if name not in self._pending:
+            raise RuntimeError(f"CM_PROCESS before CM_QUEUE for {name!r}")
+
+    def dequeue_vector(self, name: str) -> jnp.ndarray:
+        x = self._pending.pop(name, None)
+        if x is None:
+            raise RuntimeError(f"CM_DEQUEUE before CM_QUEUE for {name!r}")
+        return aimc_apply(self._state(name), x, self.cfg, self._next_key())
+
+    # -- fused path -----------------------------------------------------------
+    def linear(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+        st = self._state(name)
+        self._counts[name] += isa.mvm_counts(st.k, st.n, self.cfg.tile_rows)
+        return aimc_apply(st, x, self.cfg, self._next_key())
+
+    # -- bookkeeping ----------------------------------------------------------
+    def _state(self, name: str) -> AimcLinearState:
+        if name not in self._states:
+            raise KeyError(f"matrix {name!r} was never mapped")
+        return self._states[name]
+
+    def tile_map(self) -> TileMap:
+        return self._alloc.finalize()
+
+    def instruction_counts(self) -> isa.CmCounts:
+        total = isa.CmCounts()
+        for c in self._counts.values():
+            total = total + c
+        return total
+
+
+# -- digital helpers (run "on the CPU", paper keeps these out of the tile) ----
+def relu(x):
+    return jnp.maximum(x, 0)
+
+
+def sigmoid(x):
+    return jax.nn.sigmoid(x)
+
+
+def tanh(x):
+    return jnp.tanh(x)
+
+
+def softmax(x, axis=-1):
+    return jax.nn.softmax(x, axis=axis)
+
+
+def cast_to_int8(x, scale):
+    from repro.core.quant import quantize
+    return quantize(x, scale)
+
+
+def cast_from_int8(q, scale):
+    from repro.core.quant import dequantize
+    return dequantize(q, scale)

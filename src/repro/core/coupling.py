@@ -1,0 +1,103 @@
+"""Tight vs loose AIMC coupling as executable JAX (paper §IV-A, §VII-B).
+
+The paper's distinction — custom-instruction access to a private tile vs
+memory-mapped I/O-bus transactions — maps onto TPU as a *fusion* distinction:
+
+  * tight  — ONE fused kernel (or one fused jit region): DAC quantization,
+    crossbar MAC, read noise, ADC and digital accumulation share VMEM; no
+    analog-domain intermediate touches HBM.
+  * loose  — every pipeline stage is materialized to HBM before the next
+    starts (`optimization_barrier` between stages), mirroring each value
+    crossing the I/O bus: x -> x_q -> per-block int32 accumulations ->
+    ADC codes -> dequantized output.
+
+`benchmarks/bench_coupling.py` lowers both and compares HBM bytes from
+`cost_analysis()` — the TPU version of the paper's 3.1x tight-vs-loose gap —
+while the analytical model covers the paper's own ARM-side numbers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aimc import AimcConfig, AimcLinearState
+from repro.core.quant import adc_quantize, quantize, sym_scale
+from repro.kernels import ops as kernel_ops
+
+
+def tight_forward(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig) -> jnp.ndarray:
+    """Fused execution (the default production path)."""
+    kb, m, np_ = state.w_q.shape
+    b = x.shape[0]
+    xf = x.astype(jnp.float32)
+    if xf.shape[1] != kb * m:
+        xf = jnp.pad(xf, ((0, 0), (0, kb * m - xf.shape[1])))
+    s_x = sym_scale(xf).reshape(1, 1)
+    rnoise = jnp.zeros((kb, b, np_), jnp.float32)
+    y = kernel_ops.aimc_matmul(xf, state.w_q, state.s_w, s_x, rnoise,
+                               adc_step=cfg.adc_step, impl=cfg.impl)
+    return y[:, : state.n]
+
+
+def loose_forward(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig) -> jnp.ndarray:
+    """Staged execution with an HBM round-trip between every stage."""
+    barrier = jax.lax.optimization_barrier
+    kb, m, np_ = state.w_q.shape
+    b = x.shape[0]
+    xf = x.astype(jnp.float32)
+    if xf.shape[1] != kb * m:
+        xf = jnp.pad(xf, ((0, 0), (0, kb * m - xf.shape[1])))
+
+    # stage 1: DAC quantization (CPU -> bus -> tile input memory)
+    s_x = sym_scale(xf).reshape(1, 1)
+    x_q = barrier(quantize(xf.reshape(b, kb, m), s_x.reshape(())))
+    # stage 2: crossbar MAC per row block (tile-internal, result over the bus)
+    acc = barrier(jnp.einsum("bkm,kmn->kbn", x_q.astype(jnp.int32),
+                             state.w_q.astype(jnp.int32)).astype(jnp.float32))
+    # stage 3: ADC quantization (tile output memory -> bus)
+    codes = barrier(adc_quantize(acc, jnp.float32(cfg.adc_step)))
+    # stage 4: digital dequant + row-block accumulation (CPU side)
+    contrib = codes.astype(jnp.float32) * state.s_w[:, None, :]
+    y = jnp.sum(contrib, axis=0) * (jnp.float32(cfg.adc_step) * s_x.reshape(()))
+    return y[:, : state.n]
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic accounting (the quantitative tight-vs-loose gap on TPU)
+# ---------------------------------------------------------------------------
+
+def hbm_bytes_tight(state: AimcLinearState, batch: int,
+                    block_b: int = 128, block_n: int = 512) -> int:
+    """HBM bytes of ONE fused-kernel call, from the BlockSpecs of
+    kernels/aimc_mvm.py.
+
+    Grid (B/bb, Np/bn, KB), row blocks innermost: the f32 output block is
+    revisited consecutively (stays in VMEM), the x block re-streams once per
+    column tile, the int8 weight panel once per batch tile. No analog-domain
+    intermediate (x_q, bit-line accumulations, ADC codes) ever leaves VMEM —
+    that is the kernel-fusion translation of the paper's tight coupling.
+    """
+    kb, m, np_ = state.w_q.shape
+    bb, bn = min(block_b, batch), min(block_n, np_)
+    x = batch * kb * m * 4 * (np_ // bn)          # x f32, per column tile
+    w = kb * m * np_ * 1 * (batch // bb or 1)     # int8 weights, per batch tile
+    noise = kb * batch * np_ * 4                  # read-noise input
+    out = batch * np_ * 4                         # written once (VMEM-resident)
+    scales = kb * np_ * 4 + 4
+    return x + w + noise + out + scales
+
+
+def hbm_bytes_loose(state: AimcLinearState, batch: int,
+                    block_b: int = 128, block_n: int = 512) -> int:
+    """HBM bytes of the staged execution: every pipeline stage materializes
+    its result (x_q int8, bit-line int32 accumulations, ADC int32 codes) to
+    HBM and the next stage reads it back — the TPU mirror of each value
+    crossing the paper's I/O bus."""
+    kb, m, np_ = state.w_q.shape
+    base = hbm_bytes_tight(state, batch, block_b, block_n)
+    x_q = batch * kb * m * 1
+    acc = kb * batch * np_ * 4
+    codes = kb * batch * np_ * 4
+    # write + read-back for each staged intermediate
+    return base + 2 * (x_q + acc + codes)

@@ -1,0 +1,81 @@
+"""PCM non-ideality models (paper §III-C).
+
+Three effects, each independently switchable and fully deterministic given a
+PRNG key (so training/eval/checkpoint-restart are bit-exact):
+
+  * programming noise  — write error when a conductance target is programmed
+    (CM_INITIALIZE). Gaussian in conductance (= int8 code) units with a
+    level-dependent sigma: sigma(w) = sigma_prog_min + (sigma_prog_max -
+    sigma_prog_min) * |w|/127, following the level dependence measured in
+    Joshi et al. (Nat. Comm. 2020) / Nandakumar et al. (IEDM 2020).
+  * read noise         — instantaneous 1/f + thermal noise on each analog MVM
+    (CM_PROCESS). Modelled as additive Gaussian on the bit-line accumulation
+    with std sigma_read * 127 * sqrt(M_active_rows) LSBs.
+  * conductance drift  — G(t) = G(t0) * (t/t0)^(-nu). A deterministic,
+    multiplicative decay (nu ~ 0.05 for doped-Ge2Sb2Te5 PCM) plus optional
+    digital drift compensation (a single scalar gain (t/t0)^{+nu} applied to
+    the ADC output — "global drift compensation" in the PCM literature).
+
+All sigmas are expressed as fractions of the full-scale code (127), so they are
+directly comparable to the 8-bit precision they perturb.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QMAX
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """PCM non-ideality parameters. Defaults follow the PCM literature the
+
+    paper builds on ([13], [16], [30], [31])."""
+
+    enabled: bool = True
+    # programming (write) noise, fraction of full scale, level-dependent.
+    sigma_prog_min: float = 0.010
+    sigma_prog_max: float = 0.025
+    # per-MVM read noise, fraction of full scale per sqrt(active row).
+    sigma_read: float = 0.005
+    # conductance drift exponent and elapsed/reference time ratio.
+    drift_nu: float = 0.05
+    drift_t_ratio: float = 1.0  # t/t0; 1.0 = freshly programmed (no drift)
+    drift_compensate: bool = True
+
+    def drift_gain(self) -> float:
+        if self.drift_t_ratio <= 1.0:
+            return 1.0
+        return float(self.drift_t_ratio ** (-self.drift_nu))
+
+    def compensation_gain(self) -> float:
+        return 1.0 / self.drift_gain() if self.drift_compensate else 1.0
+
+
+DISABLED = NoiseModel(enabled=False)
+
+
+def programming_noise(key: jax.Array, w_codes: jnp.ndarray, nm: NoiseModel) -> jnp.ndarray:
+    """Additive write-error on integer conductance codes (float, caller rounds)."""
+    if not nm.enabled:
+        return jnp.zeros_like(w_codes, dtype=jnp.float32)
+    level = jnp.abs(w_codes.astype(jnp.float32)) / QMAX
+    sigma = (nm.sigma_prog_min + (nm.sigma_prog_max - nm.sigma_prog_min) * level) * QMAX
+    return sigma * jax.random.normal(key, w_codes.shape, dtype=jnp.float32)
+
+
+def read_noise(key: jax.Array, shape, active_rows: int, nm: NoiseModel) -> jnp.ndarray:
+    """Additive bit-line noise (int32-accumulator LSB units) for one CM_PROCESS."""
+    if not nm.enabled or nm.sigma_read == 0.0:
+        return jnp.zeros(shape, dtype=jnp.float32)
+    sigma = nm.sigma_read * QMAX * (active_rows ** 0.5)
+    return sigma * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def apply_drift(w_analog: jnp.ndarray, nm: NoiseModel) -> jnp.ndarray:
+    """Deterministic conductance decay applied to programmed (noisy) codes."""
+    return w_analog * nm.drift_gain()

@@ -1,0 +1,2 @@
+"""Deterministic sharded data pipeline (restart-exact; see pipeline.py)."""
+from repro.data.pipeline import DataConfig, DataIterator, host_batch, make_global_array

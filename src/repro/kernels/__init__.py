@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the AIMC-simulation hot spots + pure-jnp oracles.
+
+  aimc_mvm        — fused DAC -> int8 crossbar MAC -> noise -> ADC -> accumulate
+  flash_attention — chunked online-softmax attention (O(seq) memory)
+  ops             — jit'd dispatch wrappers (impl = ref | pallas_interpret | pallas_tpu)
+  ref             — pure-jnp oracles (bit-identical math, the AIMClib "checker")
+"""

@@ -1,0 +1,46 @@
+"""Jit'd dispatch wrappers around the AIMC kernels.
+
+``aimc_matmul`` is the single entry point used by ``core.aimc``; it selects
+between the pure-jnp oracle (default on CPU — numerically identical to the
+Pallas kernel) and the Pallas kernel (interpret mode here, native on TPU),
+and normalizes padding so callers never worry about block alignment.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.aimc_mvm import aimc_matmul_pallas
+
+IMPLS = ("ref", "pallas_interpret", "pallas_tpu")
+
+
+def aimc_matmul(x, w_q, s_w, s_x, read_noise, *, adc_step: float,
+                impl: str = "ref", block_b: int = 128, block_n: int = 512):
+    """Fused AIMC crossbar matmul. See kernels/ref.py for the tensor contract."""
+    if impl == "ref":
+        return _ref.aimc_matmul_ref(x, w_q, s_w, s_x, read_noise, adc_step=adc_step)
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+
+    b, k = x.shape
+    kb, m, np_ = w_q.shape
+    bb = min(block_b, _round_up(b, 8))
+    bn = min(block_n, np_)
+    while np_ % bn:
+        bn //= 2
+    b_pad = _round_up(b, bb)
+    if b_pad != b:
+        x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
+        read_noise = jnp.pad(read_noise, ((0, 0), (0, b_pad - b), (0, 0)))
+    y = aimc_matmul_pallas(
+        x, w_q, s_w, s_x, read_noise,
+        adc_step=adc_step, block_b=bb, block_n=bn,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return y[:b]
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m

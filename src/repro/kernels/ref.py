@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the AIMC crossbar MVM (the reference the Pallas kernel
+must match bit-for-bit in tests).
+
+Interface contract (shared with kernels/aimc_mvm.py and kernels/ops.py):
+
+  x          f32/bf16 [B, KB*M]   activations, K already zero-padded to a
+                                  whole number of row blocks
+  w_q        int8     [KB, M, Np] programmed conductance codes, one row block
+                                  per physical-tile row span (zero padded)
+  s_w        f32      [KB, Np]    per (row-block, bit-line) weight scale, with
+                                  drift gain / compensation already folded in
+  s_x        f32      [1, 1]      DAC input scale (fixed or per-call max-abs)
+  read_noise f32      [KB, B, Np] additive bit-line noise in accumulator LSBs
+                                  (zeros when the noise model is disabled)
+  adc_step   float    (static)    ADC step in accumulator LSBs (quant.adc_step_lsb)
+
+Returns f32 [B, Np]:  sum over row blocks of
+    ADC8(x_q_block @ w_q_block + noise) * adc_step * s_x * s_w_block
+which is exactly the paper's data flow: CM_QUEUE (DAC quantize) ->
+CM_PROCESS (analog MAC + ADC) -> CM_DEQUEUE + digital accumulate/cast.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.quant import adc_quantize, quantize
+
+
+def aimc_matmul_ref(x, w_q, s_w, s_x, read_noise, *, adc_step: float) -> jnp.ndarray:
+    if x.ndim != 2 or w_q.ndim != 3:
+        raise ValueError(f"bad ranks: x{x.shape} w_q{w_q.shape}")
+    kb, m, np_ = w_q.shape
+    b = x.shape[0]
+    if x.shape[1] != kb * m:
+        raise ValueError(f"x K={x.shape[1]} != KB*M={kb * m}")
+
+    x_blocks = x.reshape(b, kb, m).astype(jnp.float32)
+    x_q = quantize(x_blocks, s_x.reshape(()))                       # int8 [B,KB,M]
+    acc = jnp.einsum(
+        "bkm,kmn->kbn",
+        x_q.astype(jnp.int32),
+        w_q.astype(jnp.int32),
+    ).astype(jnp.float32)                                           # [KB,B,Np]
+    acc = acc + read_noise
+    codes = adc_quantize(acc, jnp.float32(adc_step))                # int32 [KB,B,Np]
+    contrib = codes.astype(jnp.float32) * s_w[:, None, :]           # [KB,B,Np]
+    y = jnp.sum(contrib, axis=0) * (jnp.float32(adc_step) * s_x.reshape(()))
+    return y.astype(jnp.float32)
+
+
+def digital_matmul_ref(x, w, out_dtype=jnp.float32):
+    """The digital (CPU/SIMD) baseline the paper compares against: a plain
+    full-precision matmul."""
+    return jnp.asarray(x @ w, dtype=out_dtype)

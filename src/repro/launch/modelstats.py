@@ -1,0 +1,69 @@
+"""Analytic MODEL_FLOPS per (arch x shape) cell.
+
+MODEL_FLOPS = 6 * N * D for training (2 fwd + 4 bwd), 2 * N * D for
+inference, with N the *matmul-visible* parameter count (embedding table
+excluded — lookups are gathers, not FLOPs; the unembed projection included)
+and D the number of processed tokens. For MoE archs N is the ACTIVE count:
+dense part + expert part * top_k / n_experts (+ the arctic dense-residual
+branch, which every token also runs).
+
+The ratio MODEL_FLOPS / HLO_FLOPS in EXPERIMENTS.md §Roofline measures how
+much of the compiled compute is "useful" — remat recompute, attention
+score/AV work (not in 6ND by convention) and capacity-padded MoE dispatch all
+push it below 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchSpec, ShapeCell
+
+_EXPERT_NAMES = {"we_gate", "we_up", "we_down"}
+
+
+def param_counts(spec: ArchSpec) -> dict:
+    """-> {'total', 'dense', 'expert', 'embed', 'active'} parameter counts."""
+    model = spec.model_module()
+    cfg = spec.model_cfg
+    shape = jax.eval_shape(lambda k: model.init(k, cfg), jax.random.PRNGKey(0))
+    counts = {"total": 0, "dense": 0, "expert": 0, "embed": 0}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shape)[0]:
+        name = ""
+        for k in reversed(path):
+            if hasattr(k, "key"):
+                name = str(k.key)
+                break
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        counts["total"] += n
+        if name == "embed":
+            counts["embed"] += n
+        elif name in _EXPERT_NAMES:
+            counts["expert"] += n
+        else:
+            counts["dense"] += n
+    if spec.family == "moe" and counts["expert"]:
+        frac = spec.model_cfg.top_k / spec.model_cfg.n_experts
+        counts["active"] = counts["dense"] + counts["expert"] * frac
+    else:
+        counts["active"] = counts["dense"] + counts["expert"]
+    return counts
+
+
+def model_flops(spec: ArchSpec, cell: ShapeCell) -> float:
+    """Global (all-device) useful FLOPs of one step of this cell."""
+    counts = param_counts(spec)
+    n_active = counts["active"]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        if spec.family == "audio":  # decoder runs tgt_len, encoder seq_len
+            tokens = cell.global_batch * cell.seq_len  # enc+dec approximated
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch

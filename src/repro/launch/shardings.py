@@ -1,0 +1,231 @@
+"""PartitionSpec assignment for every pytree in the framework.
+
+Name-driven rules (DESIGN.md §5): "in-projections" shard (reduction dim ->
+FSDP, output dim -> model); "out-projections" the reverse; expert stacks
+shard experts over model; embeddings shard vocab over model; norms/biases of
+O(d) replicate. The same function serves any mesh — specs reference axis
+NAMES, and multi-pod meshes simply bind `fsdp` to ("pod", "data").
+
+Uneven dims (e.g. vocab 151655 over 16 shards, 2-head KV over 16) are left
+sharded: GSPMD pads internally, which costs <1% and keeps the rules uniform.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, fsdp_axes
+
+# projection weight names: [..., K(reduce), N(out)]
+IN_PROJ = {"wq", "wk", "wv", "w_gate", "w_up", "w_in", "cq", "ck", "cv",
+           "router", "w_rnn_in", "w_a", "w_x", "w_q", "w_k", "w_v", "w_if",
+           "w_zifo", "w_ff_gate", "w_ff_up", "wd_gate", "wd_up", "w_gate"}
+OUT_PROJ = {"wo", "w_down", "w_out", "co", "w_ff_down", "wd_down"}
+EXPERT_IN = {"we_gate", "we_up"}
+EXPERT_OUT = {"we_down"}
+MODEL_OUT_BIAS = {"bq", "bk", "bv", "b_in"}   # bias on a model-sharded output
+
+
+def _name_of(path) -> str:
+    for k in reversed(path):
+        if hasattr(k, "key"):
+            name = str(k.key)
+            if name in ("q", "s"):      # int8-quantized leaf {q, s} wrapper
+                continue
+            return name
+    return ""
+
+
+def param_spec(path, leaf, fsdp) -> P:
+    name = _name_of(path)
+    nd = leaf.ndim
+    if name == "embed":
+        return P("model", fsdp)
+    if name == "unembed":
+        return P(fsdp, "model")
+    if name in EXPERT_IN:                      # [L, E, K, N]
+        return P(None, "model", fsdp, None)
+    if name in EXPERT_OUT:                     # [L, E, N, K]
+        return P(None, "model", None, fsdp)
+    if name in IN_PROJ and nd >= 2:            # [L, K, N] (or [K, N])
+        return P(*([None] * (nd - 2)), fsdp, "model")
+    if name in OUT_PROJ and nd >= 2:
+        return P(*([None] * (nd - 2)), "model", fsdp)
+    if name in MODEL_OUT_BIAS:
+        return P(*([None] * (nd - 1)), "model")
+    if name == "r_zifo":                       # [L, H, dh, 4dh] small
+        return P(None, None, None, None)
+    if name == "conv_w":                       # [L, W, D]
+        return P(None, None, fsdp)
+    # norms, biases, gains: replicate (O(d) each)
+    return P(*([None] * nd))
+
+
+def get_param_specs(params_shape, mesh):
+    fsdp = fsdp_axes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: param_spec(p, l, fsdp), params_shape)
+
+
+def get_opt_specs(opt_shape, params_shape, mesh):
+    """Optimizer state mirrors param specs; Adafactor's factored moments drop
+    the corresponding parameter axis (vr: last, vc: second-to-last)."""
+    pspecs = get_param_specs(params_shape, mesh)
+    flat_p = {"/".join(_path_str(p)): s for p, s in
+              jax.tree_util.tree_flatten_with_path(pspecs)[0]}
+
+    def spec_for(path, leaf):
+        keys = _path_str(path)
+        root = keys[0] if keys else ""
+        pkey = "/".join(keys[1:])
+        if root in ("mu", "nu") and pkey in flat_p:
+            return flat_p[pkey]
+        if root in ("vr", "vc") and pkey in flat_p:
+            base = flat_p[pkey]
+            parts = list(base) + [None] * (len(base) == 0)
+            if root == "vr":
+                new = tuple(base[:-1]) if len(base) else ()
+            else:
+                new = tuple(base[:-2]) + tuple(base[-1:]) if len(base) >= 2 else ()
+            # factored moments may have fewer dims than the spec suggests
+            new = tuple(new[: leaf.ndim])
+            new = new + (None,) * (leaf.ndim - len(new))
+            return P(*new)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, opt_shape)
+
+
+def _path_str(path):
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_specs(mesh, kind: str = "lm") -> dict:
+    dp = dp_axes(mesh)
+    if kind == "lm":
+        return {"tokens": P(dp, None), "labels": P(dp, None)}
+    if kind == "vlm":
+        return {"tokens": P(dp, None), "labels": P(dp, None),
+                "patch_embeds": P(dp, None, None)}
+    if kind == "encdec":
+        return {"frames": P(dp, None, None), "tokens": P(dp, None),
+                "labels": P(dp, None)}
+    raise ValueError(kind)
+
+
+def cache_specs(cache_shape, mesh) -> dict:
+    """Serving caches: batch -> dp axes, long axis (seq / state dim) -> model.
+
+    Transformer/encdec KV: [L, B, S, H, hd]  -> (None, dp, 'model', None, None)
+    rglru window KV:       [U, B, W, H, hd]  -> same
+    rglru r-state:         [U, B, Dr]        -> (None, dp, 'model')
+    rglru conv state:      [U, B, W-1, Dr]   -> (None, dp, None, 'model')
+    xlstm matrix memory:   [N, B, H, dh, dh] -> (None, dp, None, 'model', None)
+    xlstm scalar states:   [N, B, D]         -> (None, dp, 'model')
+    lengths:               [B]               -> (dp,)
+    """
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        name = _name_of(path)
+        nd = leaf.ndim
+        if name == "len":
+            return P(dp)
+        if nd == 5 and name in ("k", "v", "ck", "cv"):
+            return P(None, dp, "model", None, None)
+        if name == "m_C":
+            return P(None, dp, None, "model", None)
+        if name in ("m_n",):
+            return P(None, dp, None, "model")
+        if name in ("r_a", "r_b", "tail_r", "s_c", "s_n", "s_h", "s_m"):
+            return P(None, dp, "model")
+        if name in ("conv_a", "conv_b", "tail_conv"):
+            return P(None, dp, None, "model")
+        if name == "m_m":
+            return P(None, dp, None)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def to_named(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def strip_fsdp(specs, mesh):
+    """Serving weight placement: keep `model` sharding, drop the FSDP axes
+    (weights replicate across data rows — no per-token all-gathers). Used by
+    the int8 serving path, whose weights are small enough to hold resident
+    (the paper's weights-stationary deployment model)."""
+    fsdp = set(fsdp_axes(mesh))
+
+    def one(spec):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            kept = tuple(a for a in axes if a not in fsdp)
+            out.append(kept if len(kept) > 1 else
+                       (kept[0] if kept else None))
+        return P(*out)
+
+    return jax.tree.map(one, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# divisibility fitting
+# ---------------------------------------------------------------------------
+
+def fit_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes a dimension cannot be evenly sharded over.
+
+    jit in/out shardings require divisibility; cells like long_500k
+    (global_batch=1) or vocab 151655 over model=16 otherwise fail. For a
+    tuple assignment ('pod','data') the largest dividing prefix is kept.
+    """
+    if not isinstance(spec, P):
+        return spec
+    entries = list(spec)
+    out = []
+    for d, entry in enumerate(entries):
+        if entry is None or d >= len(shape):
+            out.append(None if d >= len(shape) else entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept, size = [], 1
+        for a in axes:
+            if shape[d] % (size * mesh.shape[a]) == 0:
+                kept.append(a)
+                size *= mesh.shape[a]
+            else:
+                break
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def fit_specs(specs, shapes, mesh):
+    """Tree-wise `fit_spec`; `specs` and `shapes` must be matching trees."""
+    return jax.tree.map(
+        lambda s, x: fit_spec(s, x.shape, mesh), specs, shapes,
+        is_leaf=lambda v: isinstance(v, P))

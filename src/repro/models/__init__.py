@@ -1,0 +1,11 @@
+"""Model zoo: AIMC-capable implementations of the assigned architectures.
+
+  transformer — dense + MoE decoder LMs (granite, llama3.2, qwen1.5, glm4,
+                internvl2 backbone, arctic, olmoe)
+  rglru       — RecurrentGemma (RG-LRU + local attention hybrid)
+  xlstm       — sLSTM/mLSTM blocks
+  encdec      — Seamless enc-dec backbone
+  paper_nets  — the ALPINE paper's own MLP / LSTM / CNN-F/M/S
+  layers      — shared AIMC-or-digital linear, flash attention, norms
+  moe         — capacity-bucketed expert dispatch
+"""

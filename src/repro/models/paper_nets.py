@@ -1,0 +1,204 @@
+"""Executable-JAX twins of the paper's exploration networks (§VII-IX).
+
+These run the *actual math* of the workloads the paper simulates in gem5 —
+MLP (1024,1024)+ReLU, the PTB character LSTM, and CNN-F/M/S — in both digital
+and AIMC-crossbar execution, so we can measure the paper's claim that analog
+execution preserves task behaviour (iso-accuracy studies it cites) while the
+cost model (`core.costmodel`) reproduces its timing/energy claims.
+
+The AIMC variants follow the paper's mappings exactly:
+  * MLP: both layer matrices mapped side by side on crossbars.
+  * LSTM: the four gate matrices tiled side by side so ONE queue+process
+    computes all gate pre-activations (§VIII-D); activations digital.
+  * CNN: conv kernels flattened into crossbar columns (im2col, [43]);
+    feature-map patches queued per output position; dense layers digital.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aimc import AimcConfig, aimc_apply, program_linear
+from repro.core.aimclib import AimcContext
+
+
+# ---------------------------------------------------------------------------
+# MLP (paper Fig. 6)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, n: int = 1024, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    s = (2.0 / n) ** 0.5
+    return {"w1": jax.random.normal(k1, (n, n), dtype) * s,
+            "w2": jax.random.normal(k2, (n, n), dtype) * s}
+
+
+def mlp_forward_digital(params, x):
+    h = jax.nn.relu(x @ params["w1"])
+    return jax.nn.relu(h @ params["w2"])
+
+
+def mlp_forward_aimc(params, x, cfg: AimcConfig, key=None):
+    ctx = AimcContext(cfg, key)
+    ctx.map_matrix("fc1", params["w1"])
+    ctx.map_matrix("fc2", params["w2"])
+    h = jax.nn.relu(ctx.linear("fc1", x))
+    return jax.nn.relu(ctx.linear("fc2", h)), ctx
+
+
+# ---------------------------------------------------------------------------
+# LSTM (paper Fig. 9): one cell layer + dense softmax head
+# ---------------------------------------------------------------------------
+
+def lstm_init(key, nh: int, x_dim: int = 50, y_dim: int = 50, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    kin = nh + x_dim
+    s = (1.0 / kin) ** 0.5
+    return {
+        "w_f": jax.random.normal(ks[0], (kin, nh), dtype) * s,
+        "w_i": jax.random.normal(ks[1], (kin, nh), dtype) * s,
+        "w_g": jax.random.normal(ks[2], (kin, nh), dtype) * s,
+        "w_o": jax.random.normal(ks[3], (kin, nh), dtype) * s,
+        "w_y": jax.random.normal(ks[4], (nh, y_dim), dtype) * (1.0 / nh) ** 0.5,
+    }
+
+
+def _lstm_cell_math(gates, c_prev, nh):
+    f = jax.nn.sigmoid(gates[..., :nh])
+    i = jax.nn.sigmoid(gates[..., nh:2 * nh])
+    g = jnp.tanh(gates[..., 2 * nh:3 * nh])
+    o = jax.nn.sigmoid(gates[..., 3 * nh:])
+    c = f * c_prev + i * g
+    return o * jnp.tanh(c), c
+
+
+def lstm_forward_digital(params, xs, nh: int):
+    """xs: [T, B, x_dim] -> softmax outputs [T, B, y]."""
+    w_cell = jnp.concatenate([params["w_f"], params["w_i"], params["w_g"],
+                              params["w_o"]], axis=1)
+    b = xs.shape[1]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = jnp.concatenate([h, x_t], axis=-1) @ w_cell
+        h, c = _lstm_cell_math(gates, c, nh)
+        y = jax.nn.softmax(h @ params["w_y"], axis=-1)
+        return (h, c), y
+
+    init = (jnp.zeros((b, nh)), jnp.zeros((b, nh)))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys
+
+
+def lstm_forward_aimc(params, xs, nh: int, cfg: AimcConfig, key=None):
+    """The §VIII-D mapping: gate matrices side by side -> one CM_PROCESS."""
+    ctx = AimcContext(cfg, key)
+    ctx.map_gates("cell", [params["w_f"], params["w_i"], params["w_g"],
+                           params["w_o"]])
+    ctx.map_matrix("dense", params["w_y"])
+    b = xs.shape[1]
+
+    h = jnp.zeros((b, nh))
+    c = jnp.zeros((b, nh))
+    ys = []
+    for t in range(xs.shape[0]):          # python loop: ctx counts CM_* ops
+        gates = ctx.linear("cell", jnp.concatenate([h, xs[t]], axis=-1))
+        h, c = _lstm_cell_math(gates, c, nh)
+        ys.append(jax.nn.softmax(ctx.linear("dense", h), axis=-1))
+    return jnp.stack(ys), ctx
+
+
+# ---------------------------------------------------------------------------
+# CNN-F/M/S (paper Fig. 12): conv layers on crossbars via im2col
+# ---------------------------------------------------------------------------
+
+CNN_SPECS = {
+    # (cin, k, cout, stride, pad, lrn, pool)
+    "F": [(3, 11, 64, 4, 0, True, 2), (64, 5, 256, 1, 2, True, 2),
+          (256, 3, 256, 1, 1, False, 1), (256, 3, 256, 1, 1, False, 1),
+          (256, 3, 256, 1, 1, False, 2)],
+    "M": [(3, 7, 96, 2, 0, True, 2), (96, 5, 256, 1, 2, True, 2),
+          (256, 3, 512, 1, 1, False, 1), (512, 3, 512, 1, 1, False, 1),
+          (512, 3, 512, 1, 1, False, 2)],
+    "S": [(3, 7, 96, 2, 0, True, 3), (96, 5, 256, 1, 1, True, 2),
+          (256, 3, 512, 1, 1, False, 1), (512, 3, 512, 1, 1, False, 1),
+          (512, 3, 512, 1, 1, False, 3)],
+}
+
+
+def cnn_init(key, variant: str, img: int = 224, n_classes: int = 1000,
+             dtype=jnp.float32):
+    spec = CNN_SPECS[variant]
+    params = {"convs": [], "dense": []}
+    hw = img
+    ks = jax.random.split(key, len(spec) + 3)
+    for i, (cin, k, cout, stride, pad, _lrn, pool) in enumerate(spec):
+        fan = k * k * cin
+        params["convs"].append(
+            jax.random.normal(ks[i], (k, k, cin, cout), dtype) * (2.0 / fan) ** 0.5)
+        hw = (hw + 2 * pad - k) // stride + 1
+        hw = hw // pool
+    flat = hw * hw * spec[-1][2]
+    dims = [flat, 4096, 4096, n_classes]
+    for j in range(3):
+        params["dense"].append(
+            jax.random.normal(ks[len(spec) + j], (dims[j], dims[j + 1]), dtype)
+            * (2.0 / dims[j]) ** 0.5)
+    return params
+
+
+def _lrn(x, n=5, alpha=1e-4, beta=0.75, k=2.0):
+    sq = x * x
+    pads = n // 2
+    acc = sum(jnp.roll(sq, s, axis=-1) for s in range(-pads, pads + 1))
+    return x / (k + alpha * acc) ** beta
+
+
+def _pool(x, p):
+    if p == 1:
+        return x
+    b, h, w, c = x.shape
+    h2, w2 = h // p * p, w // p * p
+    x = x[:, :h2, :w2].reshape(b, h2 // p, p, w2 // p, p, c)
+    return jnp.max(x, axis=(2, 4))
+
+
+def _im2col(x, k, stride, pad):
+    """x: [B,H,W,C] -> patches [B, Ho*Wo, k*k*C]."""
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    b, h, w, c = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    idx_h = (jnp.arange(ho) * stride)[:, None] + jnp.arange(k)[None]
+    idx_w = (jnp.arange(wo) * stride)[:, None] + jnp.arange(k)[None]
+    patches = x[:, idx_h[:, None, :, None], idx_w[None, :, None, :], :]
+    return patches.reshape(b, ho * wo, k * k * c), ho, wo
+
+
+def cnn_forward(params, x, variant: str, cfg: AimcConfig | None = None,
+                key=None):
+    """x: [B, 224, 224, 3]. cfg=None -> digital; else conv layers on AIMC."""
+    spec = CNN_SPECS[variant]
+    ctx = AimcContext(cfg, key) if cfg is not None else None
+    for i, (cin, k, cout, stride, pad, lrn, pool) in enumerate(spec):
+        w = params["convs"][i]
+        patches, ho, wo = _im2col(x, k, stride, pad)
+        b, npos, kdim = patches.shape
+        wmat = w.reshape(kdim, cout)
+        if ctx is not None:
+            name = f"conv{i}"
+            ctx.map_matrix(name, wmat)
+            y = ctx.linear(name, patches.reshape(b * npos, kdim))
+        else:
+            y = patches.reshape(b * npos, kdim) @ wmat
+        x = jax.nn.relu(y.reshape(b, ho, wo, cout))
+        if lrn:
+            x = _lrn(x)
+        x = _pool(x, pool)
+    h = x.reshape(x.shape[0], -1)
+    for j, w in enumerate(params["dense"]):      # dense: digital (paper §IX-A)
+        h = h @ w
+        h = jax.nn.relu(h) if j < 2 else jax.nn.softmax(h, axis=-1)
+    return (h, ctx) if ctx is not None else h

@@ -1,0 +1,347 @@
+"""RecurrentGemma / Griffin hybrid (recurrentgemma-9b): RG-LRU recurrent
+blocks + local (sliding-window, MQA) attention in a 2:1 pattern.
+
+Temporal mixing per layer type:
+  * recurrent — two branches from the residual stream: GeLU gate branch, and
+    conv1d(4) -> RG-LRU branch; merged multiplicatively, projected back.
+    RG-LRU: r_t = a_t * r_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+            a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x)),  c = 8.
+    Train/prefill run it as an associative scan (O(log S) depth); decode
+    carries (conv window, r) — O(1) state, which is why this arch runs the
+    long_500k cell (DESIGN.md §4).
+  * local attention — sliding window 2048, kv_heads = 1 (MQA), RoPE.
+
+Layers scan over (rec, rec, attn) units; n_layers % 3 trailing recurrent
+blocks run as a second small scan. The recurrence itself is element-wise
+(activation x activation) and stays digital — the paper's LSTM boundary —
+while every projection is AIMC-mapped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (as_weight, Execution, decode_attention, dense_init,
+                                 embed_init, flash_attention, linear, rmsnorm,
+                                 rope)
+
+C_RGLRU = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RglruConfig:
+    name: str
+    n_layers: int = 38
+    d_model: int = 4096
+    n_heads: int = 16
+    n_kv_heads: int = 1
+    d_ff: int = 12288
+    vocab: int = 256000
+    d_rnn: int = 0                 # 0 -> d_model
+    conv_width: int = 4
+    window: int = 2048
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+    @property
+    def hd(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def drnn(self):
+        return self.d_rnn or self.d_model
+
+    @property
+    def n_units(self):
+        return self.n_layers // 3
+
+    @property
+    def n_tail(self):
+        return self.n_layers % 3
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _rec_params(key, cfg, n, dtype):
+    d, dr = cfg.d_model, cfg.drnn
+    ks = jax.random.split(key, 8)
+
+    def stack(rng, k_, n_):
+        return jax.vmap(lambda r: dense_init(r, k_, n_, dtype))(
+            jax.random.split(rng, n))
+
+    return {
+        "ln": jnp.ones((n, d), dtype),
+        "w_gate": stack(ks[0], d, dr),         # GeLU branch
+        "w_rnn_in": stack(ks[1], d, dr),       # conv/RG-LRU branch
+        "conv_w": jax.random.normal(ks[2], (n, cfg.conv_width, dr), dtype) * 0.02,
+        "conv_b": jnp.zeros((n, dr), dtype),
+        "w_a": stack(ks[3], dr, dr),           # recurrence gate
+        "b_a": jnp.zeros((n, dr), dtype),
+        "w_x": stack(ks[4], dr, dr),           # input gate
+        "b_x": jnp.zeros((n, dr), dtype),
+        "lam": jnp.full((n, dr), 0.649, dtype),  # softplus(lam)*c ~ a in [.9,.999]
+        "w_out": stack(ks[5], dr, d),
+        "ln2": jnp.ones((n, d), dtype),
+        "w_ff_gate": stack(ks[6], d, cfg.d_ff),
+        "w_ff_up": stack(ks[7], d, cfg.d_ff),
+        "w_ff_down": jax.vmap(lambda r: dense_init(r, cfg.d_ff, d, dtype))(
+            jax.random.split(jax.random.fold_in(key, 99), n)),
+    }
+
+
+def _attn_params(key, cfg, n, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+
+    def stack(rng, k_, n_):
+        return jax.vmap(lambda r: dense_init(r, k_, n_, dtype))(
+            jax.random.split(rng, n))
+
+    return {
+        "ln": jnp.ones((n, d), dtype),
+        "wq": stack(ks[0], d, hq * hd), "wk": stack(ks[1], d, hkv * hd),
+        "wv": stack(ks[2], d, hkv * hd), "wo": stack(ks[3], hq * hd, d),
+        "ln2": jnp.ones((n, d), dtype),
+        "w_ff_gate": stack(ks[4], d, cfg.d_ff),
+        "w_ff_up": stack(ks[5], d, cfg.d_ff),
+        "w_ff_down": stack(ks[6], cfg.d_ff, d),
+    }
+
+
+def init(key, cfg: RglruConfig, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "units": {
+            "rec_a": _rec_params(ks[1], cfg, cfg.n_units, dtype),
+            "rec_b": _rec_params(ks[2], cfg, cfg.n_units, dtype),
+            "attn": _attn_params(ks[3], cfg, cfg.n_units, dtype),
+        },
+        "unembed": dense_init(ks[4], cfg.d_model, cfg.vocab, dtype),
+    }
+    if cfg.n_tail:
+        params["tail"] = _rec_params(ks[5], cfg, cfg.n_tail, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU temporal mixing
+# ---------------------------------------------------------------------------
+
+def _rglru_gates(x, p, exe, keys):
+    """x: [B, S, Dr] conv output -> (a [B,S,Dr], gated input [B,S,Dr])."""
+    a_logit = linear(x, p["w_a"], exe, keys[0], p["b_a"]).astype(jnp.float32)
+    i_logit = linear(x, p["w_x"], exe, keys[1], p["b_x"]).astype(jnp.float32)
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) \
+        * jax.nn.sigmoid(a_logit)
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(i_logit) * x.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9))
+    return a, beta * gated
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise temporal conv. x: [B,S,D], w: [W,D]. state: [B,W-1,D]."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i][None, None] for i in range(width))
+    new_state = xp[:, -(width - 1):] if width > 1 else pad
+    return out + b[None, None], new_state
+
+
+def _rec_mix(h, p, cfg, exe, keys, conv_state=None, r_state=None):
+    """Recurrent branch. Returns (out [B,S,D], new conv state, new r state)."""
+    gate = jax.nn.gelu(linear(h, p["w_gate"], exe, keys[2]))
+    xr = linear(h, p["w_rnn_in"], exe, keys[3])
+    xc, conv_state = _causal_conv(xr, p["conv_w"], p["conv_b"], conv_state)
+    a, bx = _rglru_gates(xc, p, exe, keys)
+
+    if r_state is None:
+        # associative linear recurrence r_t = a_t r_{t-1} + bx_t over seq
+        def combine(l, r_):
+            return l[0] * r_[0], r_[0] * l[1] + r_[1]
+        _, r = jax.lax.associative_scan(combine, (a, bx), axis=1)
+        new_r = r[:, -1]
+    else:
+        r0 = r_state.astype(jnp.float32)
+
+        def step(carry, xs):
+            at, bt = xs
+            rn = at * carry + bt
+            return rn, rn
+        # S is 1 during decode; transpose to scan over seq
+        rT, rs = jax.lax.scan(step, r0, (jnp.moveaxis(a, 1, 0),
+                                         jnp.moveaxis(bx, 1, 0)))
+        r = jnp.moveaxis(rs, 0, 1)
+        new_r = rT
+    out = linear((gate.astype(jnp.float32) * r).astype(exe.cdtype),
+                 p["w_out"], exe, keys[4])
+    return out, conv_state, new_r
+
+
+def _ffn(h, p, cfg, exe, keys):
+    g = linear(h, p["w_ff_gate"], exe, keys[5])
+    u = linear(h, p["w_ff_up"], exe, keys[6])
+    return linear(jax.nn.gelu(g) * u, p["w_ff_down"], exe, keys[7])
+
+
+def _rec_block(h, p, cfg, exe, key, conv_state=None, r_state=None):
+    keys = list(jax.random.split(key, 8)) if key is not None else [None] * 8
+    mix, conv_state, r_state = _rec_mix(
+        rmsnorm(h, p["ln"], cfg.norm_eps), p, cfg, exe, keys, conv_state, r_state)
+    h = h + mix
+    h = h + _ffn(rmsnorm(h, p["ln2"], cfg.norm_eps), p, cfg, exe, keys)
+    return h, conv_state, r_state
+
+
+def _attn_block(h, p, cfg, exe, key, positions):
+    keys = list(jax.random.split(key, 8)) if key is not None else [None] * 8
+    b, s, _ = h.shape
+    hn = rmsnorm(h, p["ln"], cfg.norm_eps)
+    q = rope(linear(hn, p["wq"], exe, keys[0]).reshape(b, s, cfg.n_heads, cfg.hd),
+             positions, cfg.rope_theta)
+    k = rope(linear(hn, p["wk"], exe, keys[1]).reshape(b, s, cfg.n_kv_heads, cfg.hd),
+             positions, cfg.rope_theta)
+    v = linear(hn, p["wv"], exe, keys[2]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    att = flash_attention(q, k, v, causal=True, window=cfg.window,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = h + linear(att.reshape(b, s, -1), p["wo"], exe, keys[3])
+    h = h + _ffn(rmsnorm(h, p["ln2"], cfg.norm_eps), p, cfg, exe, keys)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: RglruConfig, exe: Execution = None, rng=None,
+            return_hidden: bool = False):
+    exe = exe or Execution()
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(exe.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    n_units = cfg.n_units
+    unit_keys = (jax.random.split(rng, n_units * 3).reshape(n_units, 3, 2)
+                 if rng is not None else jnp.zeros((n_units, 3, 2), jnp.uint32))
+
+    @jax.checkpoint
+    def unit(h, xs):
+        ps, uk = xs
+        ka, kb, kc = (uk if rng is not None else (None, None, None))
+        h, _, _ = _rec_block(h, ps["rec_a"], cfg, exe, ka)
+        h, _, _ = _rec_block(h, ps["rec_b"], cfg, exe, kb)
+        h = _attn_block(h, ps["attn"], cfg, exe, kc, positions)
+        return h, None
+
+    h, _ = jax.lax.scan(unit, h, (params["units"], unit_keys))
+
+    if cfg.n_tail:
+        tail_keys = (jax.random.split(jax.random.fold_in(rng, 7), cfg.n_tail)
+                     if rng is not None else jnp.zeros((cfg.n_tail, 2), jnp.uint32))
+
+        @jax.checkpoint
+        def tail(h, xs):
+            ps, tk = xs
+            h, _, _ = _rec_block(h, ps, cfg, exe, tk if rng is not None else None)
+            return h, None
+
+        h, _ = jax.lax.scan(tail, h, (params["tail"], tail_keys))
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, 0.0
+    logits = h.astype(jnp.float32) @ as_weight(params["unembed"], jnp.float32)
+    return logits, 0.0
+
+
+def unembed_matrix(params, cfg: RglruConfig):
+    return params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# serving: O(1)-state decode (window cache + recurrent state)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: RglruConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    w = min(cfg.window, max_seq)
+    nu, dr, cw = cfg.n_units, cfg.drnn, cfg.conv_width
+    cache = {
+        "r_a": jnp.zeros((nu, batch, dr), jnp.float32),
+        "r_b": jnp.zeros((nu, batch, dr), jnp.float32),
+        "conv_a": jnp.zeros((nu, batch, cw - 1, dr), dtype),
+        "conv_b": jnp.zeros((nu, batch, cw - 1, dr), dtype),
+        "k": jnp.zeros((nu, batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((nu, batch, w, cfg.n_kv_heads, cfg.hd), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.n_tail:
+        cache |= {"tail_r": jnp.zeros((cfg.n_tail, batch, dr), jnp.float32),
+                  "tail_conv": jnp.zeros((cfg.n_tail, batch, cw - 1, dr), dtype)}
+    return cache
+
+
+def decode_step(params, cache, tokens, cfg: RglruConfig, exe: Execution = None):
+    """tokens [B,1] -> (logits [B,1,V], new cache). Ring-buffer window cache."""
+    exe = exe or Execution()
+    b = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(exe.cdtype)
+    w = cache["k"].shape[2]
+    pos = cache["len"]                                             # [B]
+    slot = pos % w
+
+    def unit(h, xs):
+        ps, ca, cb, ra, rb, kc, vc = xs
+        keys = [None] * 8
+        h, ca, ra = _rec_block(h, ps["rec_a"], cfg, exe, None, ca, ra)
+        h, cb, rb = _rec_block(h, ps["rec_b"], cfg, exe, None, cb, rb)
+        # local attention against the ring buffer
+        pa = ps["attn"]
+        hn = rmsnorm(h, pa["ln"], cfg.norm_eps)
+        q = rope(linear(hn, pa["wq"], exe).reshape(b, 1, cfg.n_heads, cfg.hd),
+                 pos[:, None], cfg.rope_theta)
+        k = rope(linear(hn, pa["wk"], exe).reshape(b, 1, cfg.n_kv_heads, cfg.hd),
+                 pos[:, None], cfg.rope_theta)
+        v = linear(hn, pa["wv"], exe).reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+        oh = jax.nn.one_hot(slot, w, dtype=kc.dtype)               # [B, W]
+        kc = kc * (1 - oh[..., None, None]) + oh[..., None, None] * k.astype(kc.dtype)
+        vc = vc * (1 - oh[..., None, None]) + oh[..., None, None] * v.astype(vc.dtype)
+        # ring buffer holds only in-window entries (RoPE applied at write
+        # time, so slot order is irrelevant); mask unwritten slots during the
+        # first < w steps.
+        n_valid = jnp.minimum(pos + 1, w)
+        att = decode_attention(q, kc, vc, kv_len=n_valid)
+        h = h + linear(att.reshape(b, 1, -1), pa["wo"], exe)
+        h = h + _ffn(rmsnorm(h, pa["ln2"], cfg.norm_eps), pa, cfg, exe, keys)
+        return h, (ca, cb, ra, rb, kc, vc)
+
+    h, (ca, cb, ra, rb, kc, vc) = jax.lax.scan(
+        unit, h, (params["units"], cache["conv_a"], cache["conv_b"],
+                  cache["r_a"], cache["r_b"], cache["k"], cache["v"]))
+    new_cache = dict(cache, conv_a=ca, conv_b=cb, r_a=ra, r_b=rb, k=kc, v=vc,
+                     **{"len": cache["len"] + 1})
+
+    if cfg.n_tail:
+        def tail(h, xs):
+            ps, cs, rs = xs
+            h, cs, rs = _rec_block(h, ps, cfg, exe, None, cs, rs)
+            return h, (cs, rs)
+        h, (tc, tr) = jax.lax.scan(tail, h, (params["tail"], cache["tail_conv"],
+                                             cache["tail_r"]))
+        new_cache |= {"tail_conv": tc, "tail_r": tr}
+
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ as_weight(params["unembed"], jnp.float32)
+    return logits, new_cache

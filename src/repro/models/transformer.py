@@ -1,0 +1,322 @@
+"""Decoder-only transformer family (granite, llama3.2, qwen1.5, glm4,
+internvl2 backbone, arctic, olmoe).
+
+One scanned, remat-wrapped block definition covers the dense and MoE members;
+config flags select QKV bias (qwen), GQA group sizes, SwiGLU dims, MoE
+(+ dense residual for arctic) and the VLM patch-embedding frontend stub
+(internvl2: `input_specs` feeds precomputed patch embeddings; see the
+assignment's frontend-STUB rule).
+
+All stationary projections route through `layers.linear` and therefore run
+digitally or through the simulated AIMC crossbars (the paper's technique as a
+first-class execution mode). Parameters are stacked on a leading layer axis
+and consumed by `lax.scan` — small HLO, fast multi-pod compiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models.layers import (Execution, as_weight, decode_attention,
+                                 dense_init, embed_init, flash_attention,
+                                 linear, rmsnorm, rope, shard_act, swiglu)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    moe_dense_ff: int = 0
+    # VLM frontend stub
+    n_patches: int = 0
+    # attention chunking
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: TransformerConfig, dtype=jnp.float32) -> dict:
+    l, d, hq, hkv, hd, ff = (cfg.n_layers, cfg.d_model, cfg.n_heads,
+                             cfg.n_kv_heads, cfg.hd, cfg.d_ff)
+    ks = jax.random.split(key, 16)
+
+    def stack(rng, k, n):
+        return jax.vmap(lambda r: dense_init(r, k, n, dtype))(
+            jax.random.split(rng, l))
+
+    params: dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab, d, dtype),
+        "final_norm": jnp.ones((d,), dtype),
+        "blocks": {
+            "ln1": jnp.ones((l, d), dtype),
+            "ln2": jnp.ones((l, d), dtype),
+            "wq": stack(ks[1], d, hq * hd),
+            "wk": stack(ks[2], d, hkv * hd),
+            "wv": stack(ks[3], d, hkv * hd),
+            "wo": stack(ks[4], hq * hd, d),
+        },
+    }
+    if cfg.qkv_bias:
+        params["blocks"] |= {
+            "bq": jnp.zeros((l, hq * hd), dtype),
+            "bk": jnp.zeros((l, hkv * hd), dtype),
+            "bv": jnp.zeros((l, hkv * hd), dtype),
+        }
+    if cfg.is_moe:
+        e = cfg.n_experts
+
+        def estack(rng, k, n):
+            return jax.vmap(lambda r: jax.vmap(
+                lambda r2: dense_init(r2, k, n, dtype))(jax.random.split(r, e))
+            )(jax.random.split(rng, l))
+
+        params["blocks"] |= {
+            "router": stack(ks[5], d, e),
+            "we_gate": estack(ks[6], d, ff),
+            "we_up": estack(ks[7], d, ff),
+            "we_down": estack(ks[8], ff, d),
+        }
+        if cfg.moe_dense_residual:
+            dff = cfg.moe_dense_ff or ff
+            params["blocks"] |= {
+                "wd_gate": stack(ks[9], d, dff),
+                "wd_up": stack(ks[10], d, dff),
+                "wd_down": stack(ks[11], dff, d),
+            }
+    else:
+        params["blocks"] |= {
+            "w_gate": stack(ks[9], d, ff),
+            "w_up": stack(ks[10], d, ff),
+            "w_down": stack(ks[11], ff, d),
+        }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(ks[12], d, cfg.vocab, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block
+# ---------------------------------------------------------------------------
+
+def _qkv(h, blk, cfg, exe, keys, positions):
+    b, s, d = h.shape
+    q = linear(h, blk["wq"], exe, keys[0], blk.get("bq"))
+    k = linear(h, blk["wk"], exe, keys[1], blk.get("bk"))
+    v = linear(h, blk["wv"], exe, keys[2], blk.get("bv"))
+    q = rope(q.reshape(b, s, cfg.n_heads, cfg.hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, s, cfg.n_kv_heads, cfg.hd), positions, cfg.rope_theta)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    # Megatron-style TP: Q heads sharded over `model` (skipped when the head
+    # count does not divide); GQA K/V usually have too few heads to shard.
+    # At decode (s == 1) q stays replicated over `model` instead — the KV
+    # cache shards its sequence axis there (flash-decoding, layers.py).
+    if s > 1:
+        q = shard_act(q, model_dim=2)
+        k = shard_act(k, model_dim=2)
+        v = shard_act(v, model_dim=2)
+    else:
+        q, k, v = shard_act(q), shard_act(k), shard_act(v)
+    return q, k, v
+
+
+def _ffn(h2, blk, cfg: TransformerConfig, exe: Execution, keys):
+    if not cfg.is_moe:
+        return swiglu(h2, blk["w_gate"], blk["w_up"], blk["w_down"], exe,
+                      keys[4]), 0.0
+    b, s, d = h2.shape
+    y, aux = moe_lib.moe_ffn(
+        h2.reshape(b * s, d), blk["router"], blk["we_gate"], blk["we_up"],
+        blk["we_down"], top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        exe=exe, key=keys[4])
+    y = y.reshape(b, s, d)
+    if cfg.moe_dense_residual:
+        y = y + swiglu(h2, blk["wd_gate"], blk["wd_up"], blk["wd_down"],
+                       exe, keys[5])
+    return y, aux
+
+
+def block_forward(h, blk, cfg: TransformerConfig, exe: Execution, key,
+                  positions):
+    keys = list(jax.random.split(key, 6)) if key is not None else [None] * 6
+    h = shard_act(h)
+    q, k, v = _qkv(rmsnorm(h, blk["ln1"], cfg.norm_eps), blk, cfg, exe, keys,
+                   positions)
+    att = flash_attention(q, k, v, causal=True,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    b, s, _ = h.shape
+    h = h + linear(att.reshape(b, s, -1), blk["wo"], exe, keys[3])
+    h = shard_act(h)
+    ff, aux = _ffn(rmsnorm(h, blk["ln2"], cfg.norm_eps), blk, cfg, exe, keys)
+    return h + ff, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward (training / prefill-style)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: TransformerConfig, exe: Execution,
+                 patch_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(exe.cdtype)
+    if cfg.n_patches and patch_embeds is not None:
+        # VLM frontend stub: positions [0, n_patches) carry precomputed
+        # InternViT patch embeddings instead of token embeddings.
+        h = jnp.concatenate(
+            [patch_embeds.astype(exe.cdtype), h[:, cfg.n_patches:]], axis=1)
+    return h
+
+
+def forward(params, tokens, cfg: TransformerConfig, exe: Execution = None,
+            rng=None, patch_embeds=None, return_hidden: bool = False):
+    """tokens: [B, S] -> logits [B, S, V] (plus MoE aux loss).
+
+    return_hidden=True returns the post-norm hidden states instead of logits
+    (the train loop computes cross-entropy in vocab chunks — a [B,S,150k]
+    logits tensor must never materialize)."""
+    exe = exe or Execution()
+    b, s = tokens.shape
+    h = embed_tokens(params, tokens, cfg, exe, patch_embeds)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    layer_keys = (jax.random.split(rng, cfg.n_layers) if rng is not None
+                  else jnp.zeros((cfg.n_layers, 2), jnp.uint32))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, aux = carry
+        blk, lk = xs
+        key = lk if rng is not None else None
+        h, a = block_forward(h, blk, cfg, exe, key, positions)
+        return (h, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (h, 0.0),
+                               (params["blocks"], layer_keys))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, aux
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = h.astype(jnp.float32) @ as_weight(unembed, jnp.float32)
+    return logits, aux
+
+
+def unembed_matrix(params, cfg: TransformerConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, exe: Execution = None,
+            max_seq: int | None = None, patch_embeds=None,
+            cache_dtype=jnp.bfloat16):
+    """Full-sequence forward that also materializes the KV cache."""
+    exe = exe or Execution()
+    b, s = tokens.shape
+    max_seq = max_seq or s
+    h = embed_tokens(params, tokens, cfg, exe, patch_embeds)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(h, blk):
+        keys = [None] * 6
+        q, k, v = _qkv(rmsnorm(h, blk["ln1"], cfg.norm_eps), blk, cfg, exe,
+                       keys, positions)
+        att = flash_attention(q, k, v, causal=True, q_chunk=cfg.q_chunk,
+                              kv_chunk=cfg.kv_chunk)
+        h = h + linear(att.reshape(b, s, -1), blk["wo"], exe, keys[3])
+        ff, _ = _ffn(rmsnorm(h, blk["ln2"], cfg.norm_eps), blk, cfg, exe, keys)
+        kc = jnp.zeros((b, max_seq, cfg.n_kv_heads, cfg.hd), cache_dtype)
+        vc = jnp.zeros((b, max_seq, cfg.n_kv_heads, cfg.hd), cache_dtype)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(cache_dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(cache_dtype), (0, 0, 0, 0))
+        return h + ff, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = h[:, -1:].astype(jnp.float32) @ as_weight(unembed, jnp.float32)
+    cache = {"k": ks, "v": vs,
+             "len": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig,
+                exe: Execution = None):
+    """tokens: [B, 1] one new token per sequence -> (logits [B,1,V], cache)."""
+    exe = exe or Execution()
+    b = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(exe.cdtype)
+    positions = cache["len"][:, None]                              # [B, 1]
+
+    # decode_32k/long_500k cells run lockstep batches: every sequence writes
+    # its new K/V at the SAME buffer slot, so one dynamic_update_slice
+    # suffices (a per-row scatter lowers to full-cache rewrites; ragged
+    # lengths are handled by the per-row kv_len attention mask + _scatter_kv)
+    pos0 = cache["len"][0]
+
+    def body(h, xs):
+        blk, kc, vc = xs
+        keys = [None] * 6
+        q, k, v = _qkv(rmsnorm(h, blk["ln1"], cfg.norm_eps), blk, cfg, exe,
+                       keys, positions)
+        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                          (0, pos0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                          (0, pos0, 0, 0))
+        att = decode_attention(q, kc, vc, kv_len=cache["len"] + 1)
+        h = h + linear(att.reshape(b, 1, -1), blk["wo"], exe, keys[3])
+        ff, _ = _ffn(rmsnorm(h, blk["ln2"], cfg.norm_eps), blk, cfg, exe, keys)
+        return h + ff, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, h, (params["blocks"],
+                                         cache["k"], cache["v"]))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    logits = h.astype(jnp.float32) @ as_weight(unembed, jnp.float32)
+    new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
+    return logits, new_cache
+
+
+def _scatter_kv(cache_l, new, idx):
+    """cache_l: [B, S, H, D]; new: [B, 1, H, D]; idx: [B] write positions.
+
+    A row scatter (writes B rows in place) — NOT a one-hot multiply, which
+    reads + rewrites the entire cache every layer."""
+    b = cache_l.shape[0]
+    return cache_l.at[jnp.arange(b), idx].set(new[:, 0].astype(cache_l.dtype))

@@ -1,0 +1,351 @@
+"""xLSTM (xlstm-350m): alternating mLSTM and sLSTM blocks.
+
+  * mLSTM — matrix-memory LSTM with exponential gating. Training/prefill use
+    the CHUNKWISE-PARALLEL form (intra-chunk quadratic einsums + O(1)
+    inter-chunk state scan, the TPU-friendly equivalent of the paper's
+    recurrent math); decode uses the O(1) per-step recurrence. The two forms
+    are algebraically identical (stabilized log-domain gating).
+  * sLSTM — scalar-memory LSTM with exponential gating and block-diagonal
+    recurrent connections; inherently sequential -> lax.scan over time.
+
+This is the direct descendant of the ALPINE paper's LSTM exploration: the
+gate PRE-projections (W_z/i/f/o, q/k/v) are stationary matrices mapped onto
+AIMC crossbars side by side — one queue feeds all gates (paper §VIII-D) —
+while the recurrences themselves are element-wise and stay digital.
+O(1) decode state is why this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (Execution, dense_init, embed_init, linear,
+                                 rmsnorm)
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmConfig:
+    name: str
+    n_layers: int = 24              # alternating mLSTM, sLSTM
+    d_model: int = 1024
+    n_heads: int = 4
+    vocab: int = 50304
+    proj_factor_m: int = 2          # mLSTM inner width multiplier
+    ff_factor_s: float = 4 / 3      # sLSTM block FFN multiplier
+    chunk: int = 512                # mLSTM chunkwise-parallel chunk length
+    norm_eps: float = 1e-6
+
+    @property
+    def n_pairs(self):
+        return self.n_layers // 2
+
+    @property
+    def d_inner(self):
+        return self.proj_factor_m * self.d_model
+
+    @property
+    def hd_m(self):
+        return self.d_inner // self.n_heads
+
+    @property
+    def hd_s(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff_s(self):
+        return int(self.ff_factor_s * self.d_model)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: XlstmConfig, dtype=jnp.float32) -> dict:
+    n, d, di, h = cfg.n_pairs, cfg.d_model, cfg.d_inner, cfg.n_heads
+    ks = jax.random.split(key, 16)
+
+    def stack(rng, k_, n_):
+        return jax.vmap(lambda r: dense_init(r, k_, n_, dtype))(
+            jax.random.split(rng, n))
+
+    mlstm = {
+        "ln": jnp.ones((n, d), dtype),
+        "w_up": stack(ks[0], d, di),
+        "w_gate": stack(ks[1], d, di),
+        "w_q": stack(ks[2], di, di),
+        "w_k": stack(ks[3], di, di),
+        "w_v": stack(ks[4], di, di),
+        "w_if": stack(ks[5], di, 2 * h),
+        "b_if": jnp.concatenate([jnp.zeros((n, h), dtype),
+                                 jnp.full((n, h), 3.0, dtype)], -1),
+        "gn": jnp.ones((n, di), dtype),
+        "w_down": stack(ks[6], di, d),
+    }
+    slstm = {
+        "ln": jnp.ones((n, d), dtype),
+        "w_zifo": stack(ks[7], d, 4 * d),
+        "r_zifo": jax.random.normal(ks[8], (n, h, cfg.hd_s, 4 * cfg.hd_s),
+                                    dtype) * 0.02,
+        "b_zifo": jnp.zeros((n, 4 * d), dtype),
+        "gn": jnp.ones((n, d), dtype),
+        "ln2": jnp.ones((n, d), dtype),
+        "w_ff_gate": stack(ks[9], d, cfg.d_ff_s),
+        "w_ff_up": stack(ks[10], d, cfg.d_ff_s),
+        "w_ff_down": stack(ks[11], cfg.d_ff_s, d),
+    }
+    return {
+        "embed": embed_init(ks[12], cfg.vocab, d, dtype),
+        "final_norm": jnp.ones((d,), dtype),
+        "pairs": {"mlstm": mlstm, "slstm": slstm},
+        "unembed": dense_init(ks[13], d, cfg.vocab, dtype),
+    }
+
+
+def _groupnorm(x, scale, n_heads, eps=1e-6):
+    """Per-head groupnorm over the trailing dim. x: [..., H*dh]."""
+    shp = x.shape
+    xh = x.reshape(*shp[:-1], n_heads, shp[-1] // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = ((xh - mu) * jax.lax.rsqrt(var + eps)).reshape(shp)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: chunkwise-parallel (train/prefill) + step (decode)
+# ---------------------------------------------------------------------------
+
+def _mlstm_chunkwise(q, k, v, li, lf, cfg, state=None):
+    """q,k,v: [B,S,H,dh] (already scaled); li/lf: [B,S,H] log input/forget
+    gates. Returns (h [B,S,H,dh], final state (C, n, m))."""
+    b, s, h, dh = q.shape
+    c = min(cfg.chunk, s)
+    if s % c:
+        raise ValueError(f"seq {s} not divisible by mLSTM chunk {c}")
+    nc = s // c
+    # [nc, B, H, c, ...] chunked, head-major layouts
+    qc = q.reshape(b, nc, c, h, dh).transpose(1, 0, 3, 2, 4)
+    kc = k.reshape(b, nc, c, h, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nc, c, h, dh).transpose(1, 0, 3, 2, 4)
+    lic = li.reshape(b, nc, c, h).transpose(1, 0, 3, 2)
+    lfc = lf.reshape(b, nc, c, h).transpose(1, 0, 3, 2)
+
+    if state is None:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.full((b, h), -1e30, jnp.float32))
+
+    causal = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qi, ki, vi, lii, lfi = xs                     # [B,H,c,dh], [B,H,c]
+        bcum = jnp.cumsum(lfi, axis=-1)               # inclusive cumsum [B,H,c]
+        # intra-chunk log decays D_ij = b_i - b_j + li_j (j <= i)
+        d_ij = bcum[..., :, None] - bcum[..., None, :] + lii[..., None, :]
+        d_ij = jnp.where(causal[None, None], d_ij, -1e30)
+        m_local = jnp.max(d_ij, axis=-1)              # [B,H,c]
+        d_state = bcum + m[..., None]                 # decay from carry state
+        m_i = jnp.maximum(m_local, d_state)
+        p_ij = jnp.exp(d_ij - m_i[..., None])
+        scores = jnp.einsum("bhid,bhjd->bhij", qi, ki)            # scaled q
+        num = jnp.einsum("bhij,bhjd->bhid", p_ij * scores, vi)
+        den = jnp.einsum("bhij->bhi", p_ij * scores)
+        w_state = jnp.exp(d_state - m_i)              # [B,H,c]
+        num = num + w_state[..., None] * jnp.einsum("bhid,bhde->bhie", qi, C)
+        den = den + w_state * jnp.einsum("bhid,bhd->bhi", qi, n)
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # ---- state update to chunk end -------------------------------------
+        g = bcum[..., -1]                             # [B,H]
+        m_new = jnp.maximum(g + m, jnp.max(g[..., None] - bcum + lii, axis=-1))
+        w_old = jnp.exp(g + m - m_new)                # [B,H]
+        w_in = jnp.exp(g[..., None] - bcum + lii - m_new[..., None])  # [B,H,c]
+        C_new = w_old[..., None, None] * C + \
+            jnp.einsum("bhj,bhjd,bhje->bhde", w_in, ki, vi)
+        n_new = w_old[..., None] * n + \
+            jnp.einsum("bhj,bhjd->bhd", w_in, ki)
+        return (C_new, n_new, m_new), hout
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, state, (qc, kc, vc, lic, lfc))
+    hout = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dh)
+    return hout, (C, n, m)
+
+
+def _mlstm_step(q, k, v, li, lf, state):
+    """Single-step recurrence. q,k,v: [B,H,dh]; li/lf: [B,H]."""
+    C, n, m = state
+    m_new = jnp.maximum(lf + m, li)
+    f_ = jnp.exp(lf + m - m_new)
+    i_ = jnp.exp(li - m_new)
+    C = f_[..., None, None] * C + i_[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = f_[..., None] * n + i_[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h, (C, n, m_new)
+
+
+def _mlstm_qkvif(hn, p, cfg, exe, keys):
+    b, s, _ = hn.shape
+    h_, dh = cfg.n_heads, cfg.hd_m
+    up = linear(hn, p["w_up"], exe, keys[0])
+    gate = jax.nn.silu(linear(hn, p["w_gate"], exe, keys[1]))
+    q = linear(up, p["w_q"], exe, keys[2]).reshape(b, s, h_, dh) / (dh ** 0.5)
+    k = linear(up, p["w_k"], exe, keys[3]).reshape(b, s, h_, dh)
+    v = linear(up, p["w_v"], exe, keys[4]).reshape(b, s, h_, dh)
+    if_ = (linear(up, p["w_if"], exe, keys[5]) + p["b_if"]).astype(jnp.float32)
+    li = if_[..., :h_]
+    lf = jax.nn.log_sigmoid(if_[..., h_:])
+    return q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), \
+        li, lf, gate
+
+
+def mlstm_block(h, p, cfg, exe, key, state=None):
+    keys = list(jax.random.split(key, 8)) if key is not None else [None] * 8
+    hn = rmsnorm(h, p["ln"], cfg.norm_eps)
+    q, k, v, li, lf, gate = _mlstm_qkvif(hn, p, cfg, exe, keys)
+    if state is None:
+        ho, new_state = _mlstm_chunkwise(q, k, v, li, lf, cfg)
+    else:
+        # recurrent states compute in f32 regardless of cache storage dtype
+        state = jax.tree.map(lambda x: x.astype(jnp.float32), state)
+        ho, new_state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                    li[:, 0], lf[:, 0], state)
+        ho = ho[:, None]
+    b, s = h.shape[:2]
+    ho = _groupnorm(ho.reshape(b, s, -1).astype(exe.cdtype), p["gn"],
+                    cfg.n_heads, cfg.norm_eps)
+    out = linear(ho * gate, p["w_down"], exe, keys[6])
+    return h + out, new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: sequential scan
+# ---------------------------------------------------------------------------
+
+def _slstm_seq(zifo, r, hd, n_heads, state):
+    """zifo: [B,S,4d] input-side pre-activations; r: [H, dh, 4dh] recurrent
+    weights. state: (c, n, h, m) each [B, d]. Returns ([B,S,d], state)."""
+    b, s, d4 = zifo.shape
+    d = d4 // 4
+
+    def step(carry, x_t):
+        c, n, h, m = carry
+        hh = h.reshape(b, n_heads, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r).reshape(b, 4 * d)
+        pre = x_t + rec
+        zt = jnp.tanh(pre[:, :d])
+        it = pre[:, d:2 * d]
+        ft = pre[:, 2 * d:3 * d]
+        ot = jax.nn.sigmoid(pre[:, 3 * d:])
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        c_new = f_ * c + i_ * zt
+        n_new = f_ * n + i_
+        h_new = ot * (c_new / jnp.maximum(n_new, 1e-6))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(zifo, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+def slstm_block(h, p, cfg, exe, key, state=None):
+    keys = list(jax.random.split(key, 8)) if key is not None else [None] * 8
+    b, s, d = h.shape
+    hn = rmsnorm(h, p["ln"], cfg.norm_eps)
+    zifo = (linear(hn, p["w_zifo"], exe, keys[0]) +
+            p["b_zifo"]).astype(jnp.float32)
+    if state is None:
+        state = tuple(jnp.zeros((b, d), jnp.float32) for _ in range(3)) + \
+            (jnp.full((b, d), -1e30, jnp.float32),)
+    else:
+        state = jax.tree.map(lambda x: x.astype(jnp.float32), state)
+    hs, new_state = _slstm_seq(zifo, p["r_zifo"].astype(jnp.float32),
+                               cfg.hd_s, cfg.n_heads, state)
+    hs = _groupnorm(hs.astype(exe.cdtype), p["gn"], cfg.n_heads, cfg.norm_eps)
+    h = h + hs
+    hn2 = rmsnorm(h, p["ln2"], cfg.norm_eps)
+    g = linear(hn2, p["w_ff_gate"], exe, keys[1])
+    u = linear(hn2, p["w_ff_up"], exe, keys[2])
+    ff = linear(jax.nn.gelu(g) * u, p["w_ff_down"], exe, keys[3])
+    return h + ff, new_state
+
+
+# ---------------------------------------------------------------------------
+# forward / cache / decode
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: XlstmConfig, exe: Execution = None, rng=None,
+            return_hidden: bool = False):
+    exe = exe or Execution()
+    h = jnp.take(params["embed"], tokens, axis=0).astype(exe.cdtype)
+    n = cfg.n_pairs
+    pair_keys = (jax.random.split(rng, n * 2).reshape(n, 2, 2)
+                 if rng is not None else jnp.zeros((n, 2, 2), jnp.uint32))
+
+    @jax.checkpoint
+    def pair(h, xs):
+        ps, pk = xs
+        km, ks_ = (pk if rng is not None else (None, None))
+        h, _ = mlstm_block(h, ps["mlstm"], cfg, exe, km)
+        h, _ = slstm_block(h, ps["slstm"], cfg, exe, ks_)
+        return h, None
+
+    h, _ = jax.lax.scan(pair, h, (params["pairs"], pair_keys))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, 0.0
+    logits = h.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return logits, 0.0
+
+
+def unembed_matrix(params, cfg: XlstmConfig):
+    return params["unembed"]
+
+
+def init_cache(cfg: XlstmConfig, batch: int, max_seq: int = 0,
+               dtype=jnp.float32):
+    n, h, dh, d = cfg.n_pairs, cfg.n_heads, cfg.hd_m, cfg.d_model
+    return {
+        "m_C": jnp.zeros((n, batch, h, dh, dh), dtype),
+        "m_n": jnp.zeros((n, batch, h, dh), dtype),
+        "m_m": jnp.full((n, batch, h), -1e30, dtype),
+        "s_c": jnp.zeros((n, batch, d), dtype),
+        "s_n": jnp.zeros((n, batch, d), dtype),
+        "s_h": jnp.zeros((n, batch, d), dtype),
+        "s_m": jnp.full((n, batch, d), -1e30, dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: XlstmConfig, exe: Execution = None):
+    exe = exe or Execution()
+    h = jnp.take(params["embed"], tokens, axis=0).astype(exe.cdtype)
+
+    cdt = cache["m_C"].dtype
+
+    def pair(h, xs):
+        ps, mC, mn, mm, sc, sn, sh, sm = xs
+        h, (mC, mn, mm) = mlstm_block(h, ps["mlstm"], cfg, exe, None,
+                                      (mC, mn, mm))
+        h, (sc, sn, sh, sm) = slstm_block(h, ps["slstm"], cfg, exe, None,
+                                          (sc, sn, sh, sm))
+        # store states back at the cache dtype (bf16 by default)
+        out = tuple(t.astype(cdt) for t in (mC, mn, mm, sc, sn, sh, sm))
+        return h, out
+
+    h, (mC, mn, mm, sc, sn, sh, sm) = jax.lax.scan(
+        pair, h, (params["pairs"], cache["m_C"], cache["m_n"], cache["m_m"],
+                  cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"]))
+    new_cache = dict(cache, m_C=mC, m_n=mn, m_m=mm, s_c=sc, s_n=sn, s_h=sh,
+                     s_m=sm)
+    new_cache["len"] = cache["len"] + 1
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
+    return logits, new_cache

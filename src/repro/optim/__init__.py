@@ -1,0 +1,20 @@
+"""Pure-JAX optimizers: AdamW, Adafactor (+ LR schedules).
+
+`make_optimizer(name)` returns (init_fn, update_fn, cfg) for the launcher.
+"""
+
+from __future__ import annotations
+
+from repro.optim import adafactor, adamw, schedule
+
+
+def make_optimizer(name: str, **overrides):
+    if name == "adamw":
+        cfg = adamw.AdamWConfig(**overrides)
+        return (lambda p: adamw.init(p, cfg),
+                lambda g, s, p, lr=1.0: adamw.update(g, s, p, cfg, lr), cfg)
+    if name == "adafactor":
+        cfg = adafactor.AdafactorConfig(**overrides)
+        return (lambda p: adafactor.init(p, cfg),
+                lambda g, s, p, lr=1.0: adafactor.update(g, s, p, cfg, lr), cfg)
+    raise ValueError(f"unknown optimizer {name!r}")

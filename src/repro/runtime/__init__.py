@@ -1,0 +1,3 @@
+"""Runtime resilience: retries, straggler detection, heartbeats, re-mesh."""
+from repro.runtime.fault_tolerance import (Heartbeat, StragglerMonitor,
+                                           elastic_mesh_shapes, resilient_step)

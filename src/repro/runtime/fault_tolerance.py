@@ -1,0 +1,111 @@
+"""Fault tolerance and straggler mitigation for the step loop.
+
+At thousand-node scale the failure model is: (a) hard node loss -> the run
+dies and is restarted by the cluster scheduler; (b) transient device/runtime
+errors -> retry in-process; (c) stragglers -> detect, log, and (on repeated
+offence) trigger an elastic re-mesh restart.
+
+This module implements the in-process half and the restart protocol:
+
+  * `resilient_step`  — wraps a compiled step; retries transient failures,
+    re-raising only after `max_retries` (at which point the supervisor
+    restarts from the latest atomic checkpoint — which `checkpoint.restore`
+    can load onto a DIFFERENT mesh, i.e. elastic shrink/grow).
+  * `StragglerMonitor` — per-step wall-time EWMA + deviation; flags steps
+    slower than `threshold`x the running mean, exposing a callback hook (on a
+    real fleet: report the slow host to the scheduler for cordoning).
+  * `Heartbeat` — step-progress file other processes / the scheduler can
+    watch; doubles as the liveness probe in the launch scripts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+TRANSIENT_ERRORS = (RuntimeError, OSError)
+
+
+def resilient_step(step_fn: Callable, max_retries: int = 2,
+                   on_retry: Callable[[int, Exception], None] | None = None):
+    """Wrap a compiled step function with bounded retry."""
+
+    def wrapped(*args, **kwargs):
+        for attempt in range(max_retries + 1):
+            try:
+                return step_fn(*args, **kwargs)
+            except TRANSIENT_ERRORS as e:          # pragma: no cover - fleet
+                if attempt == max_retries:
+                    raise
+                if on_retry:
+                    on_retry(attempt, e)
+                time.sleep(0.5 * (attempt + 1))
+        raise AssertionError("unreachable")
+
+    return wrapped
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker with a slow-step callback."""
+
+    def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
+                 warmup: int = 3, on_straggler=None):
+        self.threshold = threshold
+        self.alpha = alpha
+        self.warmup = warmup
+        self.on_straggler = on_straggler
+        self.ewma = None
+        self.count = 0
+        self.flagged: list[tuple[int, float, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        """Record one step time; returns True if flagged as straggler."""
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_slow = (self.count > self.warmup and
+                   dt > self.threshold * self.ewma)
+        if is_slow:
+            self.flagged.append((step, dt, self.ewma))
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ewma)
+        else:
+            # stragglers do not poison the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_slow
+
+
+class Heartbeat:
+    """Progress file for external liveness/restart supervision."""
+
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def beat(self, step: int, **info):
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": step, "time": time.time(), **info}, f)
+        os.replace(tmp, self.path)
+
+    def read(self) -> dict | None:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+
+
+def elastic_mesh_shapes(n_devices: int, model_parallel: int):
+    """Valid (data, model) meshes for whatever device count survives —
+    the re-mesh table the supervisor consults when restarting smaller."""
+    shapes = []
+    mp = model_parallel
+    while mp >= 1:
+        if n_devices % mp == 0:
+            shapes.append((n_devices // mp, mp))
+        mp //= 2
+    return shapes

@@ -1,0 +1,148 @@
+"""The AIMC tile model: programming, inference, noise, and the STE.
+
+Covers the paper's execution semantics (§III-B/C, §IV-B) as a JAX module:
+quantized crossbar MVM fidelity, PCM non-ideality determinism, drift
+compensation, and the straight-through estimator used for noise-aware
+training.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aimc import (AimcConfig, aimc_apply, aimc_linear_ste,
+                             program_linear)
+from repro.core.noise import DISABLED, NoiseModel, programming_noise, read_noise
+
+
+def test_program_shapes_and_padding():
+    cfg = AimcConfig(tile_rows=256)
+    w = jnp.ones((300, 130)) * 0.01
+    st = program_linear(w, cfg)
+    assert st.w_q.shape == (2, 256, 256)      # K padded to 2 blocks, N to 128x
+    assert st.k == 300 and st.n == 130
+    # padded regions are exactly zero codes
+    assert int(jnp.abs(st.w_q[1, 44:, :]).max()) == 0
+    assert int(jnp.abs(st.w_q[:, :, 130:]).max()) == 0
+
+
+def test_apply_matches_fp32_within_quant_error():
+    cfg = AimcConfig(tile_rows=512)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(k1, (512, 256)) * 0.05
+    x = jax.random.normal(k2, (32, 512))
+    st = program_linear(w, cfg)
+    y = aimc_apply(st, x, cfg)
+    y_fp = x @ w
+    rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.05, f"8-bit crossbar should be ~4% of fp32, got {rel}"
+
+
+def test_apply_leading_dims():
+    cfg = AimcConfig(tile_rows=256)
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 64)) * 0.1
+    st = program_linear(w, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 5, 128))
+    y = aimc_apply(st, x, cfg)
+    assert y.shape == (2, 3, 5, 64)
+    y_flat = aimc_apply(st, x.reshape(-1, 128), cfg)
+    np.testing.assert_allclose(np.asarray(y).reshape(-1, 64),
+                               np.asarray(y_flat), atol=1e-6)
+
+
+def test_programming_noise_deterministic_and_scaled():
+    nm = NoiseModel()
+    key = jax.random.PRNGKey(3)
+    codes = jnp.linspace(-127, 127, 1000).reshape(10, 100)
+    n1 = programming_noise(key, codes, nm)
+    n2 = programming_noise(key, codes, nm)
+    np.testing.assert_array_equal(np.asarray(n1), np.asarray(n2))
+    # level dependence: large |w| noisier than small |w|
+    lo = jnp.std(n1[4:6])    # codes near 0
+    hi = jnp.std(jnp.concatenate([n1[:1], n1[-1:]]))
+    assert float(hi) > float(lo)
+
+
+def test_noise_disabled_is_exact():
+    cfg_clean = AimcConfig(tile_rows=256, noise=DISABLED)
+    cfg_noisy = AimcConfig(tile_rows=256, noise=NoiseModel())
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 128)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
+    key = jax.random.PRNGKey(2)
+    st_clean = program_linear(w, cfg_clean, key)
+    st_noisy = program_linear(w, cfg_noisy, key)
+    assert not np.array_equal(np.asarray(st_clean.w_q),
+                              np.asarray(st_noisy.w_q))
+    y1 = aimc_apply(st_clean, x, cfg_clean)
+    y2 = aimc_apply(st_clean, x, cfg_clean)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_drift_compensation():
+    drift = NoiseModel(sigma_prog_min=0.0, sigma_prog_max=0.0, sigma_read=0.0,
+                       drift_t_ratio=1e4, drift_compensate=True)
+    uncomp = NoiseModel(sigma_prog_min=0.0, sigma_prog_max=0.0, sigma_read=0.0,
+                        drift_t_ratio=1e4, drift_compensate=False)
+    assert drift.drift_gain() < 1.0
+    assert drift.drift_gain() * drift.compensation_gain() == pytest.approx(1.0)
+    w = jnp.eye(64) * 0.1
+    x = jnp.ones((2, 64))
+    cfg_c = AimcConfig(tile_rows=64, noise=drift)
+    cfg_u = AimcConfig(tile_rows=64, noise=uncomp)
+    y_c = aimc_apply(program_linear(w, cfg_c, jax.random.PRNGKey(0)), x, cfg_c)
+    y_u = aimc_apply(program_linear(w, cfg_u, jax.random.PRNGKey(0)), x, cfg_u)
+    # uncompensated drift shrinks outputs by (t/t0)^-nu
+    ratio = float(jnp.mean(y_u / jnp.maximum(y_c, 1e-9)))
+    assert ratio == pytest.approx(drift.drift_gain(), rel=0.05)
+
+
+def test_read_noise_scales_with_rows():
+    nm = NoiseModel()
+    k = jax.random.PRNGKey(0)
+    n_small = read_noise(k, (1, 64, 64), 64, nm)
+    n_large = read_noise(k, (1, 64, 64), 1024, nm)
+    assert float(jnp.std(n_large)) > float(jnp.std(n_small)) * 2
+
+
+def test_ste_gradients_are_dense():
+    """Backward of the AIMC linear == backward of x @ W (straight-through)."""
+    cfg = AimcConfig(tile_rows=256, noise=NoiseModel())
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (256, 64)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256))
+
+    def loss_aimc(x_, w_):
+        return jnp.sum(aimc_linear_ste(x_, w_, key, cfg) ** 2) * 0 + \
+            jnp.sum(aimc_linear_ste(x_, w_, key, cfg))
+
+    gx, gw = jax.grad(loss_aimc, argnums=(0, 1))(x, w)
+    # STE: d/dx sum(xW) = sum over out of W; d/dW = broadcast sum of x
+    np.testing.assert_allclose(np.asarray(gx),
+                               np.asarray(jnp.sum(w, 1)[None].repeat(8, 0)),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(gw),
+                               np.asarray(jnp.sum(x, 0)[:, None].repeat(64, 1)),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_ste_trains_through_noise():
+    """A tiny regression task must reach low loss with the noisy AIMC fwd."""
+    cfg = AimcConfig(tile_rows=64, noise=NoiseModel(sigma_read=0.002))
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (16, 4)) * 0.5
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 16))
+    y = x @ w_true
+    w = jnp.zeros((16, 4))
+    lr = 0.05
+    for i in range(200):
+        k = jax.random.fold_in(key, i)
+
+        def loss(wv):
+            pred = aimc_linear_ste(x, wv, k, cfg)
+            return jnp.mean((pred - y) ** 2)
+
+        w = w - lr * jax.grad(loss)(w)
+    final = float(jnp.mean((aimc_linear_ste(x, w, key, cfg) - y) ** 2))
+    base = float(jnp.mean(y ** 2))
+    assert final < 0.05 * base, f"noise-aware training failed: {final}/{base}"

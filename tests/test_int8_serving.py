@@ -1,0 +1,78 @@
+"""int8 weight-stationary serving (the paper's number format; §Perf It.6)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.quant import quantize_params_int8, quantize_weight_int8
+from repro.launch.shardings import EXPERT_IN, EXPERT_OUT, IN_PROJ, OUT_PROJ
+from repro.models.layers import Execution, as_weight
+
+QUANTIZABLE = IN_PROJ | OUT_PROJ | EXPERT_IN | EXPERT_OUT | {"unembed"}
+
+
+def test_weight_roundtrip_error_bound():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32)) * 0.1
+    packed = quantize_weight_int8(w)
+    assert packed["q"].dtype == jnp.int8
+    assert packed["s"].shape == (1, 32)
+    w_hat = as_weight(packed, jnp.float32)
+    # per-channel symmetric int8: error <= scale/2 element-wise
+    err = jnp.abs(w_hat - w)
+    assert bool(jnp.all(err <= packed["s"][0] * 0.5 + 1e-7))
+
+
+def test_stacked_weight_scales_per_layer():
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 8))
+    packed = quantize_weight_int8(w)
+    assert packed["q"].shape == (4, 16, 8)
+    assert packed["s"].shape == (4, 1, 8)
+
+
+def test_int8_forward_close_to_bf16():
+    """A whole transformer forward with int8-packed weights stays close."""
+    spec = get_arch("granite_8b")
+    model = spec.model_module()
+    cfg = spec.smoke_cfg
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = (jnp.arange(2 * 16).reshape(2, 16) * 3 + 1) % cfg.vocab
+    exe = Execution(compute_dtype="float32")
+    logits_ref, _ = model.forward(params, toks, cfg, exe)
+    qparams = quantize_params_int8(params, QUANTIZABLE)
+    logits_q, _ = model.forward(qparams, toks, cfg, exe)
+    # int8 weights + bf16 non-projections: expect close logits, same top-1
+    cos = jnp.sum(logits_ref * logits_q) / (
+        jnp.linalg.norm(logits_ref) * jnp.linalg.norm(logits_q) + 1e-9)
+    assert float(cos) > 0.99
+    agree = jnp.mean((jnp.argmax(logits_ref, -1)
+                      == jnp.argmax(logits_q, -1)).astype(jnp.float32))
+    assert float(agree) > 0.9
+
+
+def test_int8_decode_runs():
+    spec = get_arch("granite_8b")
+    model = spec.model_module()
+    cfg = spec.smoke_cfg
+    params = quantize_params_int8(
+        model.init(jax.random.PRNGKey(0), cfg), QUANTIZABLE)
+    exe = Execution(compute_dtype="float32")
+    cache = model.init_cache(cfg, 2, 8, jnp.float32)
+    toks = jnp.ones((2, 1), jnp.int32)
+    logits, cache = model.decode_step(params, cache, toks, cfg, exe)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["len"][0]) == 1
+
+
+def test_int8_params_bytes_halved():
+    spec = get_arch("granite_8b")
+    model = spec.model_module()
+    params = model.init(jax.random.PRNGKey(0), spec.smoke_cfg)
+    qparams = quantize_params_int8(params, QUANTIZABLE)
+
+    def nbytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    # int8 projections + f32 scales + bf16 rest << f32 original
+    assert nbytes(qparams) < 0.45 * nbytes(params)

@@ -1,0 +1,95 @@
+"""Executable paper networks (models/paper_nets.py) + AIMClib semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aimc import AimcConfig
+from repro.core.aimclib import AimcContext
+from repro.core import isa
+from repro.models import paper_nets
+
+CLEAN = AimcConfig(tile_rows=1024, impl="ref")
+
+
+def test_mlp_aimc_close_to_digital():
+    p = paper_nets.mlp_init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 1024))
+    y_dig = paper_nets.mlp_forward_digital(p, x)
+    y_ana, ctx = paper_nets.mlp_forward_aimc(p, x, CLEAN)
+    rel = float(jnp.linalg.norm(y_ana - y_dig)
+                / jnp.maximum(jnp.linalg.norm(y_dig), 1e-9))
+    assert rel < 0.06
+    counts = ctx.instruction_counts()
+    # one queue+process+dequeue sweep per layer per inference
+    assert counts.process == 2
+    assert counts.queue == 2 * (1024 // 4)
+
+
+def test_lstm_gate_packing_equivalence():
+    """map_gates (§VIII-D, one CM_PROCESS for all four gates) must equal the
+    four separate MVMs up to quantization granularity."""
+    nh, xd = 64, 10
+    p = paper_nets.lstm_init(jax.random.PRNGKey(0), nh, xd, 8)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 3, xd))
+    y_dig = paper_nets.lstm_forward_digital(p, xs, nh)
+    y_ana, ctx = paper_nets.lstm_forward_aimc(p, xs, nh, CLEAN)
+    assert y_ana.shape == y_dig.shape
+    # softmax outputs: compare distributions
+    err = float(jnp.max(jnp.abs(y_ana - y_dig)))
+    assert err < 0.2
+    top_match = float(jnp.mean((jnp.argmax(y_ana, -1)
+                                == jnp.argmax(y_dig, -1)).astype(jnp.float32)))
+    assert top_match > 0.7
+
+
+def test_cnn_im2col_equals_conv():
+    """The crossbar conv (im2col x weight-matrix) == jax.lax conv."""
+    p = paper_nets.cnn_init(jax.random.PRNGKey(0), "F", img=64, n_classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64, 3))
+    w = p["convs"][0]                      # [11, 11, 3, 64] stride 4
+    patches, ho, wo = paper_nets._im2col(x, 11, 4, 0)
+    y_mat = (patches.reshape(-1, 11 * 11 * 3) @ w.reshape(-1, 64))
+    y_mat = y_mat.reshape(2, ho, wo, 64)
+    y_conv = jax.lax.conv_general_dilated(
+        x, w, (4, 4), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y_mat), np.asarray(y_conv),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_cnn_forward_shapes_digital_vs_aimc():
+    p = paper_nets.cnn_init(jax.random.PRNGKey(0), "F", img=64, n_classes=10)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 64, 3))
+    y_dig = paper_nets.cnn_forward(p, x, "F", None)
+    y_ana, ctx = paper_nets.cnn_forward(p, x, "F", CLEAN,
+                                        key=jax.random.PRNGKey(2))
+    assert y_dig.shape == y_ana.shape == (2, 10)
+    assert np.allclose(np.asarray(jnp.sum(y_dig, -1)), 1.0, atol=1e-4)
+    # conv layers mapped -> 5 matrices on the context
+    assert len(ctx.tile_map().blocks_for("conv0")) >= 1
+
+
+def test_aimclib_instruction_flow():
+    ctx = AimcContext(AimcConfig(tile_rows=128, impl="ref"))
+    w = jax.random.normal(jax.random.PRNGKey(0), (128, 32)) * 0.1
+    ctx.map_matrix("fc", w)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 128))
+    ctx.queue_vector("fc", x)
+    ctx.process("fc")
+    y = ctx.dequeue_vector("fc")
+    assert y.shape == (4, 32)
+    with pytest.raises(RuntimeError):
+        ctx.dequeue_vector("fc")           # double dequeue
+    with pytest.raises(KeyError):
+        ctx.linear("nope", x)
+
+
+def test_isa_counts():
+    c = isa.mvm_counts(1024, 1024, 512)
+    assert c.process == 2                  # two row blocks
+    assert c.queue == 256                  # 1024/4 packed registers
+    assert c.dequeue == 2 * 256
+    assert c.queue_bytes == 1024
+    total = c + c.scaled(2)
+    assert total.process == 6

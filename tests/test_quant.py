@@ -1,0 +1,71 @@
+"""Property tests for the DAC/ADC fixed-point math (core/quant.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (QMAX, QMIN, adc_quantize, adc_step_lsb,
+                              dequantize, quantize, sym_scale)
+
+floats = st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                   allow_infinity=False, width=32)
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_range(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    s = sym_scale(x)
+    q = quantize(x, s)
+    assert q.dtype == jnp.int8
+    assert int(q.min()) >= QMIN and int(q.max()) <= QMAX
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_error_bound(vals):
+    """|x - dequant(quant(x))| <= scale/2 element-wise (round-to-nearest)."""
+    x = jnp.asarray(vals, jnp.float32)
+    s = sym_scale(x)
+    err = jnp.abs(x - dequantize(quantize(x, s), s))
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+@given(st.lists(floats, min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_sym_scale_fits(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    s = sym_scale(x)
+    assert float(jnp.max(jnp.abs(x / s))) <= QMAX + 1e-3
+
+
+def test_sym_scale_axis():
+    x = jnp.asarray([[1.0, -2.0], [4.0, 0.5]], jnp.float32)
+    s = sym_scale(x, axis=0)
+    np.testing.assert_allclose(np.asarray(s).ravel(),
+                               [4.0 / QMAX, 2.0 / QMAX], rtol=1e-6)
+
+
+def test_quantize_negation_symmetry():
+    """Symmetric range: quant(-x) == -quant(x) (PCM pair encoding)."""
+    x = jnp.linspace(-3, 3, 101)
+    s = sym_scale(x)
+    np.testing.assert_array_equal(np.asarray(quantize(-x, s)),
+                                  -np.asarray(quantize(x, s)))
+
+
+@given(st.integers(min_value=1, max_value=4096),
+       st.floats(min_value=0.1, max_value=4.0))
+@settings(max_examples=50, deadline=None)
+def test_adc_step_positive_monotone(rows, alpha):
+    s = adc_step_lsb(rows, alpha)
+    assert s >= 1.0
+    assert adc_step_lsb(rows * 4, alpha) >= s  # grows with sqrt(M)
+
+
+def test_adc_quantize_saturates():
+    step = 100.0
+    acc = jnp.asarray([1e9, -1e9, 0.0, 150.0])
+    codes = adc_quantize(acc, jnp.float32(step))
+    np.testing.assert_array_equal(np.asarray(codes), [QMAX, QMIN, 0, 2])
+    assert codes.dtype == jnp.int32

@@ -1,0 +1,79 @@
+"""Sharding-rule tests: PartitionSpec assignment + divisibility fitting."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_mesh
+from repro.launch.shardings import (fit_spec, get_param_specs, param_spec)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _axis_product(mesh, entry):
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+@given(st.tuples(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64)))
+@settings(max_examples=60, deadline=None)
+def test_fit_spec_always_divides(shape):
+    mesh = make_mesh((1, 1), ("data", "model"))
+    # emulate larger mesh axis sizes via a fake mesh-shape mapping
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    spec = P(("pod", "data"), "model", None)
+    fitted = fit_spec(spec, shape, FakeMesh())
+    for d, entry in enumerate(fitted):
+        if entry is None:
+            continue
+        assert shape[d] % _axis_product(FakeMesh(), entry) == 0
+
+
+def test_fit_spec_keeps_dividing_prefix():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    # 32 divides pod*data; keep both
+    assert fit_spec(P(("pod", "data")), (32,), FakeMesh()) == P(("pod", "data"))
+    # 2 divides pod only; keep the prefix
+    assert fit_spec(P(("pod", "data")), (2,), FakeMesh()) == P("pod")
+    # 3 divides nothing
+    assert fit_spec(P(("pod", "data")), (3,), FakeMesh()) == P()
+    # vocab 151655 is not divisible by 16
+    assert fit_spec(P("data", "model"), (896, 151655), FakeMesh()) == P("data")
+
+
+def test_param_spec_rules(mesh):
+    fsdp = ("data",)
+    w = jnp.zeros((4, 128, 256))
+    assert param_spec((_K("wq"),), w, fsdp) == P(None, ("data",), "model")
+    assert param_spec((_K("wo"),), w, fsdp) == P(None, "model", ("data",))
+    e = jnp.zeros((4, 8, 128, 256))
+    assert param_spec((_K("we_gate"),), e, fsdp) == \
+        P(None, "model", ("data",), None)
+    norm = jnp.zeros((4, 128))
+    assert param_spec((_K("ln1"),), norm, fsdp) == P(None, None)
+    emb = jnp.zeros((1000, 64))
+    assert param_spec((_K("embed"),), emb, fsdp) == P("model", ("data",))
+
+
+class _K:
+    def __init__(self, key):
+        self.key = key
+
+
+def test_get_param_specs_tree_matches(mesh):
+    params = {"blocks": {"wq": jnp.zeros((2, 8, 8)),
+                         "ln1": jnp.zeros((2, 8))},
+              "embed": jnp.zeros((100, 8))}
+    specs = get_param_specs(params, mesh)
+    assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)) \
+        == jax.tree.structure(params)

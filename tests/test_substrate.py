@@ -1,0 +1,220 @@
+"""Substrate-layer tests: data pipeline, optimizers, checkpointing,
+fault tolerance, schedules."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.data.pipeline import DataConfig, DataIterator, host_batch
+from repro.optim import make_optimizer
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.fault_tolerance import (Heartbeat, StragglerMonitor,
+                                           elastic_mesh_shapes,
+                                           resilient_step)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+CFG = DataConfig(vocab=1000, seq_len=64, global_batch=8)
+
+
+def test_data_deterministic():
+    b1 = host_batch(CFG, step=3, shard=0, n_shards=2)
+    b2 = host_batch(CFG, step=3, shard=0, n_shards=2)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_data_step_and_shard_vary():
+    b0 = host_batch(CFG, 0, 0, 2)
+    b1 = host_batch(CFG, 1, 0, 2)
+    b0s1 = host_batch(CFG, 0, 1, 2)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    assert not np.array_equal(b0["tokens"], b0s1["tokens"])
+
+
+def test_data_shapes_and_labels():
+    b = host_batch(CFG, 0, 0, 2)
+    assert b["tokens"].shape == (4, 64)      # global 8 / 2 shards
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert b["tokens"].max() < CFG.vocab
+
+
+def test_iterator_restart_exact():
+    it = DataIterator(CFG, n_shards=2, shard=1)
+    batches = [next(it) for _ in range(3)]
+    state = it.state()
+    it2 = DataIterator(CFG, n_shards=2, shard=1)
+    it2.restore(state)
+    b3a = next(it)
+    b3b = next(it2)
+    np.testing.assert_array_equal(b3a["tokens"], b3b["tokens"])
+    assert state == {"step": 3}
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_reduces_quadratic(name):
+    init, update, _ = make_optimizer(name, lr=5e-2)
+    w_true = jnp.asarray([1.0, -2.0, 3.0])
+    # nonzero start: Adafactor's relative step size scales with RMS(param)
+    params = {"w": jnp.ones((3,)), "m": 0.1 * jnp.ones((2, 3))}
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - w_true) ** 2) + jnp.sum(p["m"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, metrics = update(g, state, params)
+    assert float(loss(params)) < 0.2 * l0
+    assert "grad_norm" in metrics
+
+
+def test_adamw_moment_dtype():
+    init, update, _ = make_optimizer("adamw", moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((4, 4))}
+    state = init(params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+
+
+def test_adafactor_factored_shapes():
+    init, _, _ = make_optimizer("adafactor")
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    state = init(params)
+    leaves = {"/".join(str(getattr(k, "key", k)) for k in p): v.shape
+              for p, v in jax.tree_util.tree_flatten_with_path(state)[0]}
+    # factored second moment: row + col vectors, not the full matrix
+    assert any(v == (8,) for v in leaves.values())
+    assert any(v == (16,) for v in leaves.values())
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(jnp.asarray(0))) == 0.0
+    peak = float(warmup_cosine(jnp.asarray(200)))
+    assert peak == pytest.approx(1.0, rel=1e-3)
+    end = float(warmup_cosine(jnp.asarray(10000)))
+    assert end == pytest.approx(0.1, rel=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(7)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    checkpoint.save(str(tmp_path), 7, t, extra={"loss": 1.5})
+    assert checkpoint.latest_step(str(tmp_path)) == 7
+    restored, extra = checkpoint.restore(str(tmp_path), 7, t)
+    assert extra == {"loss": 1.5}
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_atomic_no_partial(tmp_path):
+    """A stray .tmp dir (simulated crash) must not count as a checkpoint."""
+    t = _tree()
+    checkpoint.save(str(tmp_path), 1, t)
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert checkpoint.latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_gc_keeps_three(tmp_path):
+    t = _tree()
+    for s in range(5):
+        checkpoint.save(str(tmp_path), s, t)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(kept) == 3
+    assert checkpoint.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_restore_latest_empty(tmp_path):
+    step, tree, extra = checkpoint.restore_latest(str(tmp_path), _tree())
+    assert step is None and tree is None
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    checkpoint.save(str(tmp_path), 1, t)
+    bad = {"params": {"w": jnp.zeros((2, 2)), "b": t["params"]["b"]},
+           "step": t["step"]}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        checkpoint.restore(str(tmp_path), 1, bad)
+
+
+def test_checkpoint_save_async(tmp_path):
+    t = _tree()
+    th = checkpoint.save_async(str(tmp_path), 3, t)
+    th.join(timeout=30)
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_resilient_step_retries():
+    calls = []
+
+    def flaky(x):
+        calls.append(x)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return x + 1
+
+    wrapped = resilient_step(flaky, max_retries=3)
+    assert wrapped(1) == 2
+    assert len(calls) == 3
+
+
+def test_resilient_step_gives_up():
+    def broken(x):
+        raise RuntimeError("permanent")
+
+    wrapped = resilient_step(broken, max_retries=1)
+    with pytest.raises(RuntimeError):
+        wrapped(0)
+
+
+def test_straggler_monitor():
+    flagged = []
+    m = StragglerMonitor(threshold=2.0, warmup=2,
+                         on_straggler=lambda s, dt, ew: flagged.append(s))
+    for i in range(6):
+        m.record(i, 1.0)
+    assert m.record(6, 5.0) is True            # 5x the EWMA
+    assert flagged == [6]
+    ew_before = m.ewma
+    m.record(7, 5.0)
+    assert m.ewma == ew_before                 # stragglers don't poison EWMA
+
+
+def test_heartbeat_roundtrip(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb.json"))
+    hb.beat(42, loss=3.2)
+    got = hb.read()
+    assert got["step"] == 42 and got["loss"] == 3.2
+
+
+def test_elastic_mesh_shapes():
+    shapes = elastic_mesh_shapes(128, 16)
+    assert (8, 16) in shapes and (128, 1) in shapes
+    for d, m in shapes:
+        assert d * m == 128

@@ -1,0 +1,79 @@
+"""Property tests for the crossbar tile allocator (AIMClib mapMatrix)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tile import TileAllocator, plan_linear, split_matrix
+
+
+def _no_overlap(tm):
+    """No two placements on the same tile may overlap."""
+    by_tile = {}
+    for p in tm.placements:
+        by_tile.setdefault(p.tile_id, []).append(p)
+    for ps in by_tile.values():
+        for i, a in enumerate(ps):
+            for b in ps[i + 1:]:
+                sep = (a.row_off + a.rows <= b.row_off or
+                       b.row_off + b.rows <= a.row_off or
+                       a.col_off + a.cols <= b.col_off or
+                       b.col_off + b.cols <= a.col_off)
+                if not sep:
+                    return False
+    return True
+
+
+dims = st.integers(min_value=1, max_value=3000)
+
+
+@given(dims, dims, st.integers(min_value=64, max_value=1024),
+       st.integers(min_value=64, max_value=1024))
+@settings(max_examples=60, deadline=None)
+def test_single_matrix_placement(rows, cols, tr, tc):
+    tm = plan_linear("w", rows, cols, tr, tc)
+    # every element of the matrix is covered exactly once
+    covered = sum(p.rows * p.cols for p in tm.placements)
+    assert covered == rows * cols
+    # placements stay within the tile
+    for p in tm.placements:
+        assert 0 <= p.row_off and p.row_off + p.rows <= tr
+        assert 0 <= p.col_off and p.col_off + p.cols <= tc
+    assert _no_overlap(tm)
+    assert 0.0 < tm.utilization <= 1.0
+    assert tm.devices_used() == 2 * rows * cols   # PCM pair per weight
+
+
+@given(st.lists(st.tuples(dims, dims), min_size=1, max_size=6),
+       st.integers(min_value=128, max_value=1024))
+@settings(max_examples=40, deadline=None)
+def test_many_matrices_pack(matrices, tile):
+    alloc = TileAllocator(tile, tile)
+    for i, (r, c) in enumerate(matrices):
+        alloc.map_matrix(f"m{i}", r, c)
+    tm = alloc.finalize()
+    assert _no_overlap(tm)
+    covered = sum(p.rows * p.cols for p in tm.placements)
+    assert covered == sum(r * c for r, c in matrices)
+    # lower bound on tile count: total area / tile area
+    import math
+    assert tm.n_tiles >= math.ceil(covered / (tile * tile))
+
+
+def test_split_matrix_tiles_exact():
+    blocks = list(split_matrix(1000, 700, 512, 512))
+    assert sum(r * c for (_, _, r, c) in blocks) == 1000 * 700
+    assert len(blocks) == 2 * 2
+
+
+def test_lstm_gates_side_by_side():
+    """The paper's §VIII-D trick: 4 gates of a 306x256 cell share one tile."""
+    alloc = TileAllocator(612, 1074)
+    alloc.map_side_by_side([f"g{i}" for i in range(4)], 306, 256)
+    tm = alloc.finalize()
+    assert tm.n_tiles == 1
+    assert _no_overlap(tm)
+
+
+def test_allocator_rejects_bad_dims():
+    import pytest
+    with pytest.raises(ValueError):
+        TileAllocator(0, 128)
