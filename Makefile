@@ -1,0 +1,22 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: tier1 test bench serve-aimc serve-aimc-reprogram
+
+# Tier-1 verify: the gate every PR must keep green.
+tier1:
+	$(PY) -m pytest -x -q
+
+test:
+	$(PY) -m pytest -q
+
+bench:
+	$(PY) -m benchmarks.run
+
+# Program-once AIMC serving vs the legacy per-call-reprogram path (A/B for
+# the program API speedup; see DESIGN.md §2).
+serve-aimc:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --exec aimc
+
+serve-aimc-reprogram:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --exec aimc --reprogram

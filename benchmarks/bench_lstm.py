@@ -11,6 +11,8 @@ AIMC cases 1-4. Checks (§VIII headline claims):
 
 from __future__ import annotations
 
+import time
+
 from benchmarks.common import Check, fmt_e, fmt_t, table
 from repro.core.costmodel import HIGH_POWER, LOW_POWER, evaluate, speedup
 from repro.core.workloads import lstm_workloads
@@ -86,7 +88,76 @@ def checks(results=None) -> list[Check]:
     ]
 
 
+def run_wallclock(nh: int = 750, steps: int = 16, batch: int = 8,
+                  iters: int = 5, verbose: bool = True) -> dict:
+    """Measured program-once vs per-call-reprogram decode on the PTB LSTM.
+
+    One decode step == one jitted call, mirroring the serving loop: the
+    programmed path holds the four gate matrices stationary (side-by-side
+    tenant, §VIII-D — programmed ONCE before the loop); the reprogram path
+    re-quantizes + re-programs the cell weights on EVERY step (what
+    `serve --exec aimc` paid per token before the program API)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.aimc import (AimcConfig, aimc_apply, aimc_linear_ste,
+                                 program_linear)
+    from repro.models.paper_nets import _lstm_cell_math, lstm_init
+
+    cfg = AimcConfig(tile_rows=512, impl="ref")
+    params = lstm_init(jax.random.PRNGKey(0), nh)
+    w_cell = jnp.concatenate([params["w_f"], params["w_i"], params["w_g"],
+                              params["w_o"]], axis=1)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (steps, batch, 50))
+
+    st_cell = program_linear(w_cell, cfg)       # CM_INITIALIZE, once
+    st_y = program_linear(params["w_y"], cfg)
+
+    @jax.jit
+    def step_programmed(st_cell, st_y, h, c, x_t):
+        gates = aimc_apply(st_cell, jnp.concatenate([h, x_t], -1), cfg)
+        h, c = _lstm_cell_math(gates, c, nh)
+        return h, c, jax.nn.softmax(aimc_apply(st_y, h, cfg), -1)
+
+    @jax.jit
+    def step_reprogram(w_cell, w_y, h, c, x_t):
+        gates = aimc_linear_ste(jnp.concatenate([h, x_t], -1), w_cell, None,
+                                cfg)
+        h, c = _lstm_cell_math(gates, c, nh)
+        return h, c, jax.nn.softmax(aimc_linear_ste(h, w_y, None, cfg), -1)
+
+    def _loop(step, *weights):
+        h = jnp.zeros((batch, nh))
+        c = jnp.zeros((batch, nh))
+        for t in range(steps):
+            h, c, y = step(*weights, h, c, xs[t])
+        return y
+
+    def _time(step, *weights):
+        jax.block_until_ready(_loop(step, *weights))    # compile + warm
+        t0 = time.time()
+        for _ in range(iters):
+            out = _loop(step, *weights)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / (iters * steps)
+
+    t_prog = _time(step_programmed, st_cell, st_y)
+    t_reprog = _time(step_reprogram, w_cell, params["w_y"])
+    out = {"t_programmed": t_prog, "t_reprogram": t_reprog,
+           "speedup": t_reprog / t_prog}
+    if verbose:
+        print(table(f"LSTM n_h={nh} measured decode, batch={batch} "
+                    f"(simulated crossbars, this host, per step)",
+                    ["path", "time/step", "vs reprogram"],
+                    [["program-once (apply)", fmt_t(t_prog),
+                      f"{out['speedup']:.2f}x"],
+                     ["per-step reprogram (seed)", fmt_t(t_reprog), "1.0x"]]))
+        print()
+    return out
+
+
 if __name__ == "__main__":
     res = run()
+    run_wallclock()
     for c in checks(res):
         print(c.row())

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: reproducible verify command with pinned deps.
+#
+#   ./ci.sh            run the tier-1 test suite
+#   ./ci.sh --install  pip-install pinned deps first (no-op in the baked image)
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if [[ "${1:-}" == "--install" ]]; then
+    python -m pip install -r requirements.txt
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q

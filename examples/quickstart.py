@@ -68,3 +68,23 @@ logits, _ = model.forward(params, toks, spec.smoke_cfg, exe,
                           jax.random.PRNGKey(2))
 print(f"llama3.2-3b (smoke cfg) forward through simulated crossbars: "
       f"logits {logits.shape}, finite={bool(jnp.all(jnp.isfinite(logits)))}")
+
+# -- 6. program once, apply many (the deployment model) -----------------------
+# The forward above re-programs every weight on every call (the noise-aware
+# TRAINING path). Serving programs the whole network ONCE — program_model
+# walks the param tree, maps every stationary projection per the MappingPlan,
+# and install() substitutes the programmed states so the same model code runs
+# apply-only (CM_INITIALIZE leaves the hot path entirely).
+from repro.core.program import MappingPlan, program_model
+
+serve_cfg = AimcConfig(impl="ref")
+program = program_model(params, MappingPlan(), serve_cfg,
+                        jax.random.PRNGKey(3))
+print(program.summary())
+served = program.install(params)
+exe_srv = Execution(mode="aimc", aimc=serve_cfg, compute_dtype="float32",
+                    programmed=True)
+logits2, _ = model.forward(served, toks, spec.smoke_cfg, exe_srv)
+print(f"programmed forward (no re-programming): logits {logits2.shape}; "
+      f"CM_INITIALIZE stays {program.initialize_counts().initialize} "
+      f"no matter how many tokens follow")

@@ -4,10 +4,13 @@
 
 ALPINE is an inference paper, so the end-to-end example is a serving run:
 a batch of requests is prefilled and decoded against a KV cache, once with
-digital weights and once through the simulated AIMC crossbars (weights
+digital weights and once through the simulated AIMC crossbars. The AIMC run
+uses the program-once/apply-many path (`core.program`): the network is
 programmed ONCE — CM_INITIALIZE is outside the serving loop — then every
-token pays only queue/process/dequeue). Output agreement and the analytical
-latency/energy estimate for the paper's hardware are reported.
+token pays only queue/process/dequeue, and the CM_* totals are printed from
+the program's static accounting. (`--reprogram` would restore the legacy
+per-token re-programming path for A/B timing.) Output agreement and the
+analytical latency/energy estimate for the paper's hardware are reported.
 
 This drives the same `repro.launch.serve` module a production launch uses;
 scale up by dropping --smoke and pointing --mesh at a pod.
@@ -39,12 +42,16 @@ print(f"\ntoken agreement digital vs AIMC: {agree:.0%} "
 # analytical serving cost on the paper's hardware (per generated token)
 from repro.core.costmodel import HIGH_POWER, Op, Stage, Workload, evaluate
 
-spec_cfg = {"k": 64, "n": 64}  # smoke-config layer
-tok_dig = evaluate(Workload("t", ((Stage(
-    (Op("mvm", k=4096, n=4096, count=7),), weights_bytes=7 * 4096 * 4096),),)),
+# a granite-8b-like layer stack: 7 [4096x4096]-equivalent MVMs per token
+tok_dig = evaluate(
+    Workload("tok_dig", phases=((Stage(
+        ops=(Op("mvm", k=4096, n=4096, count=7),),
+        weights_bytes=7 * 4096 * 4096),),)),
     HIGH_POWER)
-tok_ana = evaluate(Workload("t", ((Stage(
-    (Op("mvm", k=4096, n=4096, count=7, aimc=True),),),),), HIGH_POWER)
+tok_ana = evaluate(
+    Workload("tok_ana", phases=((Stage(
+        ops=(Op("mvm", k=4096, n=4096, count=7, aimc=True),),),),)),
+    HIGH_POWER)
 print(f"analytical per-token cost, granite-8b-like layer stack on the "
       f"paper's high-power system:\n"
       f"  digital: {tok_dig.time_s * 1e3:.2f} ms, {tok_dig.energy_j:.3f} J\n"

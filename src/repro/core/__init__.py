@@ -1,6 +1,7 @@
 """ALPINE core: the paper's contribution as composable JAX modules.
 
   aimc      — tile programming / inference / noise-aware training (STE)
+  program   — program-once/apply-many model API (MappingPlan, AimcProgram)
   quant     — DAC/ADC fixed-point math (shared by kernel and oracle)
   noise     — PCM non-idealities (programming / read / drift)
   tile      — crossbar tile allocation (AIMClib mapMatrix)
@@ -12,10 +13,15 @@
 """
 
 from repro.core.aimc import (AimcConfig, AimcLinearState, aimc_apply,
-                             aimc_linear, aimc_linear_ste, program_linear)
+                             aimc_linear, aimc_linear_ste, program_linear,
+                             program_stacked)
 from repro.core.noise import DISABLED, NoiseModel
+from repro.core.program import (AimcProgram, CapacityError, MappingPlan,
+                                ProgramBuilder, program_model)
 
 __all__ = [
     "AimcConfig", "AimcLinearState", "aimc_apply", "aimc_linear",
-    "aimc_linear_ste", "program_linear", "NoiseModel", "DISABLED",
+    "aimc_linear_ste", "program_linear", "program_stacked",
+    "AimcProgram", "CapacityError", "MappingPlan", "ProgramBuilder",
+    "program_model", "NoiseModel", "DISABLED",
 ]

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -53,11 +52,31 @@ class AimcConfig:
 
 
 # A programmed linear layer: conductance codes + effective scales.
-class AimcLinearState(NamedTuple):
-    w_q: jnp.ndarray   # int8 [KB, M, Np]
-    s_w: jnp.ndarray   # f32  [KB, Np] (drift gain/compensation folded in)
+#
+# Registered as a pytree with STATIC (k, n) metadata so programmed states can
+# live inside parameter trees: `lax.scan` slices a stacked [L, ...] state to
+# the per-layer state, `vmap` maps over expert stacks, and `isinstance`
+# dispatch in `models.layers.linear` still works on the traced container.
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("w_q", "s_w"), meta_fields=("k", "n"))
+@dataclasses.dataclass(frozen=True)
+class AimcLinearState:
+    w_q: jnp.ndarray   # int8 [..., KB, M, Np] (leading dims = layer/expert stack)
+    s_w: jnp.ndarray   # f32  [..., KB, Np] (drift gain/compensation folded in)
     k: int             # logical in_features
     n: int             # logical out_features
+
+    @property
+    def stack_shape(self) -> tuple[int, ...]:
+        """Leading stack dims (empty for a single programmed matrix)."""
+        return tuple(self.w_q.shape[:-3])
+
+    @property
+    def instances(self) -> int:
+        out = 1
+        for d in self.stack_shape:
+            out *= d
+        return out
 
 
 def _pad_to(v: int, m: int) -> int:
@@ -86,6 +105,28 @@ def program_linear(w: jnp.ndarray, cfg: AimcConfig, key: jax.Array | None = None
 
     gain = cfg.noise.drift_gain() * cfg.noise.compensation_gain()
     return AimcLinearState(w_q=w_q, s_w=s_w * gain, k=k, n=n)
+
+
+def program_stacked(w: jnp.ndarray, cfg: AimcConfig,
+                    key: jax.Array | None = None) -> AimcLinearState:
+    """CM_INITIALIZE for a stacked weight: [..., K, N] -> stacked state.
+
+    Leading dims (layer stacks scanned by `lax.scan`, expert stacks consumed
+    by `vmap`) are programmed independently — each instance is a separate
+    crossbar tenant with its own programming-noise draw."""
+    lead = w.shape[:-2]
+    if not lead:
+        return program_linear(w, cfg, key)
+    flat = w.reshape((-1,) + w.shape[-2:])
+    if key is None:
+        st = jax.vmap(lambda wi: program_linear(wi, cfg, None))(flat)
+    else:
+        keys = jax.random.split(key, flat.shape[0])
+        st = jax.vmap(lambda wi, ki: program_linear(wi, cfg, ki))(flat, keys)
+    return AimcLinearState(
+        w_q=st.w_q.reshape(lead + st.w_q.shape[1:]),
+        s_w=st.s_w.reshape(lead + st.s_w.shape[1:]),
+        k=st.k, n=st.n)
 
 
 def aimc_apply(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig,
@@ -163,7 +204,9 @@ aimc_linear_ste.defvjp(_aimc_fwd, _aimc_bwd)
 
 def aimc_linear(x, w, cfg: AimcConfig, key: jax.Array | None = None,
                 state: AimcLinearState | None = None):
-    """Front door used by the model zoo.
+    """Low-level front door (models route through `models.layers.linear`,
+    which also accepts an `AimcLinearState` directly in place of `w` — the
+    program-once/apply-many path built by `core.program.program_model`).
 
     * training / on-the-fly:     aimc_linear(x, w, cfg, key)        [STE]
     * pre-programmed inference:  aimc_linear(x, None, cfg, key, state)
@@ -171,4 +214,6 @@ def aimc_linear(x, w, cfg: AimcConfig, key: jax.Array | None = None,
     """
     if state is not None:
         return aimc_apply(state, x, cfg, key)
+    if isinstance(w, AimcLinearState):
+        return aimc_apply(w, x, cfg, key)
     return aimc_linear_ste(x, w, key, cfg)

@@ -15,8 +15,11 @@ Mirrors the C library's surface:
     mode — which is exactly `kernels/ref.py` (the oracle doubles as the
     paper's debug-on-host checker program).
 
-The context also keeps per-matrix CM_* instruction counts so applications get
-cost-model accounting for free.
+The context is a thin dynamic shell over `core.program.ProgramBuilder`: the
+same program-once registry that `program_model` builds for whole models backs
+the hand-written mapMatrix workloads here, so CM_* instruction counts flow
+through one accounting path — ``ctx.program()`` hands the registry (an
+`AimcProgram` pytree) to serving stats and the `bench_*` cost accounting.
 """
 
 from __future__ import annotations
@@ -27,18 +30,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import isa
-from repro.core.aimc import AimcConfig, AimcLinearState, aimc_apply, program_linear
-from repro.core.tile import TileAllocator, TileMap
+from repro.core.aimc import AimcConfig, AimcLinearState, aimc_apply
+from repro.core.program import AimcProgram, ProgramBuilder
+from repro.core.tile import TileMap
 
 
 class AimcContext:
     """One context ~ the set of AIMC tiles private to a core (paper Fig. 2)."""
 
-    def __init__(self, cfg: AimcConfig, key: jax.Array | None = None):
+    def __init__(self, cfg: AimcConfig, key: jax.Array | None = None,
+                 n_contexts: int = 1, tiles_per_context: int | None = None):
         self.cfg = cfg
         self._key = key if key is not None else jax.random.PRNGKey(0)
-        self._alloc = TileAllocator(cfg.tile_rows, cfg.tile_cols)
-        self._states: dict[str, AimcLinearState] = {}
+        self._builder = ProgramBuilder(cfg, n_contexts=n_contexts,
+                                       tiles_per_context=tiles_per_context)
         self._counts: dict[str, isa.CmCounts] = {}
         self._pending: dict[str, jnp.ndarray] = {}   # queued inputs per matrix
 
@@ -48,28 +53,15 @@ class AimcContext:
 
     # -- programming (CM_INITIALIZE) ----------------------------------------
     def map_matrix(self, name: str, w: jnp.ndarray) -> AimcLinearState:
-        if name in self._states:
-            raise ValueError(f"matrix {name!r} already mapped")
-        k, n = w.shape
-        self._alloc.map_matrix(name, k, n)
-        state = program_linear(jnp.asarray(w), self.cfg, self._next_key())
-        self._states[name] = state
-        self._counts[name] = isa.initialize_counts(k, n)
+        state = self._builder.add(name, jnp.asarray(w), self._next_key())
+        self._counts[name] = isa.initialize_counts(state.k, state.n)
         return state
 
     def map_gates(self, name: str, gates: Sequence[jnp.ndarray]) -> AimcLinearState:
         """Concatenate same-height gate matrices column-wise and map them as a
         single crossbar tenant — one queue + one process serves all gates."""
-        rows = gates[0].shape[0]
-        if any(g.shape[0] != rows for g in gates):
-            raise ValueError("gate matrices must share in_features")
-        self._alloc.map_side_by_side(
-            [f"{name}.g{i}" for i in range(len(gates))], rows, gates[0].shape[1]
-        )
-        w = jnp.concatenate([jnp.asarray(g) for g in gates], axis=1)
-        state = program_linear(w, self.cfg, self._next_key())
-        self._states[name] = state
-        self._counts[name] = isa.initialize_counts(*w.shape)
+        state = self._builder.add_gates(name, gates, self._next_key())
+        self._counts[name] = isa.initialize_counts(state.k, state.n)
         return state
 
     # -- the Fig. 4 instruction-level flow -----------------------------------
@@ -95,19 +87,36 @@ class AimcContext:
         return aimc_apply(st, x, self.cfg, self._next_key())
 
     # -- bookkeeping ----------------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self._builder._entries
+
     def _state(self, name: str) -> AimcLinearState:
-        if name not in self._states:
-            raise KeyError(f"matrix {name!r} was never mapped")
-        return self._states[name]
+        try:
+            return self._builder._entries[name]
+        except KeyError:
+            raise KeyError(f"matrix {name!r} was never mapped") from None
+
+    def program(self) -> AimcProgram:
+        """The registry built so far, as a jit-friendly `AimcProgram`."""
+        return self._builder.build()
 
     def tile_map(self) -> TileMap:
-        return self._alloc.finalize()
+        maps = self.program().tile_maps
+        if len(maps) == 1:
+            return maps[0]
+        # multi-context views merge for reporting: offset tile ids per context
+        placements, n_tiles = [], 0
+        for tm in maps:
+            for p in tm.placements:
+                placements.append(
+                    type(p)(p.matrix_id, p.tile_id + n_tiles, p.row_off,
+                            p.col_off, p.rows, p.cols, p.src_row, p.src_col))
+            n_tiles += tm.n_tiles
+        return TileMap(self.cfg.tile_rows, self.cfg.tile_cols,
+                       tuple(placements), n_tiles)
 
     def instruction_counts(self) -> isa.CmCounts:
-        total = isa.CmCounts()
-        for c in self._counts.values():
-            total = total + c
-        return total
+        return isa.total(self._counts.values())
 
 
 # -- digital helpers (run "on the CPU", paper keeps these out of the tile) ----

@@ -53,3 +53,11 @@ def mvm_counts(k: int, n: int, tile_rows: int) -> CmCounts:
 
 def initialize_counts(k: int, n: int) -> CmCounts:
     return CmCounts(initialize=k * n)
+
+
+def total(counts) -> CmCounts:
+    """Sum an iterable of CmCounts (the per-matrix ledgers of a context)."""
+    out = CmCounts()
+    for c in counts:
+        out = out + c
+    return out

@@ -1,0 +1,392 @@
+"""Program-once / apply-many: the model-level AIMC programming API.
+
+The paper's deployment model (§IV-B, Fig. 4) is weights-stationary: matrices
+are programmed onto crossbars ONCE (CM_INITIALIZE, outside the inference
+region of interest); inference afterwards is pure queue/process/dequeue
+traffic. This module makes that split first-class for whole models:
+
+  * ``MappingPlan``   — declares WHICH projections map to crossbars (name /
+    path patterns, per-layer predicate, minimum size) and WHERE (round-robin
+    over ``n_contexts`` cores, capacity-checked against `tile.TileAllocator`).
+  * ``program_model(params, plan, cfg, key)`` — walks a parameter pytree,
+    programs every selected weight (stacked layer/expert dims included) and
+    returns an ``AimcProgram``.
+  * ``AimcProgram``   — a jit-friendly, shardable pytree registry mapping
+    param-tree paths -> `AimcLinearState`. ``program.install(params)``
+    substitutes the programmed states into the parameter tree, after which
+    every ``models.layers.linear`` call transparently runs the apply-only
+    path (CM_QUEUE/PROCESS/DEQUEUE) — no re-programming on the hot path.
+    The program also carries the static CM_* accounting: CM_INITIALIZE totals
+    (paid once) and per-forward MVM instruction counts, consumed by
+    ``launch.serve`` stats and the benchmarks.
+  * ``ProgramBuilder`` — the incremental surface underneath both
+    ``program_model`` and ``aimclib.AimcContext`` (one builder context per
+    core, paper Fig. 2).
+
+Training is unchanged: without an installed program, ``Execution(mode="aimc")``
+keeps the on-the-fly STE path (noise-aware training).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.core.aimc import (AimcConfig, AimcLinearState, program_linear,
+                             program_stacked)
+from repro.core.tile import TileAllocator, TileMap
+
+
+class CapacityError(RuntimeError):
+    """A MappingPlan asked for more crossbar tiles than a context provides."""
+
+
+# ---------------------------------------------------------------------------
+# MappingPlan — which projections go to crossbars, and where
+# ---------------------------------------------------------------------------
+
+# Stationary-projection naming convention across the model zoo. Everything a
+# model routes through `layers.linear` matches one of these; embeddings, the
+# vocab matmul, norms/biases/gains, depthwise conv kernels and the sLSTM
+# recurrent block-diagonals stay digital (DESIGN.md §4 applicability
+# boundary). The MoE router is excluded explicitly: it is tiny and feeds
+# top-k control flow, which the paper keeps on the CPU.
+DEFAULT_INCLUDE = (r"w[qkvo]", r"w_\w+", r"we_\w+", r"wd_\w+", r"c[qkvo]")
+DEFAULT_EXCLUDE = (r"router", r"embed", r"unembed", r"conv_\w+", r"lam",
+                   r"r_zifo", r"b_\w+")
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingPlan:
+    """Declarative crossbar mapping policy (hashable; jit-static friendly).
+
+    ``include``/``exclude`` are regex patterns, full-matched against the leaf
+    name (last pytree key) — or against the whole ``/``-joined path when the
+    pattern contains a ``/``. ``predicate``, when given, has the final word:
+    it receives ``(path, shape)`` for every pattern-selected leaf and can veto
+    per layer/projection. ``n_contexts`` spreads matrices over several
+    per-core tile sets (paper Fig. 2, multi-context placement), least-loaded
+    first; ``tiles_per_context`` bounds each context's capacity.
+    """
+
+    include: tuple[str, ...] = DEFAULT_INCLUDE
+    exclude: tuple[str, ...] = DEFAULT_EXCLUDE
+    predicate: Callable[[str, tuple[int, ...]], bool] | None = None
+    min_features: int = 1          # skip matrices with K or N below this
+    n_contexts: int = 1
+    tiles_per_context: int | None = None
+
+    def __post_init__(self):
+        if self.n_contexts < 1:
+            raise ValueError("n_contexts must be >= 1")
+
+    def _matches(self, patterns: tuple[str, ...], path: str, name: str) -> bool:
+        for pat in patterns:
+            target = path if "/" in pat else name
+            if re.fullmatch(pat, target):
+                return True
+        return False
+
+    def selects(self, path: str, shape: tuple[int, ...]) -> bool:
+        """Should the float leaf at `path` (full stacked shape) be mapped?"""
+        if len(shape) < 2:
+            return False
+        name = path.rsplit("/", 1)[-1]
+        if not self._matches(self.include, path, name):
+            return False
+        if self._matches(self.exclude, path, name):
+            return False
+        k, n = shape[-2], shape[-1]
+        if min(k, n) < self.min_features:
+            return False
+        if self.predicate is not None and not self.predicate(path, shape):
+            return False
+        return True
+
+
+# ---------------------------------------------------------------------------
+# ProgramBuilder — incremental programming + tile allocation
+# ---------------------------------------------------------------------------
+
+class ProgramBuilder:
+    """Programs matrices one by one, packing tiles per context.
+
+    Runs at setup time (plain Python over static shapes) — never inside jit.
+    Placement is least-loaded-context first; `tiles_per_context` turns the
+    allocator into a hard capacity check.
+    """
+
+    def __init__(self, cfg: AimcConfig, n_contexts: int = 1,
+                 tiles_per_context: int | None = None):
+        self.cfg = cfg
+        self.tiles_per_context = tiles_per_context
+        self._allocs = [TileAllocator(cfg.tile_rows, cfg.tile_cols)
+                        for _ in range(n_contexts)]
+        self._entries: dict[str, AimcLinearState] = {}
+        self._context_of: dict[str, int] = {}
+
+    # -- placement ----------------------------------------------------------
+    def _pick_context(self) -> int:
+        return min(range(len(self._allocs)),
+                   key=lambda i: self._allocs[i].n_tiles)
+
+    def _place(self, name: str, desc: str, place) -> int:
+        """One placement path for every tenant kind: pick the least-loaded
+        context, run `place(alloc)` against its allocator, capacity-check,
+        record. Keeps matrix and gate placement policy identical."""
+        ctx = self._pick_context()
+        alloc = self._allocs[ctx]
+        place(alloc)
+        if (self.tiles_per_context is not None
+                and alloc.n_tiles > self.tiles_per_context):
+            raise CapacityError(
+                f"mapping {desc} overflows context {ctx}: "
+                f"{alloc.n_tiles} tiles > cap {self.tiles_per_context}")
+        self._context_of[name] = ctx
+        return ctx
+
+    def _allocate(self, name: str, k: int, n: int, instances: int) -> int:
+        def place(alloc):
+            for i in range(instances):
+                inst = name if instances == 1 else f"{name}[{i}]"
+                alloc.map_matrix(inst, k, n)
+
+        return self._place(name, f"{name!r} ({instances}x[{k}x{n}])", place)
+
+    # -- programming (CM_INITIALIZE) ----------------------------------------
+    def add(self, name: str, w: jnp.ndarray,
+            key: jax.Array | None = None) -> AimcLinearState:
+        """Program one (possibly stacked [..., K, N]) weight matrix."""
+        if name in self._entries:
+            raise ValueError(f"matrix {name!r} already mapped")
+        w = jnp.asarray(w)
+        if w.ndim < 2:
+            raise ValueError(f"matrix {name!r} must be at least 2-D")
+        instances = 1
+        for d in w.shape[:-2]:
+            instances *= d
+        self._allocate(name, w.shape[-2], w.shape[-1], instances)
+        state = program_stacked(w, self.cfg, key)
+        self._entries[name] = state
+        return state
+
+    def add_gates(self, name: str, gates: Sequence[jnp.ndarray],
+                  key: jax.Array | None = None) -> AimcLinearState:
+        """Place same-height gate matrices side by side — one queue + one
+        CM_PROCESS serves all of them (the paper's LSTM trick, §VIII-D)."""
+        if name in self._entries:
+            raise ValueError(f"matrix {name!r} already mapped")
+        rows = gates[0].shape[0]
+        if any(g.shape[0] != rows for g in gates):
+            raise ValueError("gate matrices must share in_features")
+        self._place(
+            name, f"gates {name!r} ({len(gates)}x[{rows}x{gates[0].shape[1]}])",
+            lambda alloc: alloc.map_side_by_side(
+                [f"{name}.g{i}" for i in range(len(gates))],
+                rows, gates[0].shape[1]))
+        w = jnp.concatenate([jnp.asarray(g) for g in gates], axis=1)
+        state = program_linear(w, self.cfg, key)
+        self._entries[name] = state
+        return state
+
+    # -- finalize -----------------------------------------------------------
+    def build(self) -> "AimcProgram":
+        names = tuple(sorted(self._entries))
+        return AimcProgram(
+            states=tuple(self._entries[n] for n in names),
+            names=names,
+            cfg=self.cfg,
+            contexts=tuple(self._context_of[n] for n in names),
+            tile_maps=tuple(a.finalize() for a in self._allocs),
+        )
+
+
+# ---------------------------------------------------------------------------
+# AimcProgram — the registry pytree
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class AimcProgram:
+    """Path -> programmed-state registry; pytree (states are the children).
+
+    Shardable/donatable like any parameter tree; all bookkeeping (names,
+    contexts, tile maps, the programming config) is static aux data, so a
+    program can cross a jit boundary or be closed over by one.
+    """
+
+    def __init__(self, states: tuple[AimcLinearState, ...],
+                 names: tuple[str, ...], cfg: AimcConfig,
+                 contexts: tuple[int, ...], tile_maps: tuple[TileMap, ...]):
+        self.states = tuple(states)
+        self.names = tuple(names)
+        self.cfg = cfg
+        self.contexts = tuple(contexts)
+        self.tile_maps = tuple(tile_maps)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return self.states, (self.names, self.cfg, self.contexts,
+                             self.tile_maps)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        names, cfg, contexts, tile_maps = aux
+        return cls(tuple(children), names, cfg, contexts, tile_maps)
+
+    # -- mapping ------------------------------------------------------------
+    @property
+    def entries(self) -> dict[str, AimcLinearState]:
+        return dict(zip(self.names, self.states))
+
+    def __contains__(self, path: str) -> bool:
+        return path in self.names
+
+    def __getitem__(self, path: str) -> AimcLinearState:
+        try:
+            return self.states[self.names.index(path)]
+        except ValueError:
+            raise KeyError(f"matrix {path!r} was never mapped") from None
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def install(self, params):
+        """Substitute programmed states into a parameter tree.
+
+        Mapped leaves are replaced by their `AimcLinearState`; everything
+        else passes through untouched. The result is what serving code feeds
+        the model: `layers.linear` dispatches on the state type, so every
+        zoo model runs apply-only AIMC with zero model-code changes."""
+        entries = self.entries
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=_is_quantized_leaf)
+        leaves = [entries.get(_path_key(path), leaf) for path, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def install_shape(self, params_shape):
+        """`install` over a ShapeDtypeStruct tree (for lowering/dry-runs)."""
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self)
+        entries = dict(zip(self.names, abstract.states))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params_shape, is_leaf=_is_quantized_leaf)
+        leaves = [entries.get(_path_key(path), leaf) for path, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- CM_* accounting (static: shapes fully determine the counts) --------
+    def initialize_counts(self) -> isa.CmCounts:
+        """CM_INITIALIZE for the whole program — paid once per session."""
+        return isa.total(
+            isa.initialize_counts(st.k, st.n).scaled(st.instances)
+            for st in self.states)
+
+    def mvm_counts(self, times: int = 1) -> isa.CmCounts:
+        """Queue/process/dequeue counts for `times` token vectors pushed
+        through the whole program (every mapped instance fires once each)."""
+        return isa.total(
+            isa.mvm_counts(st.k, st.n, self.cfg.tile_rows).scaled(st.instances)
+            for st in self.states).scaled(times)
+
+    # -- placement stats ----------------------------------------------------
+    @property
+    def n_matrices(self) -> int:
+        return sum(st.instances for st in self.states)
+
+    @property
+    def n_tiles(self) -> int:
+        return sum(tm.n_tiles for tm in self.tile_maps)
+
+    @property
+    def utilization(self) -> float:
+        used = sum(p.rows * p.cols for tm in self.tile_maps
+                   for p in tm.placements)
+        total = self.n_tiles * self.cfg.tile_rows * self.cfg.tile_cols
+        return used / total if total else 0.0
+
+    def summary(self) -> str:
+        init = self.initialize_counts()
+        per_fwd = self.mvm_counts()
+        return (f"AimcProgram: {len(self.names)} weights "
+                f"({self.n_matrices} crossbar tenants) on {self.n_tiles} "
+                f"tiles across {len(self.tile_maps)} context(s), "
+                f"utilization {self.utilization:.0%}; "
+                f"CM_INITIALIZE {init.initialize} (once), per token vector "
+                f"queue/process/dequeue {per_fwd.queue}/{per_fwd.process}/"
+                f"{per_fwd.dequeue}")
+
+    def __repr__(self) -> str:
+        return f"<{self.summary()}>"
+
+
+# ---------------------------------------------------------------------------
+# program_model — the one-call front door
+# ---------------------------------------------------------------------------
+
+def program_model(params, plan: MappingPlan | None, cfg: AimcConfig,
+                  key: jax.Array | None = None) -> AimcProgram:
+    """CM_INITIALIZE an entire model: program every plan-selected weight.
+
+    ``params`` is any parameter pytree (raw float weights, or the int8
+    ``{"q", "s"}`` serving format — codes are dequantized before
+    programming). Leading stack dims (scanned layers, vmapped experts) are
+    programmed per instance with independent noise draws. Returns the
+    `AimcProgram`; pair with ``program.install(params)`` for execution.
+    """
+    plan = plan or MappingPlan()
+    builder = ProgramBuilder(cfg, n_contexts=plan.n_contexts,
+                             tiles_per_context=plan.tiles_per_context)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_quantized_leaf)
+    idx = 0
+    for path, leaf in flat:
+        w = _as_matrix(leaf)
+        if w is None:
+            continue
+        pkey = _path_key(path)
+        if not plan.selects(pkey, tuple(w.shape)):
+            continue
+        sub = jax.random.fold_in(key, idx) if key is not None else None
+        builder.add(pkey, w, sub)
+        idx += 1
+    return builder.build()
+
+
+# ---------------------------------------------------------------------------
+# tree-path helpers
+# ---------------------------------------------------------------------------
+
+def _is_quantized_leaf(x) -> bool:
+    """Treat the int8 serving format {"q": codes, "s": scales} as one leaf."""
+    return isinstance(x, dict) and "q" in x and "s" in x
+
+
+def _as_matrix(leaf):
+    """A float matrix view of a leaf, or None when the leaf is not a weight."""
+    if _is_quantized_leaf(leaf):
+        return leaf["q"].astype(jnp.float32) * leaf["s"].astype(jnp.float32)
+    if isinstance(leaf, AimcLinearState):
+        return None
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return None
+    if not jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+        return None
+    return leaf
+
+
+def _path_key(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)

@@ -133,6 +133,11 @@ class TileAllocator:
         )
 
     # -- public -------------------------------------------------------------
+    @property
+    def n_tiles(self) -> int:
+        """Physical tiles opened so far (the capacity the packer consumed)."""
+        return len(self._tiles)
+
     def map_matrix(self, matrix_id: str, rows: int, cols: int) -> None:
         """AIMClib ``mapMatrix``: split to tile-sized blocks and pack them."""
         for (r0, c0, r, c) in split_matrix(rows, cols, self.tile_rows, self.tile_cols):

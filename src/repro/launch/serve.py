@@ -5,12 +5,18 @@ end-to-end deployment path).
         --requests 8 --prompt-len 16 --gen 12 [--exec aimc] [--int8]
 
 Continuous-batching-lite: requests arrive with a prompt, are prefilled as a
-batch, then decoded step-by-step against the sharded KV cache. ``--exec
-aimc`` runs every stationary projection through the simulated crossbars
-(inference with programmed tiles — CM_INITIALIZE once, then
-queue/process/dequeue per token, exactly the paper's deployment model);
-``--int8`` additionally stores the digital weights in the paper's number
-format (int8 + per-channel scales), the §Perf serving optimization.
+batch, then decoded step-by-step against the sharded KV cache.
+
+``--exec aimc`` is the paper's deployment model made literal: the whole
+network is programmed ONCE via ``core.program.program_model`` (CM_INITIALIZE,
+outside the serving loop), the resulting `AimcProgram` is install()ed into
+the parameter tree, and every decoded token pays only queue/process/dequeue
+on the stationary crossbar weights. CM_* instruction totals are reported from
+the program's static accounting — CM_INITIALIZE is independent of the number
+of generated tokens. ``--reprogram`` restores the legacy per-call STE path
+(the network re-programs every forward) for A/B measurement of the
+program-once speedup. ``--int8`` stores the digital weights in the paper's
+number format (int8 + per-channel scales), the §Perf serving optimization.
 """
 
 from __future__ import annotations
@@ -29,6 +35,9 @@ def parse_args(argv=None):
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--exec", dest="exec_mode", default="digital",
                     choices=["digital", "aimc"])
+    ap.add_argument("--reprogram", action="store_true",
+                    help="legacy AIMC path: re-program every forward call "
+                         "(per-call STE) instead of program-once/apply-many")
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -40,6 +49,7 @@ def main(argv=None):
     import jax
     import jax.numpy as jnp
 
+    from repro.compat import use_mesh
     from repro.configs import get_arch
     from repro.core.aimc import AimcConfig
     from repro.launch.mesh import make_mesh
@@ -56,8 +66,9 @@ def main(argv=None):
     shape = tuple(int(s) for s in args.mesh.split("x"))
     axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(shape)]
     mesh = make_mesh(shape, axes)
-    exe = (Execution(mode="aimc", aimc=AimcConfig(impl="ref"),
-                     compute_dtype="float32")
+    aimc_cfg = AimcConfig(impl="ref")
+    exe = (Execution(mode="aimc", aimc=aimc_cfg, compute_dtype="float32",
+                     programmed=not args.reprogram)
            if args.exec_mode == "aimc"
            else Execution(compute_dtype="float32" if args.smoke
                           else "bfloat16", serve_int8=args.int8))
@@ -66,7 +77,7 @@ def main(argv=None):
     b, p, g = args.requests, args.prompt_len, args.gen
     max_seq = p + g
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(args.seed), cfg)
         if args.int8:
             from repro.core.quant import quantize_params_int8
@@ -75,6 +86,22 @@ def main(argv=None):
             params = quantize_params_int8(
                 params, IN_PROJ | OUT_PROJ | EXPERT_IN | EXPERT_OUT
                 | {"unembed"})
+
+        program = None
+        if args.exec_mode == "aimc" and not args.reprogram:
+            # CM_INITIALIZE: program the whole network once, outside the
+            # serving loop (paper §IV-B — the inference region of interest
+            # never re-programs).
+            from repro.core.program import MappingPlan, program_model
+            t0 = time.time()
+            program = program_model(params, MappingPlan(), aimc_cfg,
+                                    jax.random.PRNGKey(args.seed + 2))
+            params = program.install(params)
+            jax.block_until_ready(
+                [st.w_q for st in program.states])
+            print(f"[serve] programmed in {time.time() - t0:.2f}s: "
+                  f"{program.summary()}")
+
         key = jax.random.PRNGKey(args.seed + 1)
         prompts = jax.random.randint(key, (b, p), 1, cfg.vocab)
         pe = (jax.random.normal(key, (b, cfg.n_patches, cfg.d_model))
@@ -101,10 +128,27 @@ def main(argv=None):
 
         gen = jnp.concatenate(out, axis=1)
         print(f"[serve] {spec.arch_id} exec={args.exec_mode} "
-              f"int8={args.int8} batch={b}")
+              f"int8={args.int8} batch={b}"
+              + (" (per-call reprogram)" if args.exec_mode == "aimc"
+                 and args.reprogram else ""))
         print(f"  prefill: {b}x{p} tokens in {t_prefill:.2f}s")
         print(f"  decode:  {g - 1} steps in {t_decode:.2f}s "
-              f"({b * (g - 1) / max(t_decode, 1e-9):.1f} tok/s batched)")
+              f"({b * (g - 1) / max(t_decode, 1e-9):.1f} tok/s batched, "
+              f"{t_decode / max(g - 1, 1) * 1e3:.1f} ms/step)")
+        if program is not None:
+            init = program.initialize_counts()
+            # mvm_counts is per token VECTOR (one input row through every
+            # mapped matrix): prefill pushes b*p vectors, each of the g-1
+            # decode steps pushes b more.
+            per_vec = program.mvm_counts()
+            n_vec = b * (p + g - 1)
+            roi = per_vec.scaled(n_vec)
+            print(f"  CM_INITIALIZE: {init.initialize} device writes, once "
+                  f"per session — independent of the {g} generated tokens")
+            print(f"  CM_* in the serving ROI ({n_vec} token vectors): "
+                  f"queue={roi.queue} process={roi.process} "
+                  f"dequeue={roi.dequeue} (per vector: {per_vec.queue}/"
+                  f"{per_vec.process}/{per_vec.dequeue})")
         for i in range(min(b, 3)):
             print(f"  req{i}: prompt={list(map(int, prompts[i][:6]))}... "
                   f"-> gen={list(map(int, gen[i]))}")

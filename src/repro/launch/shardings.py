@@ -40,6 +40,11 @@ def _name_of(path) -> str:
 def param_spec(path, leaf, fsdp) -> P:
     name = _name_of(path)
     nd = leaf.ndim
+    if any(hasattr(k, "name") for k in path):
+        # attribute key => inside a programmed AimcLinearState
+        # (core.program): crossbar codes/scales replicate — int8 states are
+        # small and weights-stationary
+        return P(*([None] * nd))
     if name == "embed":
         return P("model", fsdp)
     if name == "unembed":

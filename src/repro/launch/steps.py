@@ -233,11 +233,13 @@ def _serve_params_shape(model, spec, cfg, int8: bool = False):
 
 
 def make_prefill_step(spec: ArchSpec, cell: ShapeCell, mesh,
-                      exe: Execution = Execution()):
+                      exe: Execution = Execution(), program=None):
     cfg = spec.model_cfg
     model = spec.model_module()
     cache_dt = jnp.dtype(spec.cache_dtype)
     params_shape = _serve_params_shape(model, spec, cfg, int8=exe.serve_int8)
+    if program is not None:     # program-once serving: mapped projections
+        params_shape = program.install_shape(params_shape)  # are AIMC states
     pspecs = fit_specs(get_param_specs(params_shape, mesh), params_shape, mesh)
     if exe.serve_int8:      # int8 weights replicate over data: no gathers
         pspecs = strip_fsdp(pspecs, mesh)
@@ -284,12 +286,14 @@ def make_prefill_step(spec: ArchSpec, cell: ShapeCell, mesh,
 
 
 def make_serve_step(spec: ArchSpec, cell: ShapeCell, mesh,
-                    exe: Execution = Execution()):
+                    exe: Execution = Execution(), program=None):
     """One decode step against a seq_len KV cache (the decode_* cells)."""
     cfg = spec.model_cfg
     model = spec.model_module()
     cache_dt = jnp.dtype(spec.cache_dtype)
     params_shape = _serve_params_shape(model, spec, cfg, int8=exe.serve_int8)
+    if program is not None:     # program-once serving (core.program)
+        params_shape = program.install_shape(params_shape)
     pspecs = fit_specs(get_param_specs(params_shape, mesh), params_shape, mesh)
     if exe.serve_int8:      # int8 weights replicate over data: no gathers
         pspecs = strip_fsdp(pspecs, mesh)
@@ -326,16 +330,22 @@ def make_serve_step(spec: ArchSpec, cell: ShapeCell, mesh,
 # ---------------------------------------------------------------------------
 
 def make_step(spec: ArchSpec, cell: ShapeCell, mesh,
-              exe: Execution = Execution()) -> StepBundle:
+              exe: Execution = Execution(), program=None) -> StepBundle:
+    """`program` (an `core.program.AimcProgram`) selects program-once AIMC
+    serving: the step's parameter tree carries the installed crossbar states
+    (training cells reject it — the STE path re-programs by design)."""
     if cell.kind == "train":
+        if program is not None:
+            raise ValueError("AimcProgram is a serving-only handle; "
+                             "noise-aware training re-programs per step")
         return make_train_step(spec, cell, mesh, exe)
     if cell.kind == "prefill":
-        return make_prefill_step(spec, cell, mesh, exe)
-    return make_serve_step(spec, cell, mesh, exe)
+        return make_prefill_step(spec, cell, mesh, exe, program)
+    return make_serve_step(spec, cell, mesh, exe, program)
 
 
 def input_specs(spec: ArchSpec, cell: ShapeCell, mesh,
-                exe: Execution = Execution()) -> tuple:
+                exe: Execution = Execution(), program=None) -> tuple:
     """ShapeDtypeStruct stand-ins for every input of the cell's step function
     (weak-type-correct, shardable, zero device allocation)."""
-    return make_step(spec, cell, mesh, exe).abstract_inputs
+    return make_step(spec, cell, mesh, exe, program).abstract_inputs

@@ -60,6 +60,7 @@ def main(argv=None):
     import jax.numpy as jnp
 
     from repro.checkpoint import checkpoint
+    from repro.compat import use_mesh
     from repro.configs import ShapeCell, get_arch
     from repro.core.aimc import AimcConfig
     from repro.data.pipeline import DataConfig, host_batch, make_global_array
@@ -90,7 +91,7 @@ def main(argv=None):
            else Execution(compute_dtype="float32" if args.smoke
                           else "bfloat16"))
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         bundle = make_step(spec, cell, mesh, exe)
         step_fn = jax.jit(bundle.fn,
                           in_shardings=to_named(bundle.in_shardings, mesh),

@@ -12,7 +12,8 @@ seq_len // 4 encoder frames).
 
 Pre-LN transformer, GeLU FFN, learned-sinusoidal-free RoPE on decoder self
 attention, bidirectional encoder. Cross-attention K/V *projections* are
-stationary weights -> AIMC-mapped; the K/V activations themselves are not.
+stationary weights -> AIMC-mapped (program-once via `core.program`, like
+every other projection here); the K/V activations themselves are not.
 """
 
 from __future__ import annotations

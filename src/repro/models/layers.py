@@ -1,10 +1,17 @@
 """Shared model-zoo layers, all AIMC-capable.
 
 Every stationary-weight projection in the zoo routes through `linear()`,
-which executes either digitally (plain matmul, the paper's CPU+SIMD baseline)
-or through the simulated AIMC crossbar path (`core.aimc.aimc_linear_ste`) —
-quantized DAC -> crossbar -> ADC with optional PCM noise, differentiable via
-a straight-through estimator (noise-aware training).
+which executes one of three ways:
+
+  * digital         — plain matmul (the paper's CPU+SIMD baseline);
+  * AIMC, programmed — the weight arrives as a pre-programmed
+    `AimcLinearState` (installed by `core.program.AimcProgram.install`):
+    apply-only queue/process/dequeue, NO re-programming on the hot path.
+    This is the paper's deployment model (weights stationary in crossbars)
+    and the serving configuration;
+  * AIMC, on-the-fly — `core.aimc.aimc_linear_ste` re-programs with a fresh
+    noise draw every call and backprops straight-through (noise-aware
+    training).
 
 Attention uses a chunked online-softmax implementation (flash attention as a
 pure-JAX double scan) so both 4k training and 32k prefill are O(seq) in
@@ -21,7 +28,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.aimc import AimcConfig, aimc_linear_ste
+from repro.core.aimc import (AimcConfig, AimcLinearState, aimc_apply,
+                             aimc_linear_ste)
 
 
 # ---------------------------------------------------------------------------
@@ -37,6 +45,14 @@ class Execution:
     # int8-native serving path (beyond-paper §Perf optimization): weights are
     # stored/streamed as int8 codes and dequantized in the MXU epilogue.
     serve_int8: bool = False
+    # program-once/apply-many handle (core.program): True declares that an
+    # AimcProgram has been install()ed into the parameter tree. Mapped
+    # projections arrive at `linear` as AimcLinearState and run apply-only;
+    # raw weights that remain (plan-excluded projections) stay DIGITAL
+    # instead of silently re-programming per call — re-programming on the
+    # hot path is exactly what the program API removes. `aimc` must be the
+    # same AimcConfig the program was built with (ADC step/noise agreement).
+    programmed: bool = False
 
     @property
     def cdtype(self):
@@ -57,8 +73,8 @@ DIGITAL = Execution()
 # ---------------------------------------------------------------------------
 
 def _current_mesh():
-    m = jax.sharding.get_abstract_mesh()   # works inside and outside jit
-    return None if m is None or m.empty else m
+    from repro.compat import current_mesh
+    return current_mesh()                  # works inside and outside jit
 
 
 def shard_act(x: jnp.ndarray, model_dim: int | None = None):
@@ -99,8 +115,17 @@ def as_weight(w, dtype):
 
 def linear(x: jnp.ndarray, w: jnp.ndarray, exe: Execution,
            key: jax.Array | None = None, bias: jnp.ndarray | None = None):
-    """The AIMC-or-digital projection. x: [..., K], w: [K, N]."""
-    if exe.mode == "aimc":
+    """The AIMC-or-digital projection. x: [..., K], w: [K, N] — or a
+    pre-programmed `AimcLinearState` (program-once/apply-many serving)."""
+    if isinstance(w, AimcLinearState):
+        # programmed crossbar tenant: apply-only, CM_INITIALIZE already paid
+        if exe.aimc is None:
+            raise ValueError(
+                "programmed AimcLinearState reached linear() but exe.aimc "
+                "is None — install()ed params require an Execution carrying "
+                "the AimcConfig the program was built with")
+        y = aimc_apply(w, x, exe.aimc, key).astype(exe.cdtype)
+    elif exe.mode == "aimc" and not exe.programmed:
         y = aimc_linear_ste(x, as_weight(w, jnp.float32), key, exe.aimc)
         y = y.astype(exe.cdtype)
     else:

@@ -27,6 +27,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.aimc import AimcLinearState
 from repro.models.layers import Execution, as_weight, linear, shard_act
 
 
@@ -67,15 +68,20 @@ def moe_ffn(x, router_w, w_gate, w_up, w_down, *, top_k: int,
     xe = shard_act(xe, model_dim=0)        # experts over `model` (EP)
 
     # ---- expert FFNs (AIMC-mapped when exe.mode == "aimc") -----------------
-    if exe.mode == "aimc":
-        keys = jax.random.split(key, e * 3).reshape(e, 3, 2)
-        from repro.core.aimc import aimc_linear_ste
+    # Each expert is its own crossbar tenant. Programmed (AimcLinearState)
+    # expert stacks run apply-only under vmap; raw weights in aimc mode run
+    # the per-call STE (noise-aware training). `layers.linear` dispatches.
+    if isinstance(w_gate, AimcLinearState) or exe.mode == "aimc":
+        use_keys = key is not None
+        keys = (jax.random.split(key, e * 3).reshape(e, 3, 2) if use_keys
+                else jnp.zeros((e, 3, 2), jnp.uint32))
 
         def one_expert(xi, wg, wu, wd, ks):
-            g = aimc_linear_ste(xi, wg.astype(jnp.float32), ks[0], exe.aimc)
-            u = aimc_linear_ste(xi, wu.astype(jnp.float32), ks[1], exe.aimc)
-            h = (jax.nn.silu(g) * u).astype(jnp.float32)
-            return aimc_linear_ste(h, wd.astype(jnp.float32), ks[2], exe.aimc)
+            k0, k1, k2 = ((ks[0], ks[1], ks[2]) if use_keys
+                          else (None, None, None))
+            g = linear(xi, wg, exe, k0)
+            u = linear(xi, wu, exe, k1)
+            return linear(jax.nn.silu(g) * u, wd, exe, k2)
 
         ye = jax.vmap(one_expert)(xe, w_gate, w_up, w_down, keys)
     else:
@@ -119,7 +125,8 @@ def _moe_sharded(xd, gate_idx, gate_vals, w_gate, w_up, w_down,
     """
     from repro.models.layers import _current_mesh
     mesh = _current_mesh()
-    if mesh is None or "model" not in mesh.axis_names or exe.mode == "aimc":
+    if (mesh is None or "model" not in mesh.axis_names
+            or exe.mode == "aimc" or isinstance(w_gate, AimcLinearState)):
         return None
     from jax.sharding import PartitionSpec as P
     dp = tuple(a for a in mesh.axis_names if a != "model")
@@ -136,7 +143,8 @@ def _moe_sharded(xd, gate_idx, gate_vals, w_gate, w_up, w_down,
         xe_loc, slot_loc = _dispatch_sort(x_loc, ids_loc, e, cap_loc, top_k)
         return xe_loc, slot_loc
 
-    xe, slot_o = jax.shard_map(
+    from repro.compat import shard_map
+    xe, slot_o = shard_map(
         disp_local, mesh=mesh,
         in_specs=(P(dp, None), P(dp, None)),
         out_specs=(P(None, dp, None), P(dp, None)),
@@ -160,7 +168,7 @@ def _moe_sharded(xd, gate_idx, gate_vals, w_gate, w_up, w_down,
 
     # check_vma=False: the model-axis all_gather makes the output
     # replicated over `model`, which the varying-axis checker cannot infer
-    y = jax.shard_map(
+    y = shard_map(
         combine_local, mesh=mesh,
         in_specs=(P("model", dp, None), P(dp, None), P(dp, None)),
         out_specs=P(dp, None), check_vma=False)(ye, slot_o, gate_vals)

@@ -39,10 +39,13 @@ def mlp_forward_digital(params, x):
     return jax.nn.relu(h @ params["w2"])
 
 
-def mlp_forward_aimc(params, x, cfg: AimcConfig, key=None):
-    ctx = AimcContext(cfg, key)
-    ctx.map_matrix("fc1", params["w1"])
-    ctx.map_matrix("fc2", params["w2"])
+def mlp_forward_aimc(params, x, cfg: AimcConfig, key=None, ctx=None):
+    """Pass a previously returned `ctx` to run program-once/apply-many:
+    CM_INITIALIZE happens on the first call only (paper §IV-B)."""
+    if ctx is None:
+        ctx = AimcContext(cfg, key)
+        ctx.map_matrix("fc1", params["w1"])
+        ctx.map_matrix("fc2", params["w2"])
     h = jax.nn.relu(ctx.linear("fc1", x))
     return jax.nn.relu(ctx.linear("fc2", h)), ctx
 
@@ -91,12 +94,17 @@ def lstm_forward_digital(params, xs, nh: int):
     return ys
 
 
-def lstm_forward_aimc(params, xs, nh: int, cfg: AimcConfig, key=None):
-    """The §VIII-D mapping: gate matrices side by side -> one CM_PROCESS."""
-    ctx = AimcContext(cfg, key)
-    ctx.map_gates("cell", [params["w_f"], params["w_i"], params["w_g"],
-                           params["w_o"]])
-    ctx.map_matrix("dense", params["w_y"])
+def lstm_forward_aimc(params, xs, nh: int, cfg: AimcConfig, key=None,
+                      ctx=None):
+    """The §VIII-D mapping: gate matrices side by side -> one CM_PROCESS.
+
+    Reuse a returned `ctx` across calls to keep the gates stationary
+    (program-once): only the first call pays CM_INITIALIZE."""
+    if ctx is None:
+        ctx = AimcContext(cfg, key)
+        ctx.map_gates("cell", [params["w_f"], params["w_i"], params["w_g"],
+                               params["w_o"]])
+        ctx.map_matrix("dense", params["w_y"])
     b = xs.shape[1]
 
     h = jnp.zeros((b, nh))
@@ -178,10 +186,14 @@ def _im2col(x, k, stride, pad):
 
 
 def cnn_forward(params, x, variant: str, cfg: AimcConfig | None = None,
-                key=None):
-    """x: [B, 224, 224, 3]. cfg=None -> digital; else conv layers on AIMC."""
+                key=None, ctx=None):
+    """x: [B, 224, 224, 3]. cfg=None -> digital; else conv layers on AIMC.
+
+    As above, pass a returned `ctx` back in to skip re-programming the conv
+    kernels (the im2col crossbar tenants stay stationary)."""
     spec = CNN_SPECS[variant]
-    ctx = AimcContext(cfg, key) if cfg is not None else None
+    if cfg is not None and ctx is None:
+        ctx = AimcContext(cfg, key)
     for i, (cin, k, cout, stride, pad, lrn, pool) in enumerate(spec):
         w = params["convs"][i]
         patches, ho, wo = _im2col(x, k, stride, pad)
@@ -189,7 +201,8 @@ def cnn_forward(params, x, variant: str, cfg: AimcConfig | None = None,
         wmat = w.reshape(kdim, cout)
         if ctx is not None:
             name = f"conv{i}"
-            ctx.map_matrix(name, wmat)
+            if name not in ctx:
+                ctx.map_matrix(name, wmat)
             y = ctx.linear(name, patches.reshape(b * npos, kdim))
         else:
             y = patches.reshape(b * npos, kdim) @ wmat

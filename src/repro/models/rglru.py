@@ -14,7 +14,9 @@ Temporal mixing per layer type:
 Layers scan over (rec, rec, attn) units; n_layers % 3 trailing recurrent
 blocks run as a second small scan. The recurrence itself is element-wise
 (activation x activation) and stays digital — the paper's LSTM boundary —
-while every projection is AIMC-mapped.
+while every projection is AIMC-mapped (and runs apply-only when an
+`AimcProgram` is installed; the conv kernel and Lambda stay digital under the
+default `MappingPlan`).
 """
 
 from __future__ import annotations

@@ -9,8 +9,12 @@ assignment's frontend-STUB rule).
 
 All stationary projections route through `layers.linear` and therefore run
 digitally or through the simulated AIMC crossbars (the paper's technique as a
-first-class execution mode). Parameters are stacked on a leading layer axis
-and consumed by `lax.scan` — small HLO, fast multi-pod compiles.
+first-class execution mode). Serving uses program-once/apply-many: after
+`core.program.program_model(...).install(params)`, the mapped projections
+arrive here as stacked `AimcLinearState`s that `lax.scan` slices per layer —
+no re-programming per token, no model-code changes. Parameters are stacked on
+a leading layer axis and consumed by `lax.scan` — small HLO, fast multi-pod
+compiles.
 """
 
 from __future__ import annotations

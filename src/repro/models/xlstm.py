@@ -11,7 +11,10 @@
 This is the direct descendant of the ALPINE paper's LSTM exploration: the
 gate PRE-projections (W_z/i/f/o, q/k/v) are stationary matrices mapped onto
 AIMC crossbars side by side — one queue feeds all gates (paper §VIII-D) —
-while the recurrences themselves are element-wise and stay digital.
+while the recurrences themselves are element-wise and stay digital (the
+sLSTM block-diagonal recurrent weights r_zifo are excluded by the default
+`MappingPlan` for the same reason). With an installed `AimcProgram` the gate
+projections decode apply-only — programmed once per session.
 O(1) decode state is why this arch runs the long_500k cell.
 """
 

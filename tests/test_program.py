@@ -1,0 +1,210 @@
+"""Program-once/apply-many API (core/program.py).
+
+The paper's deployment split as an invariant: CM_INITIALIZE happens once per
+session (outside the inference region of interest) and is INDEPENDENT of how
+many tokens are decoded; the apply-only path computes exactly what the
+per-call (STE-forward) path computes given the same noise draws.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.aimc import (AimcConfig, AimcLinearState, aimc_apply,
+                             aimc_linear_ste, program_linear, program_stacked)
+from repro.core.program import (AimcProgram, CapacityError, MappingPlan,
+                                program_model)
+from repro.models.layers import Execution, linear
+
+CFG = AimcConfig(tile_rows=128, impl="ref")
+
+
+# ---------------------------------------------------------------------------
+# apply-only == STE forward
+# ---------------------------------------------------------------------------
+
+def test_programmed_apply_matches_ste_forward_same_key():
+    """aimc_linear_ste(key) == program(kp) + apply(kr) for kp,kr=split(key):
+    program-once is a pure refactor of the forward math."""
+    key = jax.random.PRNGKey(7)
+    from repro.core.noise import NoiseModel
+    cfg = dataclasses.replace(CFG, noise=NoiseModel(sigma_read=0.003))
+    w = jax.random.normal(key, (200, 72)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 200))
+    kp, kr = jax.random.split(key)
+    st = program_linear(w, cfg, kp)
+    y_apply = aimc_apply(st, x, cfg, kr)
+    y_ste = aimc_linear_ste(x, w, key, cfg)
+    np.testing.assert_allclose(np.asarray(y_apply), np.asarray(y_ste),
+                               rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("arch_id", ["granite_8b", "olmoe_1b_7b",
+                                     "xlstm_350m"])
+def test_program_model_matches_ste_forward(arch_id):
+    """Whole-model: installed program (apply-only) == on-the-fly STE path
+    with noise disabled — the migration changes cost, not math."""
+    spec = get_arch(arch_id)
+    model = spec.model_module()
+    cfg = spec.smoke_cfg
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    toks = (jnp.arange(2 * 16).reshape(2, 16) * 3 + 1) % cfg.vocab
+
+    exe_ste = Execution(mode="aimc", aimc=CFG, compute_dtype="float32")
+    h_ste, _ = model.forward(params, toks, cfg, exe_ste, return_hidden=True)
+
+    program = program_model(params, MappingPlan(), CFG)
+    installed = program.install(params)
+    exe_prog = Execution(mode="aimc", aimc=CFG, compute_dtype="float32",
+                         programmed=True)
+    h_prog, _ = model.forward(installed, toks, cfg, exe_prog,
+                              return_hidden=True)
+    np.testing.assert_allclose(np.asarray(h_prog), np.asarray(h_ste),
+                               rtol=0, atol=1e-4)
+
+
+def test_programmed_decode_runs_under_jit():
+    """Installed params cross the jit boundary and the KV-cache decode loop
+    (states ride through lax.scan as stacked pytree leaves)."""
+    spec = get_arch("granite_8b")
+    model = spec.model_module()
+    cfg = spec.smoke_cfg
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    program = program_model(params, MappingPlan(), CFG)
+    installed = program.install(params)
+    exe = Execution(mode="aimc", aimc=CFG, compute_dtype="float32",
+                    programmed=True)
+    toks = (jnp.arange(2 * 8).reshape(2, 8) + 1) % cfg.vocab
+    _, cache = model.prefill(installed, toks, cfg, exe, max_seq=12,
+                             cache_dtype=jnp.float32)
+    decode = jax.jit(lambda pr, ca, tk: model.decode_step(pr, ca, tk, cfg,
+                                                          exe))
+    tk = jnp.ones((2, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = decode(installed, cache, tk)
+        tk = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["len"][0]) == 11
+
+
+# ---------------------------------------------------------------------------
+# CM_* accounting: initialize constant, traffic linear in tokens
+# ---------------------------------------------------------------------------
+
+def test_initialize_constant_while_decode_grows():
+    spec = get_arch("granite_8b")
+    model = spec.model_module()
+    cfg = spec.smoke_cfg
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    program = program_model(params, MappingPlan(), CFG)
+
+    init_once = program.initialize_counts()
+    assert init_once.initialize > 0
+    assert init_once.queue == init_once.process == init_once.dequeue == 0
+
+    for n_tokens in (1, 8, 64):
+        roi = program.mvm_counts(times=n_tokens)
+        # decode traffic scales with tokens...
+        assert roi.queue == program.mvm_counts().queue * n_tokens
+        assert roi.dequeue == program.mvm_counts().dequeue * n_tokens
+        # ...programming does not: CM_INITIALIZE stays the session constant
+        assert roi.initialize == 0
+        assert program.initialize_counts() == init_once
+
+
+def test_program_counts_cover_every_mapped_instance():
+    """Stacked layers count as independent crossbar tenants."""
+    params = {"blocks": {"wq": jnp.ones((3, 64, 32))}}   # 3 scanned layers
+    program = program_model(params, MappingPlan(), CFG)
+    assert program.n_matrices == 3
+    assert program.initialize_counts().initialize == 3 * 64 * 32
+
+
+# ---------------------------------------------------------------------------
+# MappingPlan selection / placement
+# ---------------------------------------------------------------------------
+
+def test_plan_selects_projections_not_infra():
+    spec = get_arch("olmoe_1b_7b")            # MoE: router must stay digital
+    model = spec.model_module()
+    cfg = spec.smoke_cfg
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    program = program_model(params, MappingPlan(), CFG)
+    names = set(program.names)
+    assert any(n.endswith("we_gate") for n in names)      # experts mapped
+    assert not any(n.endswith("router") for n in names)   # router digital
+    assert not any("embed" in n for n in names)           # lookup digital
+    assert not any(n.endswith("ln1") for n in names)      # norms digital
+
+
+def test_plan_predicate_and_patterns():
+    params = {"blocks": {"wq": jnp.ones((2, 64, 64)),
+                         "wo": jnp.ones((2, 64, 64))}}
+    only_wq = program_model(
+        params, MappingPlan(include=(r"wq",)), CFG)
+    assert only_wq.names == ("blocks/wq",)
+    vetoed = program_model(
+        params, MappingPlan(predicate=lambda path, shape: "wo" in path), CFG)
+    assert vetoed.names == ("blocks/wo",)
+
+
+def test_plan_capacity_check_and_contexts():
+    params = {"a": jnp.ones((256, 256)), "b": jnp.ones((256, 256))}
+    plan = MappingPlan(include=(r"[ab]",), n_contexts=2)
+    program = program_model(params, plan, CFG)
+    assert len(program.tile_maps) == 2
+    assert sorted(program.contexts) == [0, 1]             # least-loaded spread
+    with pytest.raises(CapacityError):
+        program_model(params, MappingPlan(include=(r"[ab]",),
+                                          tiles_per_context=1), CFG)
+
+
+def test_install_roundtrip_and_dispatch():
+    params = {"blocks": {"wq": jax.random.normal(jax.random.PRNGKey(0),
+                                                 (64, 32)) * 0.05,
+                         "ln": jnp.ones((64,))},
+              "embed": jnp.ones((16, 64))}
+    program = program_model(params, MappingPlan(), CFG)
+    installed = program.install(params)
+    assert isinstance(installed["blocks"]["wq"], AimcLinearState)
+    assert installed["blocks"]["ln"] is params["blocks"]["ln"]
+    assert installed["embed"] is params["embed"]
+    # linear() dispatches on the state, digital elsewhere
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    exe = Execution(mode="aimc", aimc=CFG, compute_dtype="float32",
+                    programmed=True)
+    y = linear(x, installed["blocks"]["wq"], exe)
+    y_fp = x @ params["blocks"]["wq"]
+    rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.05, f"8-bit crossbar should be ~4% of fp32, got {rel}"
+
+
+def test_program_is_a_pytree():
+    """Programs jit/flatten like parameter trees (shardable, donatable)."""
+    params = {"wq": jnp.ones((64, 32)) * 0.02}
+    program = program_model(params, MappingPlan(include=(r"wq",)), CFG)
+    leaves, treedef = jax.tree_util.tree_flatten(program)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, AimcProgram)
+    assert rebuilt.names == program.names
+
+    @jax.jit
+    def apply(prog, x):
+        return aimc_apply(prog["wq"], x, CFG)
+
+    y = apply(program, jnp.ones((2, 64)))
+    assert y.shape == (2, 32)
+
+
+def test_program_stacked_matches_per_slice():
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 96, 40)) * 0.05
+    st = program_stacked(w, CFG)
+    assert st.stack_shape == (3,) and st.instances == 3
+    for i in range(3):
+        ref = program_linear(w[i], CFG)
+        np.testing.assert_array_equal(np.asarray(st.w_q[i]),
+                                      np.asarray(ref.w_q))

@@ -1,5 +1,7 @@
 """Property tests for the crossbar tile allocator (AIMClib mapMatrix)."""
 
+import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core.tile import TileAllocator, plan_linear, split_matrix
@@ -74,6 +76,5 @@ def test_lstm_gates_side_by_side():
 
 
 def test_allocator_rejects_bad_dims():
-    import pytest
     with pytest.raises(ValueError):
         TileAllocator(0, 128)
