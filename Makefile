@@ -1,17 +1,32 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 test bench serve-aimc serve-aimc-reprogram
+.PHONY: tier1 test test-fast test-all bench bench-pipeline serve-aimc \
+        serve-aimc-reprogram serve-aimc-multicore
 
-# Tier-1 verify: the gate every PR must keep green.
+# Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
 	$(PY) -m pytest -x -q
 
 test:
 	$(PY) -m pytest -q
 
+# Tier split (pytest markers, see pyproject.toml): `test-fast` skips the
+# slow interpret-mode Pallas sweeps and multi-process system tests for a
+# quick inner loop; `test-all` is the full tier (identical scope to tier1,
+# without -x so every failure reports).
+test-fast:
+	$(PY) -m pytest -q -m "not pallas and not slow"
+
+test-all:
+	$(PY) -m pytest -q
+
 bench:
 	$(PY) -m benchmarks.run
+
+# Multi-core schedule benchmarks alone (measured vs predicted).
+bench-pipeline:
+	$(PY) -m benchmarks.bench_pipeline
 
 # Program-once AIMC serving vs the legacy per-call-reprogram path (A/B for
 # the program API speedup; see DESIGN.md §2).
@@ -20,3 +35,8 @@ serve-aimc:
 
 serve-aimc-reprogram:
 	$(PY) -m repro.launch.serve --arch granite-8b --smoke --exec aimc --reprogram
+
+# Multi-core AIMC serving: matrices spread over 4 per-core tile contexts,
+# per-core CM_*/comm ledgers + modeled latency reported (core.schedule).
+serve-aimc-multicore:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --exec aimc --cores 4

@@ -5,6 +5,8 @@ One module per paper table/figure (DESIGN.md §7):
   bench_mlp       Fig. 7 / Fig. 8   (MLP cases, both systems)
   bench_lstm      Fig. 10 / Fig. 11 (LSTM n_h sweep, cases)
   bench_cnn       Fig. 13 / Fig. 14 (CNN-F/M/S, 8-core pipeline)
+  bench_pipeline  §VII-IX           (executable multi-core schedules vs the
+                                     cost model: measured-vs-predicted)
   bench_coupling  §VII-B            (tight vs loose, analytical + lowered)
   bench_accuracy  §III-C            (AIMC output fidelity vs digital)
   bench_kernels   kernels/          (Pallas vs oracle + VMEM budget)
@@ -19,12 +21,14 @@ import sys
 import time
 
 from benchmarks import (bench_accuracy, bench_cnn, bench_coupling,
-                        bench_kernels, bench_lstm, bench_mlp, bench_roofline)
+                        bench_kernels, bench_lstm, bench_mlp, bench_pipeline,
+                        bench_roofline)
 
 MODULES = [
     ("MLP (paper Fig. 7/8)", bench_mlp),
     ("LSTM (paper Fig. 10/11)", bench_lstm),
     ("CNN (paper Fig. 13/14)", bench_cnn),
+    ("Multi-core schedules (measured vs predicted)", bench_pipeline),
     ("Coupling (paper §VII-B)", bench_coupling),
     ("Fidelity (paper §III-C)", bench_accuracy),
     ("Pallas kernels", bench_kernels),

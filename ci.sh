@@ -1,14 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate: reproducible verify command with pinned deps.
 #
-#   ./ci.sh            run the tier-1 test suite
+#   ./ci.sh            run the FULL tier-1 test suite (includes the slow
+#                      interpret-mode Pallas sweeps and subprocess tests)
+#   ./ci.sh --fast     inner-loop tier: skip tests marked pallas/slow
+#                      (see [tool.pytest.ini_options].markers)
 #   ./ci.sh --install  pip-install pinned deps first (no-op in the baked image)
 set -euo pipefail
 cd "$(dirname "$0")"
 
 if [[ "${1:-}" == "--install" ]]; then
     python -m pip install -r requirements.txt
+    shift
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--fast" ]]; then
+    exec python -m pytest -x -q -m "not pallas and not slow"
+fi
 exec python -m pytest -x -q

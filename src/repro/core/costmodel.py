@@ -42,6 +42,8 @@ import dataclasses
 import math
 from typing import Literal
 
+from repro.core import isa
+
 # ---------------------------------------------------------------------------
 # Table I — system configurations
 # ---------------------------------------------------------------------------
@@ -209,6 +211,32 @@ class Result:
 # ---------------------------------------------------------------------------
 
 
+def aimc_mvm_time(counts: isa.CmCounts, sys: SystemConfig,
+                  p: CalibratedParams = CALIB,
+                  coupling: str = "tight") -> tuple[float, float, float]:
+    """(t_queue, t_process, t_dequeue) for a CM_* instruction ledger.
+
+    THE shared accounting: `evaluate()` prices every AIMC mvm op through
+    this function, and `core.schedule` prices its per-core `CoreLedger`s
+    through the same one — so a scheduled multi-core mapping and the
+    analytical `Workload` of the same case can never drift apart. Queue and
+    dequeue are each the max of the bandwidth view (tile SRAM I/O, Table I-C)
+    and the instruction-issue view (custom-instruction cost per 32-bit word,
+    the paper's actual bottleneck — §VII-B); loose coupling adds the I/O-bus
+    transaction cost per word on top.
+    """
+    f = sys.freq_hz
+    t_q = max(counts.queue_bytes / AIMC_TILE.io_bw,
+              counts.queue * p.cm_queue_cycles / f)
+    t_d = max(counts.dequeue_bytes / AIMC_TILE.io_bw,
+              counts.dequeue * p.cm_dequeue_cycles / f)
+    if coupling == "loose":
+        t_q += counts.queue * p.loose_word_cycles / f
+        t_d += counts.dequeue * p.loose_word_cycles / f
+    t_p = counts.process * AIMC_TILE.latency_s
+    return t_q, t_p, t_d
+
+
 def _stage_time(stage: Stage, sys: SystemConfig, p: CalibratedParams,
                 coupling: str, tile_rows: int):
     """Returns (time_s, breakdown, aimc_energy_j, stall_s, instr_count)."""
@@ -228,23 +256,16 @@ def _stage_time(stage: Stage, sys: SystemConfig, p: CalibratedParams,
             instrs += op.count * op.k * op.n / 16
             t_total += t
         elif op.kind == "mvm" and op.aimc:
-            row_blocks = math.ceil(op.k / tile_rows)
-            q_instr = math.ceil(op.k / 4)
-            d_instr = math.ceil(op.n * row_blocks / 4)
-            t_q = max(op.k / AIMC_TILE.io_bw, q_instr * p.cm_queue_cycles / f)
-            t_d = max(op.n * row_blocks / AIMC_TILE.io_bw,
-                      d_instr * p.cm_dequeue_cycles / f)
-            if coupling == "loose":
-                t_q += q_instr * p.loose_word_cycles / f
-                t_d += d_instr * p.loose_word_cycles / f
-            t_p = row_blocks * AIMC_TILE.latency_s
+            counts = isa.mvm_counts(op.k, op.n, tile_rows)
+            t_q, t_p, t_d = aimc_mvm_time(counts, sys, p, coupling)
             t_q, t_d, t_p = t_q * op.count, t_d * op.count, t_p * op.count
             bd["analog_queue"] += t_q
             bd["analog_dequeue"] += t_d
             bd["analog_process"] += t_p
-            instrs += op.count * (q_instr + d_instr)
+            instrs += op.count * (counts.queue + counts.dequeue)
             e_aimc += op.count * AIMC_TILE.mvm_energy_j(
-                min(op.k, tile_rows) * row_blocks, op.n, sys.aimc_power_scale)
+                min(op.k, tile_rows) * counts.process, op.n,
+                sys.aimc_power_scale)
             t_total += t_q + t_d + t_p
         elif op.kind == "elemwise":
             t = op.elems * p.elem_cycles[op.fn] / f

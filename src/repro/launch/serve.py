@@ -38,10 +38,26 @@ def parse_args(argv=None):
     ap.add_argument("--reprogram", action="store_true",
                     help="legacy AIMC path: re-program every forward call "
                          "(per-call STE) instead of program-once/apply-many")
+    ap.add_argument("--cores", type=int, default=1,
+                    help="virtual AIMC cores: the MappingPlan spreads the "
+                         "programmed matrices over this many per-core tile "
+                         "contexts and serving reports per-core CM_*/comm "
+                         "ledgers (core.schedule)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="price the multi-core schedule with the "
+                         "position-pipelined latency law (CNN-style, "
+                         "latency = slowest core) instead of the "
+                         "sequential mutex chain (sum of phases)")
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
-    return ap.parse_args(argv)
+    args = ap.parse_args(argv)
+    if ((args.cores > 1 or args.pipeline)
+            and (args.exec_mode != "aimc" or args.reprogram)):
+        ap.error("--cores/--pipeline require the programmed AIMC path "
+                 "(--exec aimc, without --reprogram): the multi-core "
+                 "schedule lowers an installed AimcProgram")
+    return args
 
 
 def main(argv=None):
@@ -88,19 +104,29 @@ def main(argv=None):
                 | {"unembed"})
 
         program = None
+        schedule = None
         if args.exec_mode == "aimc" and not args.reprogram:
             # CM_INITIALIZE: program the whole network once, outside the
             # serving loop (paper §IV-B — the inference region of interest
-            # never re-programs).
+            # never re-programs). --cores spreads the matrices over that
+            # many per-core tile contexts (paper Fig. 2) and the schedule
+            # lowers them onto virtual cores for per-core accounting.
             from repro.core.program import MappingPlan, program_model
+            from repro.core.schedule import CoreSchedule
             t0 = time.time()
-            program = program_model(params, MappingPlan(), aimc_cfg,
+            program = program_model(params,
+                                    MappingPlan(n_contexts=args.cores),
+                                    aimc_cfg,
                                     jax.random.PRNGKey(args.seed + 2))
             params = program.install(params)
             jax.block_until_ready(
                 [st.w_q for st in program.states])
             print(f"[serve] programmed in {time.time() - t0:.2f}s: "
                   f"{program.summary()}")
+            schedule = CoreSchedule.from_program(program,
+                                                 pipelined=args.pipeline)
+            if args.cores > 1 or args.pipeline:
+                print(f"[serve] {schedule.summary()}")
 
         key = jax.random.PRNGKey(args.seed + 1)
         prompts = jax.random.randint(key, (b, p), 1, cfg.vocab)
@@ -149,6 +175,21 @@ def main(argv=None):
                   f"queue={roi.queue} process={roi.process} "
                   f"dequeue={roi.dequeue} (per vector: {per_vec.queue}/"
                   f"{per_vec.process}/{per_vec.dequeue})")
+        if schedule is not None and (args.cores > 1 or args.pipeline):
+            from repro.core.schedule import (pipelined_latency,
+                                             sequential_latency)
+            print(f"  per-core ledgers, one token vector "
+                  f"(queue/process/dequeue, comm bytes, load+store bytes):")
+            for led in schedule.ledgers():
+                print(f"    core{led.core}: {led.cm.queue}/{led.cm.process}/"
+                      f"{led.cm.dequeue}  comm={led.comm_bytes}B  "
+                      f"io={led.load_bytes + led.store_bytes}B")
+            times = schedule.phase_times()
+            print(f"  modeled latency/vector (Table I-A system): "
+                  f"sequential={sequential_latency(times) * 1e6:.1f}us  "
+                  f"pipelined={pipelined_latency(times) * 1e6:.1f}us  "
+                  f"(law in effect: "
+                  f"{'pipelined' if args.pipeline else 'sequential'})")
         for i in range(min(b, 3)):
             print(f"  req{i}: prompt={list(map(int, prompts[i][:6]))}... "
                   f"-> gen={list(map(int, gen[i]))}")

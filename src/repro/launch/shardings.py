@@ -171,6 +171,31 @@ def to_named(specs, mesh):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def aimc_state_spec(leaf_ndim: int, axis: str = "model") -> P:
+    """Column-shard a programmed `AimcLinearState` leaf over `axis`.
+
+    w_q is [..., KB, M, Np] and s_w [..., KB, Np]; the last dim is the bit
+    lines (output columns) in both — the dimension `core.schedule` splits
+    across virtual cores. Sharding it over the model axis places each
+    model-parallel device's slice of every crossbar with the device that
+    consumes its outputs (multi-core schedule serving)."""
+    return P(*([None] * (leaf_ndim - 1) + [axis]))
+
+
+def shard_aimc_states(pspecs, params_shape, mesh, axis: str = "model"):
+    """Rewrite the replicated `AimcLinearState` specs of `get_param_specs`
+    into column-sharded ones. Used by `launch.steps` when serving through a
+    multi-core `core.schedule.CoreSchedule`; non-state leaves keep their
+    specs, and `fit_spec` drops the axis wherever Np does not divide."""
+    def one(path, spec, leaf):
+        if any(hasattr(k, "name") for k in path):   # inside an AimcLinearState
+            return fit_spec(aimc_state_spec(leaf.ndim, axis), leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        one, pspecs, params_shape, is_leaf=lambda x: isinstance(x, P))
+
+
 def strip_fsdp(specs, mesh):
     """Serving weight placement: keep `model` sharding, drop the FSDP axes
     (weights replicate across data rows — no per-token all-gathers). Used by

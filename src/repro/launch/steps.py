@@ -26,7 +26,8 @@ from repro.configs import ArchSpec, ShapeCell
 from repro.launch.mesh import axis_size, dp_axes
 from repro.launch.shardings import (batch_specs, cache_specs, fit_spec,
                                     fit_specs, get_opt_specs,
-                                    get_param_specs, strip_fsdp)
+                                    get_param_specs, shard_aimc_states,
+                                    strip_fsdp)
 from repro.models.layers import Execution
 from repro.optim import make_optimizer
 
@@ -107,6 +108,20 @@ class StepBundle:
     out_shardings: Any
     abstract_inputs: tuple         # ShapeDtypeStructs, positional
     donate_argnums: tuple = ()
+    schedule: Any = None           # core.schedule.CoreSchedule, when serving
+                                   # through a multi-core lowering
+
+
+def _unwrap_program(program):
+    """Serving steps accept either an `AimcProgram` or a multi-core
+    `core.schedule.CoreSchedule`; installation always goes through the
+    underlying program, and the schedule (when given) additionally
+    column-shards the crossbar states and rides on the bundle for per-core
+    ledger reporting (dry-run / serve stats)."""
+    from repro.core.schedule import CoreSchedule
+    if isinstance(program, CoreSchedule):
+        return program.program, program
+    return program, None
 
 
 def _model_forward_hidden(model, spec, cfg, exe):
@@ -237,10 +252,14 @@ def make_prefill_step(spec: ArchSpec, cell: ShapeCell, mesh,
     cfg = spec.model_cfg
     model = spec.model_module()
     cache_dt = jnp.dtype(spec.cache_dtype)
+    program, schedule = _unwrap_program(program)
     params_shape = _serve_params_shape(model, spec, cfg, int8=exe.serve_int8)
     if program is not None:     # program-once serving: mapped projections
         params_shape = program.install_shape(params_shape)  # are AIMC states
     pspecs = fit_specs(get_param_specs(params_shape, mesh), params_shape, mesh)
+    if schedule is not None and schedule.n_cores > 1:
+        # multi-core lowering: each device owns its cores' bit lines
+        pspecs = shard_aimc_states(pspecs, params_shape, mesh)
     if exe.serve_int8:      # int8 weights replicate over data: no gathers
         pspecs = strip_fsdp(pspecs, mesh)
     bspecs = fit_specs(batch_specs(mesh, batch_kind(spec)),
@@ -282,7 +301,7 @@ def make_prefill_step(spec: ArchSpec, cell: ShapeCell, mesh,
     dp = dp_axes(mesh)
     out_tok = fit_spec(P(dp, None), (b, 1), mesh)
     return StepBundle(prefill, (pspecs, bspecs), (out_tok, cspecs),
-                      (params_shape, abstract_b))
+                      (params_shape, abstract_b), schedule=schedule)
 
 
 def make_serve_step(spec: ArchSpec, cell: ShapeCell, mesh,
@@ -291,10 +310,14 @@ def make_serve_step(spec: ArchSpec, cell: ShapeCell, mesh,
     cfg = spec.model_cfg
     model = spec.model_module()
     cache_dt = jnp.dtype(spec.cache_dtype)
+    program, schedule = _unwrap_program(program)
     params_shape = _serve_params_shape(model, spec, cfg, int8=exe.serve_int8)
     if program is not None:     # program-once serving (core.program)
         params_shape = program.install_shape(params_shape)
     pspecs = fit_specs(get_param_specs(params_shape, mesh), params_shape, mesh)
+    if schedule is not None and schedule.n_cores > 1:
+        # multi-core lowering: each device owns its cores' bit lines
+        pspecs = shard_aimc_states(pspecs, params_shape, mesh)
     if exe.serve_int8:      # int8 weights replicate over data: no gathers
         pspecs = strip_fsdp(pspecs, mesh)
     b, s = cell.global_batch, cell.seq_len
@@ -322,7 +345,7 @@ def make_serve_step(spec: ArchSpec, cell: ShapeCell, mesh,
     in_sh = (pspecs, cspecs, tok_spec)
     out_sh = (tok_spec, cspecs)
     return StepBundle(serve_step, in_sh, out_sh, abstract,
-                      donate_argnums=(1,))
+                      donate_argnums=(1,), schedule=schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -331,9 +354,12 @@ def make_serve_step(spec: ArchSpec, cell: ShapeCell, mesh,
 
 def make_step(spec: ArchSpec, cell: ShapeCell, mesh,
               exe: Execution = Execution(), program=None) -> StepBundle:
-    """`program` (an `core.program.AimcProgram`) selects program-once AIMC
+    """`program` (an `core.program.AimcProgram`, or a multi-core
+    `core.schedule.CoreSchedule` wrapping one) selects program-once AIMC
     serving: the step's parameter tree carries the installed crossbar states
-    (training cells reject it — the STE path re-programs by design)."""
+    (training cells reject it — the STE path re-programs by design). A
+    schedule additionally column-shards the states over `model` and rides
+    on the bundle for per-core ledger reporting."""
     if cell.kind == "train":
         if program is not None:
             raise ValueError("AimcProgram is a serving-only handle; "

@@ -12,6 +12,12 @@ The AIMC variants follow the paper's mappings exactly:
     computes all gate pre-activations (§VIII-D); activations digital.
   * CNN: conv kernels flattened into crossbar columns (im2col, [43]);
     feature-map patches queued per output position; dense layers digital.
+
+The ``*_forward_multicore`` variants execute the paper's MULTI-core mappings
+(MLP cases 3/4, LSTM cases 3/4, the pipelined CNN) through
+`core.schedule.CoreSchedule` — column-split crossbar shards per core, with
+per-core CM_*/comm ledgers — and are numerically equal to the single-core
+programmed path (noise off).
 """
 
 from __future__ import annotations
@@ -19,6 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import schedule as schedule_lib
 from repro.core.aimc import AimcConfig, aimc_apply, program_linear
 from repro.core.aimclib import AimcContext
 
@@ -48,6 +55,28 @@ def mlp_forward_aimc(params, x, cfg: AimcConfig, key=None, ctx=None):
         ctx.map_matrix("fc2", params["w2"])
     h = jax.nn.relu(ctx.linear("fc1", x))
     return jax.nn.relu(ctx.linear("fc2", h)), ctx
+
+
+def mlp_program(params, cfg: AimcConfig, key=None):
+    """Program the two MLP matrices (entries fc1/fc2) — the registry both
+    the single-core ctx path and the multi-core schedules execute from."""
+    ctx = AimcContext(cfg, key)
+    ctx.map_matrix("fc1", params["w1"])
+    ctx.map_matrix("fc2", params["w2"])
+    return ctx.program()
+
+
+def mlp_forward_multicore(params, x, cfg: AimcConfig, cores: int = 1,
+                          key=None, schedule=None):
+    """Paper Fig. 6 multi-core mappings through `core.schedule`:
+    cores=1 -> case 1, cores=2 -> case 3 (layer per core), cores=4 ->
+    case 4 (each layer column-split over two cores). Reuse the returned
+    schedule across calls for program-once semantics."""
+    if schedule is None:
+        schedule = schedule_lib.mlp_schedule(mlp_program(params, cfg, key),
+                                             cores)
+    h = jax.nn.relu(schedule.apply("fc1", x))
+    return jax.nn.relu(schedule.apply("fc2", h)), schedule
 
 
 # ---------------------------------------------------------------------------
@@ -115,6 +144,37 @@ def lstm_forward_aimc(params, xs, nh: int, cfg: AimcConfig, key=None,
         h, c = _lstm_cell_math(gates, c, nh)
         ys.append(jax.nn.softmax(ctx.linear("dense", h), axis=-1))
     return jnp.stack(ys), ctx
+
+
+def lstm_program(params, cfg: AimcConfig, key=None):
+    """Program the §VIII-D mapping (gates side by side + dense head)."""
+    ctx = AimcContext(cfg, key)
+    ctx.map_gates("cell", [params["w_f"], params["w_i"], params["w_g"],
+                           params["w_o"]])
+    ctx.map_matrix("dense", params["w_y"])
+    return ctx.program()
+
+
+def lstm_forward_multicore(params, xs, nh: int, cfg: AimcConfig,
+                           cores: int = 1, key=None, schedule=None):
+    """Paper Table II-B multi-core mappings through `core.schedule`:
+    cores=1 -> case 1/2, cores=2 -> case 3 (cell core + dense core),
+    cores=5 -> case 4 (cell gate-sliced over four cores + a dense core).
+    Gate slices reassemble to the full pre-activation vector, so the cell
+    math — and the whole sequence output — matches single-core exactly."""
+    if schedule is None:
+        schedule = schedule_lib.lstm_schedule(
+            lstm_program(params, cfg, key), cores, nh,
+            x_dim=xs.shape[-1], y_dim=params["w_y"].shape[1])
+    b = xs.shape[1]
+    h = jnp.zeros((b, nh))
+    c = jnp.zeros((b, nh))
+    ys = []
+    for t in range(xs.shape[0]):
+        gates = schedule.apply("cell", jnp.concatenate([h, xs[t]], axis=-1))
+        h, c = _lstm_cell_math(gates, c, nh)
+        ys.append(jax.nn.softmax(schedule.apply("dense", h), axis=-1))
+    return jnp.stack(ys), schedule
 
 
 # ---------------------------------------------------------------------------
@@ -215,3 +275,57 @@ def cnn_forward(params, x, variant: str, cfg: AimcConfig | None = None,
         h = h @ w
         h = jax.nn.relu(h) if j < 2 else jax.nn.softmax(h, axis=-1)
     return (h, ctx) if ctx is not None else h
+
+
+def cnn_program(params, variant: str, cfg: AimcConfig, key=None):
+    """Program every conv kernel (im2col-flattened) as entries conv0..4."""
+    ctx = AimcContext(cfg, key)
+    for i, w in enumerate(params["convs"]):
+        ctx.map_matrix(f"conv{i}", w.reshape(-1, w.shape[-1]))
+    return ctx.program()
+
+
+def cnn_pipeline_stages(params, variant: str, cfg: AimcConfig, schedule):
+    """Per-core stage callables of the §IX-A pipeline: stage i runs conv
+    layer i on core i (im2col -> crossbar -> relu/lrn/pool); the final
+    digital stage runs the dense head. Feed to `core.schedule.pipeline_run`
+    to measure per-stage times, or chain sequentially — values are identical
+    either way (pipelining changes timing, not math)."""
+    spec = CNN_SPECS[variant]
+
+    def make(i, row):
+        _cin, k, cout, stride, pad, lrn, pool = row
+
+        def stage(x):
+            patches, ho, wo = _im2col(x, k, stride, pad)
+            b, npos, kdim = patches.shape
+            y = schedule.apply(f"conv{i}", patches.reshape(b * npos, kdim))
+            x2 = jax.nn.relu(y.reshape(b, ho, wo, cout))
+            if lrn:
+                x2 = _lrn(x2)
+            return _pool(x2, pool)
+
+        return stage
+
+    def dense_stage(x):
+        h = x.reshape(x.shape[0], -1)
+        for j, w in enumerate(params["dense"]):
+            h = h @ w
+            h = jax.nn.relu(h) if j < 2 else jax.nn.softmax(h, axis=-1)
+        return h
+
+    return [make(i, row) for i, row in enumerate(spec)] + [dense_stage]
+
+
+def cnn_forward_multicore(params, x, variant: str, cfg: AimcConfig,
+                          key=None, schedule=None):
+    """The pipelined CNN mapping executed through `core.schedule`: one conv
+    layer per core, position-level pipelined in the timing model (the
+    schedule's `pipelined_latency` law); dense head digital."""
+    if schedule is None:
+        schedule = schedule_lib.cnn_schedule(
+            cnn_program(params, variant, cfg, key), CNN_SPECS[variant],
+            img=x.shape[1])
+    for stage in cnn_pipeline_stages(params, variant, cfg, schedule):
+        x = stage(x)
+    return x, schedule

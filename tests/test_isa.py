@@ -1,0 +1,100 @@
+"""Deterministic CM_* accounting invariants (core/isa.py).
+
+These sweeps always run; `tests/test_isa_props.py` re-states the same
+invariants property-based (hypothesis) when the optional dep is present.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import isa
+from repro.core.tile import n_row_blocks
+
+SAMPLES = [
+    isa.CmCounts(),
+    isa.CmCounts(queue=3, process=1, dequeue=7, initialize=12,
+                 queue_bytes=12, dequeue_bytes=28),
+    isa.mvm_counts(256, 128, 256),
+    isa.mvm_counts(1000, 50, 512),
+    isa.initialize_counts(64, 32),
+]
+
+
+@pytest.mark.parametrize("a", SAMPLES)
+def test_add_matches_scaled(a):
+    """a + a == a.scaled(2): __add__ and scaled agree field by field."""
+    assert a + a == a.scaled(2)
+    assert a + a + a == a.scaled(3)
+
+
+@pytest.mark.parametrize("a", SAMPLES)
+@pytest.mark.parametrize("b", SAMPLES[:2])
+def test_scaled_distributes_over_add(a, b):
+    assert (a + b).scaled(5) == a.scaled(5) + b.scaled(5)
+    assert a + b == b + a
+
+
+@pytest.mark.parametrize("a", SAMPLES)
+def test_scaled_identity_and_zero(a):
+    assert a.scaled(1) == a
+    assert a.scaled(0) == isa.CmCounts()
+    assert a + isa.CmCounts() == a
+
+
+def test_total_sums_fieldwise():
+    tot = isa.total(SAMPLES)
+    for f in dataclasses.fields(isa.CmCounts):
+        assert getattr(tot, f.name) == sum(getattr(s, f.name)
+                                           for s in SAMPLES)
+    assert isa.total([]) == isa.CmCounts()
+
+
+@pytest.mark.parametrize("tile_rows", [32, 128, 512, 1024])
+def test_mvm_counts_monotone_in_k_and_n(tile_rows):
+    """More inputs or outputs never cost fewer instructions."""
+    ks = [1, 3, 31, 32, 33, 200, 512, 1025]
+    ns = [1, 4, 5, 50, 128, 1000]
+    for n in ns:
+        prev = isa.CmCounts()
+        for k in ks:
+            c = isa.mvm_counts(k, n, tile_rows)
+            assert c.queue >= prev.queue
+            assert c.process >= prev.process
+            assert c.dequeue >= prev.dequeue
+            prev = c
+    for k in ks:
+        prev = isa.CmCounts()
+        for n in ns:
+            c = isa.mvm_counts(k, n, tile_rows)
+            assert c.dequeue >= prev.dequeue
+            assert c.queue == isa.mvm_counts(k, ns[0], tile_rows).queue
+            prev = c
+
+
+@pytest.mark.parametrize("k", [1, 64, 500, 512, 513, 4096])
+def test_row_block_count_vs_tile_rows(k):
+    """process == ceil(k / tile_rows) (tile.n_row_blocks) and shrinking the
+    word lines never reduces the number of tile activations."""
+    prev = None
+    for tile_rows in (4096, 1024, 512, 128, 32):
+        c = isa.mvm_counts(k, 64, tile_rows)
+        assert c.process == n_row_blocks(k, tile_rows)
+        if prev is not None:
+            assert c.process >= prev
+        prev = c.process
+        if tile_rows >= k:
+            assert c.process == 1
+
+
+def test_mvm_byte_fields():
+    c = isa.mvm_counts(1000, 50, 512)
+    assert c.queue_bytes == 1000                 # int8 activations in
+    assert c.dequeue_bytes == 50 * 2             # codes out, per row block
+    assert c.initialize == 0
+
+
+def test_initialize_counts_is_devices_written():
+    c = isa.initialize_counts(300, 70)
+    assert c.initialize == 300 * 70
+    assert (c.queue, c.process, c.dequeue) == (0, 0, 0)

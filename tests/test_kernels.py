@@ -83,6 +83,50 @@ def test_kernel_bf16_inputs():
                                rtol=0, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Differential sweep: ragged shapes needing padding, decode shapes, noise
+# on/off. The big-shape tail is marked `pallas` (interpret mode is orders of
+# magnitude slower than compiled) so `make test-fast` can skip it; the full
+# tier and CI run everything.
+# ---------------------------------------------------------------------------
+
+DIFF_CASES = [
+    (1, 300, 130, 256),      # batch-1 decode, ragged K and N
+    (1, 1000, 50, 512),      # decode, 2 row blocks, tiny ragged N
+    (3, 513, 257, 512),      # off-by-one ragged in both dims
+    (8, 384, 384, 128),      # 3 row blocks, lane-aligned
+]
+
+
+@pytest.mark.parametrize("noise", [False, True], ids=["nonoise", "noise"])
+@pytest.mark.parametrize("b,k,n,tile_rows", DIFF_CASES)
+def test_diff_sweep_ragged_and_decode(b, k, n, tile_rows, noise):
+    cfg, st, xf, s_x, rn = _setup(b, k, n, tile_rows, seed=b + k, noise=noise)
+    y_ref = ref.aimc_matmul_ref(xf, st.w_q, st.s_w, s_x, rn,
+                                adc_step=cfg.adc_step)
+    y_pal = ops.aimc_matmul(xf, st.w_q, st.s_w, s_x, rn,
+                            adc_step=cfg.adc_step, impl="pallas_interpret")
+    assert y_pal.shape == y_ref.shape
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("noise", [False, True], ids=["nonoise", "noise"])
+@pytest.mark.parametrize("b,k,n,tile_rows", [
+    (128, 1024, 1024, 512),  # production-ish panel, 2 row blocks
+    (16, 2048, 768, 512),    # deep K, 4 row blocks
+])
+def test_diff_sweep_large(b, k, n, tile_rows, noise):
+    cfg, st, xf, s_x, rn = _setup(b, k, n, tile_rows, seed=7, noise=noise)
+    y_ref = ref.aimc_matmul_ref(xf, st.w_q, st.s_w, s_x, rn,
+                                adc_step=cfg.adc_step)
+    y_pal = ops.aimc_matmul(xf, st.w_q, st.s_w, s_x, rn,
+                            adc_step=cfg.adc_step, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=0, atol=1e-5)
+
+
 def test_adc_clipping_visible():
     """Large activations must saturate the 8-bit ADC in both paths."""
     cfg = AimcConfig(tile_rows=256, impl="ref", adc_alpha=0.05)
