@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: tier1 test test-fast test-all bench bench-pipeline serve-aimc \
-        serve-aimc-reprogram serve-aimc-multicore
+.PHONY: tier1 test test-fast test-all bench bench-pipeline bench-json \
+        serve-aimc serve-aimc-reprogram serve-aimc-multicore
 
 # Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
@@ -27,6 +27,14 @@ bench:
 # Multi-core schedule benchmarks alone (measured vs predicted).
 bench-pipeline:
 	$(PY) -m benchmarks.bench_pipeline
+
+# Machine-readable benchmark artifact: per-case wall-clock, modeled latency
+# and check pass/fail (the cross-PR perf-trajectory record). The full suite
+# writes BENCH_all.json; the kernel perf-smoke alone writes
+# BENCH_kernels.json (same artifact ci.sh --fast produces).
+bench-json:
+	$(PY) -m benchmarks.run --json BENCH_all.json
+	$(PY) -m benchmarks.bench_kernels --json BENCH_kernels.json
 
 # Program-once AIMC serving vs the legacy per-call-reprogram path (A/B for
 # the program API speedup; see DESIGN.md §2).

@@ -29,10 +29,11 @@ from repro.core.workloads import mlp_workloads
 
 # Regression floor for the staged/fused HBM-byte ratio (BlockSpec-level
 # accounting at the canonical 1024x1024 / tile 512 / batch 128 shape).
-# Measured 2.21x when recorded; tests/test_coupling.py guards the same
-# constant so the fused kernel's working-set advantage cannot silently
-# erode.
-HBM_RATIO_FLOOR = 1.8
+# Measured 2.21x under kernel v1; kernel v2 (no streamed noise operand,
+# fused epilogue) leans the fused side down to 2,629,640 bytes -> 3.49x.
+# tests/test_coupling.py guards the same constant so the fused kernel's
+# working-set advantage cannot silently erode.
+HBM_RATIO_FLOOR = 3.0
 
 
 def run(verbose: bool = True) -> dict:
@@ -122,8 +123,8 @@ def checks(results=None) -> list[Check]:
               results["s_loose"], 4.1),
         Check("loose slowdown vs tight (paper: up to 3.1x)",
               results["slowdown"], 3.1, rtol=0.2),
-        Check("staged(loose) HBM bytes > fused(tight) bytes",
-              b_loose / b_tight, 1.5, rtol=0.5),
+        Check("staged(loose) HBM bytes vs fused(tight, kernel v2)",
+              b_loose / b_tight, 3.49, rtol=0.15),
         Check(f"HBM byte ratio holds the {HBM_RATIO_FLOOR}x recorded floor",
               min(b_loose / b_tight, HBM_RATIO_FLOOR), HBM_RATIO_FLOOR,
               rtol=0),

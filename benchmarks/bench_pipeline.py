@@ -86,6 +86,17 @@ def run(verbose: bool = True) -> dict:
                      fmt_t(pred_wl), f"{pred_wl / pred_ref:.2f}x",
                      f"{pred_sched / pred_wl:.3f}",
                      f"{_max_diff(y, y_ref):.1e}"])
+    # kernel-v2 fused-epilogue twins: the relu rides the dequeue loop in
+    # BOTH descriptions (Op.epilogue / Shard.epilogue_fn), so the two
+    # latencies must still agree exactly.
+    for cores, case in ((1, "ana_case1_fused"), (2, "ana_case3_fused")):
+        sched = mlp_schedule(prog, cores, fuse_epilogue=True)
+        pred_wl = evaluate(wl[case], HIGH_POWER).time_s
+        pred_sched = sched.modeled_latency(HIGH_POWER)
+        out["consistency"].append((f"mlp_{cores}c_fused", pred_sched / pred_wl))
+        rows.append([case, cores, "-", "-", fmt_t(pred_wl),
+                     f"{pred_wl / pred_ref:.2f}x",
+                     f"{pred_sched / pred_wl:.3f}", "-"])
     if verbose:
         print(table(
             f"MLP ({N_MLP},{N_MLP}) multi-core: executed vs predicted",

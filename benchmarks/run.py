@@ -9,14 +9,21 @@ One module per paper table/figure (DESIGN.md §7):
                                      cost model: measured-vs-predicted)
   bench_coupling  §VII-B            (tight vs loose, analytical + lowered)
   bench_accuracy  §III-C            (AIMC output fidelity vs digital)
-  bench_kernels   kernels/          (Pallas vs oracle + VMEM budget)
+  bench_kernels   kernels/          (Pallas v2 vs oracle + HBM/VMEM ledgers)
   bench_roofline  §Roofline         (dry-run table; run dryrun first)
+
+``--json PATH`` writes machine-readable results — per-case wall-clock,
+modeled latency, and check pass/fail — so the perf trajectory is tracked
+across PRs (``make bench-json`` -> BENCH_kernels.json). ``--only NAME``
+restricts to one module (the CI perf-smoke runs ``--only kernels``).
 
 Exit code 1 if any paper-claim validation fails.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
@@ -25,20 +32,54 @@ from benchmarks import (bench_accuracy, bench_cnn, bench_coupling,
                         bench_roofline)
 
 MODULES = [
-    ("MLP (paper Fig. 7/8)", bench_mlp),
-    ("LSTM (paper Fig. 10/11)", bench_lstm),
-    ("CNN (paper Fig. 13/14)", bench_cnn),
-    ("Multi-core schedules (measured vs predicted)", bench_pipeline),
-    ("Coupling (paper §VII-B)", bench_coupling),
-    ("Fidelity (paper §III-C)", bench_accuracy),
-    ("Pallas kernels", bench_kernels),
+    ("mlp", "MLP (paper Fig. 7/8)", bench_mlp),
+    ("lstm", "LSTM (paper Fig. 10/11)", bench_lstm),
+    ("cnn", "CNN (paper Fig. 13/14)", bench_cnn),
+    ("pipeline", "Multi-core schedules (measured vs predicted)",
+     bench_pipeline),
+    ("coupling", "Coupling (paper §VII-B)", bench_coupling),
+    ("accuracy", "Fidelity (paper §III-C)", bench_accuracy),
+    ("kernels", "Pallas kernels", bench_kernels),
 ]
 
 
-def main() -> None:
+def _jsonable(obj):
+    """Best-effort JSON view of a module's results dict: numpy scalars ->
+    Python, arrays/objects that don't serialize are dropped."""
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            v = _jsonable(v)
+            if v is not None:
+                out[str(k)] = v
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [x for x in (_jsonable(v) for v in obj) if x is not None]
+    if isinstance(obj, (str, bool, int, float)) or obj is None:
+        return obj
+    if hasattr(obj, "item"):                 # numpy/jax scalar
+        try:
+            v = obj.item()
+        except (TypeError, ValueError):
+            return None
+        return v if isinstance(v, (str, bool, int, float)) else None
+    return None
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write per-case results + check pass/fail as JSON")
+    ap.add_argument("--only", metavar="NAME",
+                    choices=[k for k, *_ in MODULES],
+                    help="run a single benchmark module")
+    args = ap.parse_args(argv)
+
     all_checks = []
+    report = {"modules": {}}
     t_start = time.time()
-    for title, mod in MODULES:
+    selected = [m for m in MODULES if args.only in (None, m[0])]
+    for key, title, mod in selected:
         print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
         t0 = time.time()
         results = mod.run(verbose=True)
@@ -46,12 +87,30 @@ def main() -> None:
         all_checks.extend(checks)
         for c in checks:
             print(c.row())
-        print(f"  ({time.time() - t0:.1f}s)")
+        elapsed = time.time() - t0
+        print(f"  ({elapsed:.1f}s)")
+        report["modules"][key] = {
+            "title": title,
+            "elapsed_s": elapsed,
+            "results": _jsonable(results),
+            "checks": [{"name": c.name, "measured": c.measured,
+                        "target": c.target, "rtol": c.rtol, "ok": c.ok}
+                       for c in checks],
+        }
 
-    print(f"\n{'=' * 72}\nRoofline (dry-run table)\n{'=' * 72}")
-    bench_roofline.run(verbose=True)
+    if args.only is None:
+        print(f"\n{'=' * 72}\nRoofline (dry-run table)\n{'=' * 72}")
+        bench_roofline.run(verbose=True)
 
     n_fail = sum(1 for c in all_checks if not c.ok)
+    report["summary"] = {"passed": len(all_checks) - n_fail,
+                         "total": len(all_checks),
+                         "elapsed_s": time.time() - t_start}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"\nwrote {args.json}")
+
     print(f"\n{'=' * 72}")
     print(f"SUMMARY: {len(all_checks) - n_fail}/{len(all_checks)} paper-claim "
           f"validations passed ({time.time() - t_start:.1f}s)")

@@ -4,7 +4,9 @@
 #   ./ci.sh            run the FULL tier-1 test suite (includes the slow
 #                      interpret-mode Pallas sweeps and subprocess tests)
 #   ./ci.sh --fast     inner-loop tier: skip tests marked pallas/slow
-#                      (see [tool.pytest.ini_options].markers)
+#                      (see [tool.pytest.ini_options].markers), then run the
+#                      kernel perf-smoke (bench_kernels in interpret mode,
+#                      writes BENCH_kernels.json, fails on check regression)
 #   ./ci.sh --install  pip-install pinned deps first (no-op in the baked image)
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -16,6 +18,8 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--fast" ]]; then
-    exec python -m pytest -x -q -m "not pallas and not slow"
+    python -m pytest -x -q -m "not pallas and not slow"
+    echo "== perf-smoke: bench_kernels (interpret mode) =="
+    exec python -m benchmarks.bench_kernels --json BENCH_kernels.json
 fi
 exec python -m pytest -x -q

@@ -45,6 +45,12 @@ class AimcConfig:
     noise: noise_lib.NoiseModel = noise_lib.DISABLED
     impl: str = "ref"              # ref | pallas_interpret | pallas_tpu
     out_dtype: str = "float32"
+    # kernel v2: apply bias + activation inside the kernel's last row-block
+    # step (False = exact unfused fallback, same math as separate ops).
+    fuse_epilogue: bool = True
+    # read-noise generator: "counter" (cprng, oracle-bit-identical; the CI
+    # path) or "hw" (pltpu PRNG, compiled TPU only).
+    noise_source: str = "counter"
 
     @property
     def adc_step(self) -> float:
@@ -129,39 +135,150 @@ def program_stacked(w: jnp.ndarray, cfg: AimcConfig,
         k=st.k, n=st.n)
 
 
-def aimc_apply(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig,
-               key: jax.Array | None = None) -> jnp.ndarray:
-    """CM_QUEUE + CM_PROCESS + CM_DEQUEUE on a programmed layer.
-
-    x: [..., K] -> [..., N]. Leading dims are flattened for the kernel.
-    """
+def _flatten_pad_input(x: jnp.ndarray, state: AimcLinearState, cfg: AimcConfig):
+    """Shared CM_QUEUE front end: flatten leading dims, pad K to whole row
+    blocks, compute the DAC scale. Returns (xf [B, KB*M], s_x, lead dims)."""
     *lead, k = x.shape
     if k != state.k:
         raise ValueError(f"in_features mismatch: {k} != {state.k}")
-    kb, m, np_ = state.w_q.shape
+    kb, m, np_ = state.w_q.shape[-3:]
     b = 1
     for d in lead:
         b *= d
     xf = x.reshape(b, k).astype(jnp.float32)
     if k != kb * m:
         xf = jnp.pad(xf, ((0, 0), (0, kb * m - k)))
-
     if cfg.input_scale > 0.0:
         s_x = jnp.full((1, 1), cfg.input_scale, jnp.float32)
     else:
         s_x = sym_scale(xf).reshape(1, 1)
+    return xf, s_x, lead
 
+
+def _noise_args(cfg: AimcConfig, key: jax.Array | None, active_rows: int):
+    """(seed, sigma) for the in-kernel PRNG — (None, 0.0) compiles noise out."""
     if cfg.noise.enabled and key is not None and cfg.noise.sigma_read > 0.0:
-        rnoise = noise_lib.read_noise(key, (kb, b, np_), m, cfg.noise)
-    else:
-        rnoise = jnp.zeros((kb, b, np_), jnp.float32)
+        return (noise_lib.derive_read_seed(key),
+                noise_lib.read_sigma_lsb(active_rows, cfg.noise))
+    return None, 0.0
 
-    y = kernel_ops.aimc_matmul(
-        xf, state.w_q, state.s_w, s_x, rnoise,
-        adc_step=cfg.adc_step, impl=cfg.impl,
+
+def _pad_bias(bias: jnp.ndarray | None, n: int, np_: int):
+    if bias is None:
+        return None
+    bias = jnp.asarray(bias).reshape(-1).astype(jnp.float32)
+    if bias.shape[0] != n:
+        raise ValueError(f"bias has {bias.shape[0]} features, layer has {n}")
+    return jnp.pad(bias, (0, np_ - n)) if np_ != n else bias
+
+
+def aimc_apply(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig,
+               key: jax.Array | None = None, *,
+               bias: jnp.ndarray | None = None,
+               activation: str = "none") -> jnp.ndarray:
+    """CM_QUEUE + CM_PROCESS + CM_DEQUEUE on a programmed layer.
+
+    x: [..., K] -> [..., N]. Leading dims are flattened for the kernel.
+    Read noise (when enabled) is drawn *inside* the kernel from a scalar
+    seed derived off `key` — no noise tensor is ever allocated. `bias` /
+    `activation` form the epilogue: fused into the kernel's last row-block
+    step when `cfg.fuse_epilogue`, applied as identical f32 ops after the
+    kernel otherwise.
+    """
+    kb, m, np_ = state.w_q.shape
+    xf, s_x, lead = _flatten_pad_input(x, state, cfg)
+    seed, sigma = _noise_args(cfg, key, m)
+    fuse = cfg.fuse_epilogue
+    y = kernel_ops.aimc_matmul_v2(
+        xf, state.w_q, state.s_w, s_x, seed,
+        _pad_bias(bias, state.n, np_) if fuse else None,
+        adc_step=cfg.adc_step, sigma=sigma,
+        activation=activation if fuse else "none",
+        impl=cfg.impl, noise_source=cfg.noise_source,
     )
-    y = y[:, : state.n].astype(jnp.dtype(cfg.out_dtype))
+    y = y[:, : state.n]
+    if not fuse:
+        if bias is not None:
+            y = y + jnp.asarray(bias).reshape(1, -1).astype(jnp.float32)
+        y = kernel_ops.EPILOGUE_FNS[activation](y)
+    y = y.astype(jnp.dtype(cfg.out_dtype))
     return y.reshape(*lead, state.n)
+
+
+def stack_states(states, axis: int = 0) -> AimcLinearState:
+    """Stack same-shape programmed states into one `[G, ...]` gate stack.
+
+    The stacked state is the storage format of the gate-fused multi-MVM —
+    build it ONCE at programming/install time (it copies the conductance
+    codes); stacking per call would re-stream the weights the fused kernel
+    exists to keep stationary. `axis` places the gate dim inside existing
+    stack dims: layer-scanned `[L, ...]` states stack at axis=1 so
+    `lax.scan`'s per-layer slice exposes the `[G, ...]` gate stack."""
+    sts = list(states)
+    if len(sts) < 2:
+        raise ValueError("a gate stack needs at least two states")
+    first = sts[0]
+    if not 0 <= axis <= len(first.stack_shape):
+        raise ValueError(f"axis {axis} outside stack dims "
+                         f"{first.stack_shape}")
+    for st in sts[1:]:
+        if (st.k, st.n) != (first.k, first.n) or st.w_q.shape != first.w_q.shape:
+            raise ValueError(
+                f"gate stack shape mismatch: {st.w_q.shape} ({st.k},{st.n}) "
+                f"vs {first.w_q.shape} ({first.k},{first.n})")
+    return AimcLinearState(
+        w_q=jnp.stack([st.w_q for st in sts], axis=axis),
+        s_w=jnp.stack([st.s_w for st in sts], axis=axis),
+        k=first.k, n=first.n)
+
+
+def aimc_apply_stacked(stack: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig,
+                       key: jax.Array | None = None, *,
+                       biases: jnp.ndarray | None = None,
+                       activations="none") -> jnp.ndarray:
+    """Gate-fused multi-MVM on a `[G, ...]`-stacked programmed state.
+
+    x: [..., K] -> [G, ..., N]: ONE weight-stationary kernel launch computes
+    every gate, sharing the input block and its DAC quantization.
+    `activations` is one epilogue name or a per-gate tuple; `biases` is
+    `[G, N]`. Gate g draws noise under `cprng.stack_seed`, so (noise off)
+    the outputs are bit-equal to per-gate `aimc_apply` calls.
+    """
+    if len(stack.stack_shape) != 1:
+        raise ValueError(
+            f"aimc_apply_stacked needs one leading gate dim, got stack shape "
+            f"{stack.stack_shape}")
+    g_ = stack.stack_shape[0]
+    kb, m, np_ = stack.w_q.shape[-3:]
+    xf, s_x, lead = _flatten_pad_input(x, stack, cfg)
+    seed, sigma = _noise_args(cfg, key, m)
+    if isinstance(activations, str):
+        activations = (activations,) * g_
+    activations = tuple(activations)
+    fuse = cfg.fuse_epilogue
+    if biases is not None:
+        biases = jnp.asarray(biases).reshape(g_, -1).astype(jnp.float32)
+        if biases.shape[1] != stack.n:
+            raise ValueError(f"biases have {biases.shape[1]} features, "
+                             f"layer has {stack.n}")
+    bias_arg = None
+    if fuse and biases is not None:
+        bias_arg = (jnp.pad(biases, ((0, 0), (0, np_ - stack.n)))
+                    if np_ != stack.n else biases)
+    y = kernel_ops.aimc_matmul_stacked(
+        xf, stack.w_q, stack.s_w, s_x, seed, bias_arg,
+        adc_step=cfg.adc_step, sigma=sigma,
+        activations=activations if fuse else "none",
+        impl=cfg.impl, noise_source=cfg.noise_source,
+    )
+    y = y[:, :, : stack.n]                                    # [G, B, N]
+    if not fuse:
+        if biases is not None:
+            y = y + biases[:, None, :]
+        y = jnp.stack([kernel_ops.EPILOGUE_FNS[a](y[g])
+                       for g, a in enumerate(activations)])
+    y = y.astype(jnp.dtype(cfg.out_dtype))
+    return y.reshape(g_, *lead, stack.n)
 
 
 # ---------------------------------------------------------------------------

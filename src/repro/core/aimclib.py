@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import isa
-from repro.core.aimc import AimcConfig, AimcLinearState, aimc_apply
+from repro.core.aimc import (AimcConfig, AimcLinearState, aimc_apply,
+                             aimc_apply_stacked)
 from repro.core.program import AimcProgram, ProgramBuilder
 from repro.core.tile import TileMap
 
@@ -64,6 +65,19 @@ class AimcContext:
         self._counts[name] = isa.initialize_counts(state.k, state.n)
         return state
 
+    def map_gate_stack(self, name: str,
+                       gates: Sequence[jnp.ndarray]) -> AimcLinearState:
+        """Program same-SHAPE gate matrices as a `[G, ...]` stacked tenant
+        for the gate-fused multi-MVM (kernel v2): `linear_stack` runs all G
+        as one weight-stationary kernel launch with a per-gate epilogue.
+        Same crossbar footprint and CM_* profile as `map_gates` (queue the
+        shared input once, dequeue every gate's columns)."""
+        w = jnp.stack([jnp.asarray(g) for g in gates])
+        state = self._builder.add(name, w, self._next_key())
+        self._counts[name] = isa.initialize_counts(
+            state.k, state.n).scaled(state.instances)
+        return state
+
     # -- the Fig. 4 instruction-level flow -----------------------------------
     def queue_vector(self, name: str, x: jnp.ndarray) -> None:
         st = self._state(name)
@@ -81,10 +95,25 @@ class AimcContext:
         return aimc_apply(self._state(name), x, self.cfg, self._next_key())
 
     # -- fused path -----------------------------------------------------------
-    def linear(self, name: str, x: jnp.ndarray) -> jnp.ndarray:
+    def linear(self, name: str, x: jnp.ndarray,
+               bias: jnp.ndarray | None = None,
+               activation: str = "none") -> jnp.ndarray:
         st = self._state(name)
         self._counts[name] += isa.mvm_counts(st.k, st.n, self.cfg.tile_rows)
-        return aimc_apply(st, x, self.cfg, self._next_key())
+        return aimc_apply(st, x, self.cfg, self._next_key(), bias=bias,
+                          activation=activation)
+
+    def linear_stack(self, name: str, x: jnp.ndarray,
+                     activations="none") -> jnp.ndarray:
+        """Apply a `map_gate_stack` tenant: one gate-fused kernel launch,
+        `[G, ..., N]` out. Accounted as the side-by-side mapping (shared
+        queue, per-gate dequeue — the §VIII-D instruction profile)."""
+        st = self._state(name)
+        g = st.instances
+        self._counts[name] += isa.mvm_counts(st.k, g * st.n,
+                                             self.cfg.tile_rows)
+        return aimc_apply_stacked(st, x, self.cfg, self._next_key(),
+                                  activations=activations)
 
     # -- bookkeeping ----------------------------------------------------------
     def __contains__(self, name: str) -> bool:

@@ -162,6 +162,10 @@ class Op:
     count: int = 1            # e.g. conv output positions re-using the kernel
     aimc: bool = False
     conv: bool = False        # direct-conv (vs gemv) digital efficiency class
+    # fused epilogue (aimc mvm only): activation applied inside the
+    # CM_DEQUEUE loop instead of as a separate elemwise pass (kernel v2's
+    # fused-epilogue contract in cost-model terms). "" = none.
+    epilogue: str = ""
     # elemwise
     fn: str = "relu"
     elems: int = 0
@@ -237,6 +241,25 @@ def aimc_mvm_time(counts: isa.CmCounts, sys: SystemConfig,
     return t_q, t_p, t_d
 
 
+def fused_epilogue_time(elems: int, fn: str, dequeue_count: int,
+                        sys: SystemConfig, p: CalibratedParams = CALIB) -> float:
+    """Visible time of an activation folded into the CM_DEQUEUE loop.
+
+    An unfused epilogue is a separate elemwise pass (a plain `Op(elemwise)`).
+    Fused, the ALU work interleaves with the dequeue's CPU->tile
+    transactions: the in-order core can hide up to `cm_dequeue_cycles` of
+    arithmetic behind each transaction's latency, so only the excess shows.
+    Cheap epilogues (relu at 1 cycle/elem, 4 elems/word vs a 45-cycle
+    transaction) vanish entirely; transcendentals (sigmoid/tanh at 33
+    cycles/elem) overflow the bubble and pay the remainder. THE shared
+    accounting — `evaluate()` and `core.schedule.shard_time` both price
+    fused epilogues through this one function.
+    """
+    cycles = elems * p.elem_cycles[fn]
+    hidden = dequeue_count * p.cm_dequeue_cycles
+    return max(0.0, cycles - hidden) / sys.freq_hz
+
+
 def _stage_time(stage: Stage, sys: SystemConfig, p: CalibratedParams,
                 coupling: str, tile_rows: int):
     """Returns (time_s, breakdown, aimc_energy_j, stall_s, instr_count)."""
@@ -259,6 +282,9 @@ def _stage_time(stage: Stage, sys: SystemConfig, p: CalibratedParams,
             counts = isa.mvm_counts(op.k, op.n, tile_rows)
             t_q, t_p, t_d = aimc_mvm_time(counts, sys, p, coupling)
             t_q, t_d, t_p = t_q * op.count, t_d * op.count, t_p * op.count
+            if op.epilogue:
+                t_d += fused_epilogue_time(op.count * op.n, op.epilogue,
+                                           op.count * counts.dequeue, sys, p)
             bd["analog_queue"] += t_q
             bd["analog_dequeue"] += t_d
             bd["analog_process"] += t_p

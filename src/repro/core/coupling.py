@@ -27,16 +27,15 @@ from repro.kernels import ops as kernel_ops
 
 
 def tight_forward(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig) -> jnp.ndarray:
-    """Fused execution (the default production path)."""
+    """Fused execution (the default production path): kernel v2, no noise
+    operand (noise, when enabled, is drawn in-kernel from a scalar seed)."""
     kb, m, np_ = state.w_q.shape
-    b = x.shape[0]
     xf = x.astype(jnp.float32)
     if xf.shape[1] != kb * m:
         xf = jnp.pad(xf, ((0, 0), (0, kb * m - xf.shape[1])))
     s_x = sym_scale(xf).reshape(1, 1)
-    rnoise = jnp.zeros((kb, b, np_), jnp.float32)
-    y = kernel_ops.aimc_matmul(xf, state.w_q, state.s_w, s_x, rnoise,
-                               adc_step=cfg.adc_step, impl=cfg.impl)
+    y = kernel_ops.aimc_matmul_v2(xf, state.w_q, state.s_w, s_x,
+                                  adc_step=cfg.adc_step, impl=cfg.impl)
     return y[:, : state.n]
 
 
@@ -67,8 +66,28 @@ def loose_forward(state: AimcLinearState, x: jnp.ndarray, cfg: AimcConfig) -> jn
 # HBM traffic accounting (the quantitative tight-vs-loose gap on TPU)
 # ---------------------------------------------------------------------------
 
+def hbm_noise_bytes(state: AimcLinearState, batch: int, *,
+                    noise_streamed: bool = False) -> int:
+    """HBM bytes the noise path costs per call: the v1 `[KB, B, Np]` f32
+    operand when streamed, the 4-byte scalar-prefetched seed under kernel
+    v2's in-kernel PRNG."""
+    kb, m, np_ = state.w_q.shape[-3:]
+    return kb * batch * np_ * 4 if noise_streamed else 4
+
+
+def hbm_epilogue_bytes(state: AimcLinearState, batch: int, *,
+                       epilogue_fused: bool = True) -> int:
+    """HBM bytes of the layer epilogue (bias + activation): zero when fused
+    into the kernel's last row-block step (kernel v2), one full read + write
+    of the f32 output when it runs as a separate XLA op."""
+    np_ = state.w_q.shape[-1]
+    return 0 if epilogue_fused else 2 * batch * np_ * 4
+
+
 def hbm_bytes_tight(state: AimcLinearState, batch: int,
-                    block_b: int = 128, block_n: int = 512) -> int:
+                    block_b: int = 128, block_n: int = 512, *,
+                    noise_streamed: bool = False,
+                    epilogue_fused: bool = True) -> int:
     """HBM bytes of ONE fused-kernel call, from the BlockSpecs of
     kernels/aimc_mvm.py.
 
@@ -77,15 +96,21 @@ def hbm_bytes_tight(state: AimcLinearState, batch: int,
     column tile, the int8 weight panel once per batch tile. No analog-domain
     intermediate (x_q, bit-line accumulations, ADC codes) ever leaves VMEM —
     that is the kernel-fusion translation of the paper's tight coupling.
+
+    Defaults model kernel v2: no noise operand (a 4-byte seed instead of the
+    v1 `[KB, B, Np]` f32 stream) and the epilogue fused into the last grid
+    step. `noise_streamed=True` / `epilogue_fused=False` reproduce the v1
+    accounting for before/after tables.
     """
     kb, m, np_ = state.w_q.shape
     bb, bn = min(block_b, batch), min(block_n, np_)
     x = batch * kb * m * 4 * (np_ // bn)          # x f32, per column tile
     w = kb * m * np_ * 1 * (batch // bb or 1)     # int8 weights, per batch tile
-    noise = kb * batch * np_ * 4                  # read-noise input
     out = batch * np_ * 4                         # written once (VMEM-resident)
     scales = kb * np_ * 4 + 4
-    return x + w + noise + out + scales
+    return (x + w + out + scales
+            + hbm_noise_bytes(state, batch, noise_streamed=noise_streamed)
+            + hbm_epilogue_bytes(state, batch, epilogue_fused=epilogue_fused))
 
 
 def hbm_bytes_loose(state: AimcLinearState, batch: int,
@@ -93,9 +118,11 @@ def hbm_bytes_loose(state: AimcLinearState, batch: int,
     """HBM bytes of the staged execution: every pipeline stage materializes
     its result (x_q int8, bit-line int32 accumulations, ADC int32 codes) to
     HBM and the next stage reads it back — the TPU mirror of each value
-    crossing the paper's I/O bus."""
+    crossing the paper's I/O bus. Staging implies the v1 noise stream and an
+    unfused epilogue."""
     kb, m, np_ = state.w_q.shape
-    base = hbm_bytes_tight(state, batch, block_b, block_n)
+    base = hbm_bytes_tight(state, batch, block_b, block_n,
+                           noise_streamed=True, epilogue_fused=False)
     x_q = batch * kb * m * 1
     acc = kb * batch * np_ * 4
     codes = kb * batch * np_ * 4

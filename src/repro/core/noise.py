@@ -69,11 +69,36 @@ def programming_noise(key: jax.Array, w_codes: jnp.ndarray, nm: NoiseModel) -> j
 
 
 def read_noise(key: jax.Array, shape, active_rows: int, nm: NoiseModel) -> jnp.ndarray:
-    """Additive bit-line noise (int32-accumulator LSB units) for one CM_PROCESS."""
+    """Additive bit-line noise (int32-accumulator LSB units) for one CM_PROCESS.
+
+    Bulk-array form (jax.random). The execution path no longer materializes
+    this tensor: kernel v2 draws the same-distribution noise in-kernel from
+    a scalar seed (`derive_read_seed` + `read_sigma_lsb`); this function
+    remains for the noise-model unit tests and off-path analysis."""
     if not nm.enabled or nm.sigma_read == 0.0:
         return jnp.zeros(shape, dtype=jnp.float32)
-    sigma = nm.sigma_read * QMAX * (active_rows ** 0.5)
+    sigma = read_sigma_lsb(active_rows, nm)
     return sigma * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def read_sigma_lsb(active_rows: int, nm: NoiseModel) -> float:
+    """Read-noise std in accumulator LSBs for an `active_rows`-row tile —
+    the STATIC scale kernel v2 bakes into the compiled kernel (0.0 compiles
+    the noise code out)."""
+    if not nm.enabled:
+        return 0.0
+    return float(nm.sigma_read * QMAX * (active_rows ** 0.5))
+
+
+def derive_read_seed(key: jax.Array) -> jnp.ndarray:
+    """Collapse a JAX PRNG key to the scalar uint32 seed kernel v2 prefetches.
+
+    One `jax.random.bits` draw — deterministic per key, so programs/tests
+    that fold or split keys per call/layer/shard get decorrelated streams
+    exactly as they did with materialized `jax.random.normal` noise. The
+    per-element expansion from this scalar is `kernels.cprng` (counter mode)
+    or the TPU hardware PRNG (`noise_source="hw"`)."""
+    return jax.random.bits(key, dtype=jnp.uint32)
 
 
 def apply_drift(w_analog: jnp.ndarray, nm: NoiseModel) -> jnp.ndarray:

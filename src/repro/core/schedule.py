@@ -45,7 +45,8 @@ import numpy as np
 
 from repro.core import isa
 from repro.core.aimc import AimcLinearState, aimc_apply
-from repro.core.costmodel import CALIB, HIGH_POWER, aimc_mvm_time
+from repro.core.costmodel import (CALIB, HIGH_POWER, aimc_mvm_time,
+                                  fused_epilogue_time)
 from repro.core.program import AimcProgram
 
 
@@ -97,7 +98,12 @@ class Shard:
     dependency chain); ``comm_out_bytes`` what it forwards.
     ``digital_cycles`` prices the stage's CPU-side element-wise tail (relu /
     cell math / softmax ...) in core cycles, so schedule-modeled latency is
-    comparable to `costmodel.evaluate` on the matching `Workload`."""
+    comparable to `costmodel.evaluate` on the matching `Workload`.
+    ``epilogue_fn``/``epilogue_elems`` instead declare an activation FUSED
+    into the shard's dequeue loop (kernel v2's fused epilogue), priced by
+    the shared `costmodel.fused_epilogue_time` — cheap epilogues hide under
+    the per-word transaction latency and cost nothing. ``epilogue_elems``
+    is PER FIRING (scaled by count * instances like the MVM itself)."""
 
     name: str
     core: int
@@ -110,6 +116,8 @@ class Shard:
     load_bytes: int = 0
     store_bytes: int = 0
     digital_cycles: float = 0.0
+    epilogue_fn: str = ""
+    epilogue_elems: int = 0
 
     def n_cols(self, state: AimcLinearState) -> int:
         if self.cols is None:
@@ -305,7 +313,15 @@ class CoreSchedule:
         st = self.program[sh.name]
         cm = isa.mvm_counts(st.k, sh.n_cols(st), self.cfg.tile_rows)
         t_q, t_p, t_d = aimc_mvm_time(cm, sys, p, coupling)
-        t = (t_q + t_p + t_d) * sh.count * st.instances
+        reps = sh.count * st.instances
+        t = (t_q + t_p + t_d) * reps
+        if sh.epilogue_fn:
+            # epilogue_elems is per firing; elems and the hiding dequeue
+            # budget scale together (mirrors costmodel._stage_time's
+            # op.count scaling)
+            t += fused_epilogue_time(
+                sh.epilogue_elems * reps, sh.epilogue_fn,
+                cm.dequeue * reps, sys, p)
         f = sys.freq_hz
         t += sh.comm_events * p.sync_s
         t += (sh.comm_in_bytes + sh.comm_out_bytes) * p.comm_cycles_per_byte / f
@@ -393,43 +409,49 @@ def pipeline_run(stage_fns: Sequence[Callable], inputs: Sequence):
 # ---------------------------------------------------------------------------
 
 def mlp_schedule(program: AimcProgram, cores: int = 1,
-                 p=CALIB) -> CoreSchedule:
+                 p=CALIB, fuse_epilogue: bool = False) -> CoreSchedule:
     """The paper's MLP analog mappings (Fig. 6) over entries fc1/fc2.
 
     cores=1 -> case 1 (both layers one core); cores=2 -> case 3 (layer per
     core, mutex hand-off); cores=4 -> case 4 (each layer column-split over
     two cores, all-to-all half hand-offs). Comm edges and digital relu
     cycles mirror `workloads.mlp_workloads` op for op, so
-    `modeled_latency()` tracks `costmodel.evaluate` on the same case."""
+    `modeled_latency()` tracks `costmodel.evaluate` on the same case.
+    ``fuse_epilogue`` folds each layer's relu into its dequeue loop (kernel
+    v2) instead of a separate digital pass — the matching workloads carry
+    `Op(..., epilogue="relu")`."""
     n_in, n1 = program["fc1"].k, program["fc1"].n
     n2 = program["fc2"].n
     relu = p.elem_cycles["relu"]
+
+    def tail(elems):
+        """Per-shard relu epilogue: fused into the dequeue or digital."""
+        if fuse_epilogue:
+            return {"epilogue_fn": "relu", "epilogue_elems": elems}
+        return {"digital_cycles": elems * relu}
+
     if cores == 1:
-        shards = [Shard("fc1", 0, 0, load_bytes=n_in,
-                        digital_cycles=n1 * relu),
-                  Shard("fc2", 0, 1, store_bytes=n2,
-                        digital_cycles=n2 * relu)]
+        shards = [Shard("fc1", 0, 0, load_bytes=n_in, **tail(n1)),
+                  Shard("fc2", 0, 1, store_bytes=n2, **tail(n2))]
     elif cores == 2:
-        shards = [Shard("fc1", 0, 0, load_bytes=n_in,
-                        digital_cycles=n1 * relu),
+        shards = [Shard("fc1", 0, 0, load_bytes=n_in, **tail(n1)),
                   Shard("fc2", 1, 1, comm_in_bytes=n1, comm_events=1,
-                        store_bytes=n2, digital_cycles=n2 * relu)]
+                        store_bytes=n2, **tail(n2))]
     elif cores == 4:
         h1, h2 = n1 // 2, n2 // 2
         shards = [
-            Shard("fc1", 0, 0, cols=((0, h1),), load_bytes=n_in,
-                  digital_cycles=h1 * relu),
+            Shard("fc1", 0, 0, cols=((0, h1),), load_bytes=n_in, **tail(h1)),
             Shard("fc1", 1, 0, cols=((h1, n1),), comm_in_bytes=n_in,
-                  comm_events=1, digital_cycles=(n1 - h1) * relu),
+                  comm_events=1, **tail(n1 - h1)),
             Shard("fc2", 2, 1, cols=((0, h2),), comm_in_bytes=n1,
-                  comm_events=2, store_bytes=h2, digital_cycles=h2 * relu),
+                  comm_events=2, store_bytes=h2, **tail(h2)),
             Shard("fc2", 3, 1, cols=((h2, n2),), comm_in_bytes=n1,
-                  comm_events=2, store_bytes=n2 - h2,
-                  digital_cycles=(n2 - h2) * relu),
+                  comm_events=2, store_bytes=n2 - h2, **tail(n2 - h2)),
         ]
     else:
         raise ValueError(f"MLP mappings exist for 1/2/4 cores, not {cores}")
-    return CoreSchedule(program, shards, name=f"mlp_{cores}c")
+    suffix = "_fused" if fuse_epilogue else ""
+    return CoreSchedule(program, shards, name=f"mlp_{cores}c{suffix}")
 
 
 def _lstm_cell_cycles(nh: int, frac: float = 1.0, p=CALIB) -> float:

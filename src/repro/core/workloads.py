@@ -95,8 +95,30 @@ def mlp_workloads(n: int = 1024) -> dict[str, Workload]:
             for _ in range(2))
         return Workload("mlp_ana_case4", (l1, l2), tile_rows=n)
 
+    def analog_fused(case: int) -> Workload:
+        """Kernel-v2 fused-epilogue twins of cases 1/3: each relu rides its
+        layer's dequeue loop (`Op(..., epilogue="relu")`) instead of running
+        as a separate elemwise pass — matches
+        `schedule.mlp_schedule(..., fuse_epilogue=True)` op for op."""
+        if case == 1:
+            ops = (Op("load", bytes=n),
+                   Op("mvm", k=n, n=n, aimc=True, epilogue="relu"),
+                   Op("mvm", k=n, n=n, aimc=True, epilogue="relu"),
+                   Op("store", bytes=n))
+            return Workload("mlp_ana_case1_fused", ((Stage(ops, act_bytes=act),),),
+                            tile_rows=n)
+        phases = (
+            (Stage((Op("load", bytes=n),
+                    Op("mvm", k=n, n=n, aimc=True, epilogue="relu"))),),
+            (Stage((Op("comm", bytes=n),
+                    Op("mvm", k=n, n=n, aimc=True, epilogue="relu"),
+                    Op("store", bytes=n))),),
+        )
+        return Workload("mlp_ana_case3_fused", phases, tile_rows=n)
+
     out = {f"dig_{c}c": digital(c) for c in (1, 2, 4)}
     out |= {f"ana_case{i}": analog(i) for i in (1, 2, 3, 4)}
+    out |= {f"ana_case{i}_fused": analog_fused(i) for i in (1, 3)}
     # §VII-B loosely-coupled variant: case-1 mapping over the I/O bus.
     loose = analog(1)
     out["ana_loose"] = Workload("mlp_ana_loose", loose.phases,

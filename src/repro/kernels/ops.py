@@ -1,9 +1,16 @@
 """Jit'd dispatch wrappers around the AIMC kernels.
 
-``aimc_matmul`` is the single entry point used by ``core.aimc``; it selects
-between the pure-jnp oracle (default on CPU — numerically identical to the
-Pallas kernel) and the Pallas kernel (interpret mode here, native on TPU),
-and normalizes padding so callers never worry about block alignment.
+``aimc_matmul_v2`` is the execution-path entry point used by ``core.aimc``:
+in-kernel PRNG read noise (scalar seed instead of a streamed `[KB, B, Np]`
+tensor), fused bias/activation epilogue, and `aimc_matmul_stacked` for
+gate-fused multi-MVM stacks. Each selects between the pure-jnp oracle
+(default on CPU — numerically identical to the Pallas kernel) and the Pallas
+kernel (interpret mode here, native on TPU), and normalizes padding so
+callers never worry about block alignment.
+
+``aimc_matmul`` keeps the v1 contract (an explicit noise operand) for the
+staged/loose comparisons and differential tests; `read_noise=None` now skips
+the noise operand entirely instead of streaming zeros.
 """
 
 from __future__ import annotations
@@ -11,25 +18,66 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.aimc_mvm import aimc_matmul_pallas
+from repro.kernels.aimc_mvm import (EPILOGUES, aimc_matmul_pallas,
+                                    aimc_matmul_pallas_stacked,
+                                    aimc_matmul_pallas_v2)
+from repro.kernels.ref import EPILOGUE_FNS  # re-export: unfused fallbacks
 
 IMPLS = ("ref", "pallas_interpret", "pallas_tpu")
 
 
-def aimc_matmul(x, w_q, s_w, s_x, read_noise, *, adc_step: float,
-                impl: str = "ref", block_b: int = 128, block_n: int = 512):
-    """Fused AIMC crossbar matmul. See kernels/ref.py for the tensor contract."""
-    if impl == "ref":
-        return _ref.aimc_matmul_ref(x, w_q, s_w, s_x, read_noise, adc_step=adc_step)
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _pick_blocks(b: int, np_: int, block_b: int, block_n: int) -> tuple[int, int]:
+    """Block sizes honoring TPU lane alignment: bN is always a multiple of
+    128 that divides Np (weight columns are 128-padded at programming time;
+    a non-aligned Np is a contract violation, not something to shrink the
+    block below the lane width for)."""
+    if np_ % 128:
+        raise ValueError(
+            f"Np={np_} is not 128-lane aligned; pad weights at programming "
+            f"time (program_linear pads Np for exactly this reason)")
+    bn = min(_round_up(block_n, 128), np_)
+    while np_ % bn:
+        bn -= 128
+    bb = min(block_b, _round_up(b, 8))
+    return bb, bn
+
+
+def _check_impl(impl: str) -> None:
     if impl not in IMPLS:
         raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
 
+
+def _check_noise_source(noise_source: str, sigma: float, impl: str) -> None:
+    """The hardware PRNG (`pltpu.prng_*`) only lowers on compiled TPU; the
+    counter generator is the oracle-bit-identical path everywhere else."""
+    if sigma > 0.0 and noise_source == "hw" and impl != "pallas_tpu":
+        raise ValueError(
+            'noise_source="hw" needs impl="pallas_tpu" (the interpreter and '
+            'the oracle have no hardware PRNG); use "counter"')
+
+
+def aimc_matmul(x, w_q, s_w, s_x, read_noise=None, *, adc_step: float,
+                impl: str = "ref", block_b: int = 128, block_n: int = 512):
+    """v1-contract fused AIMC crossbar matmul (see kernels/ref.py).
+
+    ``read_noise=None`` means noise-off and is executed through the v2
+    kernel with NO noise operand (nothing streamed); an explicit tensor
+    keeps the v1 path for staged comparisons and differential tests.
+    """
+    if read_noise is None:
+        return aimc_matmul_v2(x, w_q, s_w, s_x, adc_step=adc_step, impl=impl,
+                              block_b=block_b, block_n=block_n)
+    if impl == "ref":
+        return _ref.aimc_matmul_ref(x, w_q, s_w, s_x, read_noise, adc_step=adc_step)
+    _check_impl(impl)
+
     b, k = x.shape
     kb, m, np_ = w_q.shape
-    bb = min(block_b, _round_up(b, 8))
-    bn = min(block_n, np_)
-    while np_ % bn:
-        bn //= 2
+    bb, bn = _pick_blocks(b, np_, block_b, block_n)
     b_pad = _round_up(b, bb)
     if b_pad != b:
         x = jnp.pad(x, ((0, b_pad - b), (0, 0)))
@@ -42,5 +90,70 @@ def aimc_matmul(x, w_q, s_w, s_x, read_noise, *, adc_step: float,
     return y[:b]
 
 
-def _round_up(v: int, m: int) -> int:
-    return (v + m - 1) // m * m
+def aimc_matmul_v2(x, w_q, s_w, s_x, seed=None, bias=None, *,
+                   adc_step: float, sigma: float = 0.0,
+                   activation: str = "none", impl: str = "ref",
+                   block_b: int = 128, block_n: int = 512,
+                   noise_source: str = "counter"):
+    """Kernel-v2 fused AIMC matmul: in-kernel noise + fused epilogue.
+
+    `seed`/`sigma` replace the v1 noise tensor (see kernels/cprng.py for the
+    counter contract); `bias` is `[Np]`-broadcastable, `activation` one of
+    `EPILOGUES`. Output: f32 `[B, Np]`, epilogue already applied.
+    """
+    if activation not in EPILOGUES:
+        raise ValueError(f"unknown epilogue {activation!r}")
+    _check_noise_source(noise_source, sigma, impl)
+    if impl == "ref":
+        return _ref.aimc_matmul_ref_v2(x, w_q, s_w, s_x, seed, bias,
+                                       adc_step=adc_step, sigma=sigma,
+                                       activation=activation)
+    _check_impl(impl)
+
+    b, k = x.shape
+    kb, m, np_ = w_q.shape
+    bb, bn = _pick_blocks(b, np_, block_b, block_n)
+    b_pad = _round_up(b, bb)
+    xp = jnp.pad(x, ((0, b_pad - b), (0, 0))) if b_pad != b else x
+    y = aimc_matmul_pallas_v2(
+        xp, w_q, s_w, s_x, seed, bias,
+        adc_step=adc_step, sigma=sigma, activation=activation,
+        block_b=bb, block_n=bn, noise_source=noise_source,
+        interpret=(impl == "pallas_interpret"), b_logical=b,
+    )
+    return y[:b]
+
+
+def aimc_matmul_stacked(x, w_q, s_w, s_x, seed=None, bias=None, *,
+                        adc_step: float, sigma: float = 0.0,
+                        activations="none", impl: str = "ref",
+                        block_b: int = 128, block_n: int = 512,
+                        noise_source: str = "counter"):
+    """Gate-fused multi-MVM: `[G, KB, M, Np]` stack, shared `[B, K]` input.
+
+    One weight-stationary kernel launch computes all G outputs
+    (`[G, B, Np]`), sharing the input block and its DAC scale; gate g draws
+    noise under `cprng.stack_seed(seed, g)` so results are bit-equal to G
+    per-gate `aimc_matmul_v2` calls with the derived seeds.
+    """
+    _check_noise_source(noise_source, sigma, impl)
+    if impl == "ref":
+        return _ref.aimc_matmul_stacked_ref(x, w_q, s_w, s_x, seed, bias,
+                                            adc_step=adc_step, sigma=sigma,
+                                            activations=activations)
+    _check_impl(impl)
+
+    b, k = x.shape
+    g_, kb, m, np_ = w_q.shape
+    bb, bn = _pick_blocks(b, np_, block_b, block_n)
+    b_pad = _round_up(b, bb)
+    xp = jnp.pad(x, ((0, b_pad - b), (0, 0))) if b_pad != b else x
+    if isinstance(activations, str):
+        activations = (activations,) * g_
+    y = aimc_matmul_pallas_stacked(
+        xp, w_q, s_w, s_x, seed, bias,
+        adc_step=adc_step, sigma=sigma, activations=tuple(activations),
+        block_b=bb, block_n=bn, noise_source=noise_source,
+        interpret=(impl == "pallas_interpret"), b_logical=b,
+    )
+    return y[:, :b]

@@ -22,9 +22,18 @@ CM_PROCESS (analog MAC + ADC) -> CM_DEQUEUE + digital accumulate/cast.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.quant import adc_quantize, quantize
+from repro.kernels import cprng
+
+EPILOGUE_FNS = {
+    "none": lambda y: y,
+    "relu": lambda y: jnp.maximum(y, 0.0),
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}
 
 
 def aimc_matmul_ref(x, w_q, s_w, s_x, read_noise, *, adc_step: float) -> jnp.ndarray:
@@ -47,6 +56,49 @@ def aimc_matmul_ref(x, w_q, s_w, s_x, read_noise, *, adc_step: float) -> jnp.nda
     contrib = codes.astype(jnp.float32) * s_w[:, None, :]           # [KB,B,Np]
     y = jnp.sum(contrib, axis=0) * (jnp.float32(adc_step) * s_x.reshape(()))
     return y.astype(jnp.float32)
+
+
+def aimc_matmul_ref_v2(x, w_q, s_w, s_x, seed=None, bias=None, *,
+                       adc_step: float, sigma: float = 0.0,
+                       activation: str = "none") -> jnp.ndarray:
+    """Kernel-v2 oracle: counter-addressed in-kernel noise + fused epilogue.
+
+    Noise is materialized here (the oracle's whole point is bulk-array
+    clarity) through the SAME `cprng` counter math the Pallas kernel runs
+    per tile, so kernel and oracle are bit-identical for a given seed. The
+    epilogue (bias + activation) is the identical f32 arithmetic the kernel
+    applies on its last row-block step.
+    """
+    kb, m, np_ = w_q.shape
+    b = x.shape[0]
+    if sigma > 0.0:
+        if seed is None:
+            raise ValueError("sigma > 0 requires a seed")
+        noise = sigma * cprng.read_noise_array(seed, kb, b, np_)
+    else:
+        noise = jnp.zeros((kb, b, np_), jnp.float32)
+    y = aimc_matmul_ref(x, w_q, s_w, s_x, noise, adc_step=adc_step)
+    if bias is not None:
+        y = y + bias.reshape(1, np_).astype(jnp.float32)
+    return EPILOGUE_FNS[activation](y)
+
+
+def aimc_matmul_stacked_ref(x, w_q, s_w, s_x, seed=None, bias=None, *,
+                            adc_step: float, sigma: float = 0.0,
+                            activations="none") -> jnp.ndarray:
+    """Gate-fused stack oracle: per-gate v2 calls under `stack_seed` — the
+    bit-equality target for `aimc_matmul_pallas_stacked`."""
+    g_, kb, m, np_ = w_q.shape
+    if isinstance(activations, str):
+        activations = (activations,) * g_
+    outs = []
+    for g in range(g_):
+        seed_g = cprng.stack_seed(seed, g) if seed is not None else None
+        outs.append(aimc_matmul_ref_v2(
+            x, w_q[g], s_w[g], s_x, seed_g,
+            bias[g] if bias is not None else None,
+            adc_step=adc_step, sigma=sigma, activation=activations[g]))
+    return jnp.stack(outs)
 
 
 def digital_matmul_ref(x, w, out_dtype=jnp.float32):

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aimc import (AimcConfig, AimcLinearState, aimc_apply,
-                             aimc_linear_ste)
+                             aimc_apply_stacked, aimc_linear_ste)
+from repro.kernels.ref import EPILOGUE_FNS
 
 
 # ---------------------------------------------------------------------------
@@ -114,25 +115,59 @@ def as_weight(w, dtype):
 
 
 def linear(x: jnp.ndarray, w: jnp.ndarray, exe: Execution,
-           key: jax.Array | None = None, bias: jnp.ndarray | None = None):
+           key: jax.Array | None = None, bias: jnp.ndarray | None = None,
+           activation: str = "none"):
     """The AIMC-or-digital projection. x: [..., K], w: [K, N] — or a
-    pre-programmed `AimcLinearState` (program-once/apply-many serving)."""
+    pre-programmed `AimcLinearState` (program-once/apply-many serving).
+
+    `bias`/`activation` are the layer epilogue: on the programmed AIMC path
+    they fuse into the kernel's last row-block step (kernel v2, no separate
+    XLA op); elsewhere they run as the equivalent post-ops."""
     if isinstance(w, AimcLinearState):
-        # programmed crossbar tenant: apply-only, CM_INITIALIZE already paid
+        # programmed crossbar tenant: apply-only, CM_INITIALIZE already paid;
+        # the epilogue rides the kernel (cfg.fuse_epilogue) in f32.
         if exe.aimc is None:
             raise ValueError(
                 "programmed AimcLinearState reached linear() but exe.aimc "
                 "is None — install()ed params require an Execution carrying "
                 "the AimcConfig the program was built with")
-        y = aimc_apply(w, x, exe.aimc, key).astype(exe.cdtype)
-    elif exe.mode == "aimc" and not exe.programmed:
+        return aimc_apply(w, x, exe.aimc, key, bias=bias,
+                          activation=activation).astype(exe.cdtype)
+    if exe.mode == "aimc" and not exe.programmed:
         y = aimc_linear_ste(x, as_weight(w, jnp.float32), key, exe.aimc)
         y = y.astype(exe.cdtype)
     else:
         y = x.astype(exe.cdtype) @ as_weight(w, exe.cdtype)
     if bias is not None:
         y = y + bias.astype(exe.cdtype)
-    return y
+    return EPILOGUE_FNS[activation](y)
+
+
+def linear_stack(x: jnp.ndarray, ws, exe: Execution,
+                 key: jax.Array | None = None, biases=None,
+                 activations="none"):
+    """Gate-fused multi-MVM projection: G same-shape matrices sharing one
+    input (LSTM gates, attention QKV, gate/up FFN pairs) -> tuple of G
+    outputs.
+
+    `ws` is either a `[G, ...]`-stacked programmed `AimcLinearState` (built
+    once at install time by a model's `fuse_gate_stacks`) — executed as ONE
+    weight-stationary kernel launch sharing the input block and DAC scale —
+    or a sequence of per-gate weights, which falls back to per-gate
+    `linear()` calls (bit-equal noise-off)."""
+    if isinstance(ws, AimcLinearState):
+        g = ws.stack_shape[-1]
+        y = aimc_apply_stacked(ws, x, exe.aimc, key, biases=biases,
+                               activations=activations).astype(exe.cdtype)
+        return tuple(y[i] for i in range(g))
+    g = len(ws)
+    if isinstance(activations, str):
+        activations = (activations,) * g
+    if biases is None:
+        biases = (None,) * g
+    keys = jax.random.split(key, g) if key is not None else (None,) * g
+    return tuple(linear(x, w, exe, k_, bias=b, activation=a)
+                 for w, k_, b, a in zip(ws, keys, biases, activations))
 
 
 # ---------------------------------------------------------------------------

@@ -48,13 +48,14 @@ def mlp_forward_digital(params, x):
 
 def mlp_forward_aimc(params, x, cfg: AimcConfig, key=None, ctx=None):
     """Pass a previously returned `ctx` to run program-once/apply-many:
-    CM_INITIALIZE happens on the first call only (paper §IV-B)."""
+    CM_INITIALIZE happens on the first call only (paper §IV-B). The relus
+    ride the kernel-v2 fused epilogue (bit-equal to separate relu ops)."""
     if ctx is None:
         ctx = AimcContext(cfg, key)
         ctx.map_matrix("fc1", params["w1"])
         ctx.map_matrix("fc2", params["w2"])
-    h = jax.nn.relu(ctx.linear("fc1", x))
-    return jax.nn.relu(ctx.linear("fc2", h)), ctx
+    h = ctx.linear("fc1", x, activation="relu")
+    return ctx.linear("fc2", h, activation="relu"), ctx
 
 
 def mlp_program(params, cfg: AimcConfig, key=None):
@@ -105,6 +106,17 @@ def _lstm_cell_math(gates, c_prev, nh):
     return o * jnp.tanh(c), c
 
 
+# Per-gate epilogues of the f/i/g/o stack — applied INSIDE the gate-fused
+# kernel on the last row-block step (kernel v2).
+LSTM_GATE_ACTS = ("sigmoid", "sigmoid", "tanh", "sigmoid")
+
+
+def _lstm_cell_from_activated(f, i, g, o, c_prev):
+    """Cell update on gate values the fused epilogue already activated."""
+    c = f * c_prev + i * g
+    return o * jnp.tanh(c), c
+
+
 def lstm_forward_digital(params, xs, nh: int):
     """xs: [T, B, x_dim] -> softmax outputs [T, B, y]."""
     w_cell = jnp.concatenate([params["w_f"], params["w_i"], params["w_g"],
@@ -124,24 +136,47 @@ def lstm_forward_digital(params, xs, nh: int):
 
 
 def lstm_forward_aimc(params, xs, nh: int, cfg: AimcConfig, key=None,
-                      ctx=None):
+                      ctx=None, fuse_gates: bool | None = None):
     """The §VIII-D mapping: gate matrices side by side -> one CM_PROCESS.
 
     Reuse a returned `ctx` across calls to keep the gates stationary
-    (program-once): only the first call pays CM_INITIALIZE."""
+    (program-once): only the first call pays CM_INITIALIZE.
+
+    ``fuse_gates=True`` maps f/i/g/o as a `[4, ...]` stacked tenant instead
+    and runs them through the gate-fused multi-MVM with per-gate
+    sigmoid/tanh epilogues applied in-kernel — same CM_* profile, one kernel
+    launch per step, and the gate activations never round-trip as a
+    separate op. Outputs are bit-equal to the side-by-side path (noise
+    off). A reused `ctx` fixes the layout at mapping time; passing a
+    contradicting `fuse_gates` with it raises instead of silently running
+    the other path."""
     if ctx is None:
         ctx = AimcContext(cfg, key)
-        ctx.map_gates("cell", [params["w_f"], params["w_i"], params["w_g"],
-                               params["w_o"]])
+        gates_w = [params["w_f"], params["w_i"], params["w_g"], params["w_o"]]
+        if fuse_gates:
+            ctx.map_gate_stack("cell", gates_w)
+        else:
+            ctx.map_gates("cell", gates_w)
         ctx.map_matrix("dense", params["w_y"])
+    fused = ctx._state("cell").stack_shape != ()
+    if fuse_gates is not None and fuse_gates != fused:
+        raise ValueError(
+            f"ctx maps 'cell' {'stacked' if fused else 'side-by-side'} but "
+            f"fuse_gates={fuse_gates} was requested; map a fresh ctx")
     b = xs.shape[1]
 
     h = jnp.zeros((b, nh))
     c = jnp.zeros((b, nh))
     ys = []
     for t in range(xs.shape[0]):          # python loop: ctx counts CM_* ops
-        gates = ctx.linear("cell", jnp.concatenate([h, xs[t]], axis=-1))
-        h, c = _lstm_cell_math(gates, c, nh)
+        hx = jnp.concatenate([h, xs[t]], axis=-1)
+        if fused:
+            f, i, g, o = ctx.linear_stack("cell", hx,
+                                          activations=LSTM_GATE_ACTS)
+            h, c = _lstm_cell_from_activated(f, i, g, o, c)
+        else:
+            gates = ctx.linear("cell", hx)
+            h, c = _lstm_cell_math(gates, c, nh)
         ys.append(jax.nn.softmax(ctx.linear("dense", h), axis=-1))
     return jnp.stack(ys), ctx
 
@@ -263,10 +298,13 @@ def cnn_forward(params, x, variant: str, cfg: AimcConfig | None = None,
             name = f"conv{i}"
             if name not in ctx:
                 ctx.map_matrix(name, wmat)
-            y = ctx.linear(name, patches.reshape(b * npos, kdim))
+            # relu rides the kernel-v2 fused epilogue (commutes with reshape)
+            y = ctx.linear(name, patches.reshape(b * npos, kdim),
+                           activation="relu")
+            x = y.reshape(b, ho, wo, cout)
         else:
             y = patches.reshape(b * npos, kdim) @ wmat
-        x = jax.nn.relu(y.reshape(b, ho, wo, cout))
+            x = jax.nn.relu(y.reshape(b, ho, wo, cout))
         if lrn:
             x = _lrn(x)
         x = _pool(x, pool)

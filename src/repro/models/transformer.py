@@ -25,10 +25,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.aimc import AimcLinearState, stack_states
 from repro.models import moe as moe_lib
 from repro.models.layers import (Execution, as_weight, decode_attention,
                                  dense_init, embed_init, flash_attention,
-                                 linear, rmsnorm, rope, shard_act, swiglu)
+                                 linear, linear_stack, rmsnorm, rope,
+                                 shard_act, swiglu)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,11 +135,40 @@ def init(key, cfg: TransformerConfig, dtype=jnp.float32) -> dict:
 # block
 # ---------------------------------------------------------------------------
 
+def fuse_gate_stacks(params):
+    """Post-`install()` rewrite: stack programmed same-shape projection
+    groups into `[G, ...]` gate stacks so each group runs as ONE gate-fused
+    multi-MVM kernel launch (kernel v2) per block:
+
+      wq + wk + wv     -> wqkv  (MHA only — GQA K/V widths differ)
+      w_gate + w_up    -> w_gu  (dense SwiGLU FFN)
+
+    Gates stack at axis=1 (inside the layer-scan dim). Groups that are not
+    all programmed `AimcLinearState`s of one shape pass through unchanged;
+    outputs are bit-equal to the unfused path (noise off)."""
+    blocks = dict(params["blocks"])
+    for stacked_name, names in (("wqkv", ("wq", "wk", "wv")),
+                                ("w_gu", ("w_gate", "w_up"))):
+        leaves = [blocks.get(nm) for nm in names]
+        if not all(isinstance(lf, AimcLinearState) for lf in leaves):
+            continue
+        if len({(lf.k, lf.n, lf.w_q.shape) for lf in leaves}) != 1:
+            continue
+        blocks[stacked_name] = stack_states([blocks.pop(nm) for nm in names],
+                                            axis=1)
+    return dict(params, blocks=blocks)
+
+
 def _qkv(h, blk, cfg, exe, keys, positions):
     b, s, d = h.shape
-    q = linear(h, blk["wq"], exe, keys[0], blk.get("bq"))
-    k = linear(h, blk["wk"], exe, keys[1], blk.get("bk"))
-    v = linear(h, blk["wv"], exe, keys[2], blk.get("bv"))
+    if "wqkv" in blk:      # gate-fused stack (fuse_gate_stacks, MHA)
+        biases = (jnp.stack([blk["bq"], blk["bk"], blk["bv"]])
+                  if "bq" in blk else None)
+        q, k, v = linear_stack(h, blk["wqkv"], exe, keys[0], biases=biases)
+    else:
+        q = linear(h, blk["wq"], exe, keys[0], blk.get("bq"))
+        k = linear(h, blk["wk"], exe, keys[1], blk.get("bk"))
+        v = linear(h, blk["wv"], exe, keys[2], blk.get("bv"))
     q = rope(q.reshape(b, s, cfg.n_heads, cfg.hd), positions, cfg.rope_theta)
     k = rope(k.reshape(b, s, cfg.n_kv_heads, cfg.hd), positions, cfg.rope_theta)
     v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
@@ -156,6 +187,12 @@ def _qkv(h, blk, cfg, exe, keys, positions):
 
 def _ffn(h2, blk, cfg: TransformerConfig, exe: Execution, keys):
     if not cfg.is_moe:
+        if "w_gu" in blk:  # gate-fused stack (fuse_gate_stacks)
+            g, u = linear_stack(h2, blk["w_gu"], exe, keys[4])
+            # same activation-sharding constraints the unfused swiglu applies
+            g = shard_act(g, model_dim=h2.ndim - 1)
+            u = shard_act(u, model_dim=h2.ndim - 1)
+            return linear(jax.nn.silu(g) * u, blk["w_down"], exe, keys[5]), 0.0
         return swiglu(h2, blk["w_gate"], blk["w_up"], blk["w_down"], exe,
                       keys[4]), 0.0
     b, s, d = h2.shape

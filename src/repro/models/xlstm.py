@@ -25,8 +25,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core.aimc import AimcLinearState, stack_states
 from repro.models.layers import (Execution, dense_init, embed_init, linear,
-                                 rmsnorm)
+                                 linear_stack, rmsnorm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +106,40 @@ def init(key, cfg: XlstmConfig, dtype=jnp.float32) -> dict:
         "pairs": {"mlstm": mlstm, "slstm": slstm},
         "unembed": dense_init(ks[13], d, cfg.vocab, dtype),
     }
+
+
+def fuse_gate_stacks(params):
+    """Post-`install()` rewrite: collapse programmed same-shape gate
+    projections into `[G, ...]` stacks so each group runs as ONE gate-fused
+    multi-MVM kernel launch (kernel v2) instead of G separate calls:
+
+      mLSTM  w_up + w_gate        -> w_ug   (shared input hn)
+             w_q + w_k + w_v      -> w_qkv  (shared input up)
+      sLSTM  w_ff_gate + w_ff_up  -> w_ff_gu
+
+    Gates stack at axis=1 (inside the layer-scan dim), so `lax.scan`'s
+    per-layer slice exposes the `[G, ...]` stack the fused kernel consumes.
+    No-op for groups that are not all programmed states (digital or
+    partially-mapped trees pass through unchanged); outputs are bit-equal
+    to the unfused path (noise off)."""
+    def fuse(tree, groups):
+        tree = dict(tree)
+        for stacked_name, names in groups:
+            leaves = [tree.get(nm) for nm in names]
+            if not all(isinstance(lf, AimcLinearState) for lf in leaves):
+                continue
+            if len({(lf.k, lf.n, lf.w_q.shape) for lf in leaves}) != 1:
+                continue
+            tree[stacked_name] = stack_states([tree.pop(nm) for nm in names],
+                                              axis=1)
+        return tree
+
+    pairs = dict(params["pairs"])
+    pairs["mlstm"] = fuse(pairs["mlstm"], [("w_ug", ("w_up", "w_gate")),
+                                           ("w_qkv", ("w_q", "w_k", "w_v"))])
+    pairs["slstm"] = fuse(pairs["slstm"],
+                          [("w_ff_gu", ("w_ff_gate", "w_ff_up"))])
+    return dict(params, pairs=pairs)
 
 
 def _groupnorm(x, scale, n_heads, eps=1e-6):
@@ -195,11 +230,21 @@ def _mlstm_step(q, k, v, li, lf, state):
 def _mlstm_qkvif(hn, p, cfg, exe, keys):
     b, s, _ = hn.shape
     h_, dh = cfg.n_heads, cfg.hd_m
-    up = linear(hn, p["w_up"], exe, keys[0])
-    gate = jax.nn.silu(linear(hn, p["w_gate"], exe, keys[1]))
-    q = linear(up, p["w_q"], exe, keys[2]).reshape(b, s, h_, dh) / (dh ** 0.5)
-    k = linear(up, p["w_k"], exe, keys[3]).reshape(b, s, h_, dh)
-    v = linear(up, p["w_v"], exe, keys[4]).reshape(b, s, h_, dh)
+    if "w_ug" in p:        # gate-fused stack (fuse_gate_stacks)
+        up, gate = linear_stack(hn, p["w_ug"], exe, keys[0])
+        gate = jax.nn.silu(gate)
+    else:
+        up = linear(hn, p["w_up"], exe, keys[0])
+        gate = jax.nn.silu(linear(hn, p["w_gate"], exe, keys[1]))
+    if "w_qkv" in p:
+        q, k, v = linear_stack(up, p["w_qkv"], exe, keys[2])
+    else:
+        q = linear(up, p["w_q"], exe, keys[2])
+        k = linear(up, p["w_k"], exe, keys[3])
+        v = linear(up, p["w_v"], exe, keys[4])
+    q = q.reshape(b, s, h_, dh) / (dh ** 0.5)
+    k = k.reshape(b, s, h_, dh)
+    v = v.reshape(b, s, h_, dh)
     if_ = (linear(up, p["w_if"], exe, keys[5]) + p["b_if"]).astype(jnp.float32)
     li = if_[..., :h_]
     lf = jax.nn.log_sigmoid(if_[..., h_:])
@@ -274,8 +319,11 @@ def slstm_block(h, p, cfg, exe, key, state=None):
     hs = _groupnorm(hs.astype(exe.cdtype), p["gn"], cfg.n_heads, cfg.norm_eps)
     h = h + hs
     hn2 = rmsnorm(h, p["ln2"], cfg.norm_eps)
-    g = linear(hn2, p["w_ff_gate"], exe, keys[1])
-    u = linear(hn2, p["w_ff_up"], exe, keys[2])
+    if "w_ff_gu" in p:     # gate-fused stack (fuse_gate_stacks)
+        g, u = linear_stack(hn2, p["w_ff_gu"], exe, keys[1])
+    else:
+        g = linear(hn2, p["w_ff_gate"], exe, keys[1])
+        u = linear(hn2, p["w_ff_up"], exe, keys[2])
     ff = linear(jax.nn.gelu(g) * u, p["w_ff_down"], exe, keys[3])
     return h + ff, new_state
 
