@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast test-all bench bench-pipeline bench-json \
-        serve-aimc serve-aimc-reprogram serve-aimc-multicore
+        bench-serving serve-aimc serve-aimc-reprogram serve-aimc-multicore \
+        serve-smoke
 
 # Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
@@ -35,6 +36,17 @@ bench-pipeline:
 bench-json:
 	$(PY) -m benchmarks.run --json BENCH_all.json
 	$(PY) -m benchmarks.bench_kernels --json BENCH_kernels.json
+
+# Serving-engine benchmark alone (continuous batching vs static batch:
+# throughput + latency percentiles under synthetic traces).
+bench-serving:
+	$(PY) -m benchmarks.bench_serving --json BENCH_serving.json
+
+# Continuous-batching engine smoke: a ragged Poisson trace through the
+# programmed AIMC path (the ci.sh --fast engine smoke, runnable alone).
+serve-smoke:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
+	    --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc
 
 # Program-once AIMC serving vs the legacy per-call-reprogram path (A/B for
 # the program API speedup; see DESIGN.md §2).

@@ -10,6 +10,8 @@ One module per paper table/figure (DESIGN.md §7):
   bench_coupling  §VII-B            (tight vs loose, analytical + lowered)
   bench_accuracy  §III-C            (AIMC output fidelity vs digital)
   bench_kernels   kernels/          (Pallas v2 vs oracle + HBM/VMEM ledgers)
+  bench_serving   runtime/engine    (continuous batching vs static batch:
+                                     tok/s + latency percentiles on traces)
   bench_roofline  §Roofline         (dry-run table; run dryrun first)
 
 ``--json PATH`` writes machine-readable results — per-case wall-clock,
@@ -29,7 +31,7 @@ import time
 
 from benchmarks import (bench_accuracy, bench_cnn, bench_coupling,
                         bench_kernels, bench_lstm, bench_mlp, bench_pipeline,
-                        bench_roofline)
+                        bench_roofline, bench_serving)
 
 MODULES = [
     ("mlp", "MLP (paper Fig. 7/8)", bench_mlp),
@@ -40,6 +42,8 @@ MODULES = [
     ("coupling", "Coupling (paper §VII-B)", bench_coupling),
     ("accuracy", "Fidelity (paper §III-C)", bench_accuracy),
     ("kernels", "Pallas kernels", bench_kernels),
+    ("serving", "Continuous-batching serving engine (static vs engine)",
+     bench_serving),
 ]
 
 

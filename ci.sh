@@ -19,6 +19,9 @@ fi
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -x -q -m "not pallas and not slow"
+    echo "== engine smoke: continuous-batching serve (poisson trace) =="
+    python -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
+        --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc
     echo "== perf-smoke: bench_kernels (interpret mode) =="
     exec python -m benchmarks.bench_kernels --json BENCH_kernels.json
 fi

@@ -1,22 +1,33 @@
-"""Batched serving driver (the paper is an inference paper — this is the
-end-to-end deployment path).
+"""Serving CLI — a thin front door over the continuous-batching engine
+(`runtime.engine.ServeEngine`).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
-        --requests 8 --prompt-len 16 --gen 12 [--exec aimc] [--int8]
+        --requests 8 --prompt-len 16 --gen 12 [--exec aimc] [--int8] \
+        [--trace poisson:200] [--slots 4] [--static]
 
-Continuous-batching-lite: requests arrive with a prompt, are prefilled as a
-batch, then decoded step-by-step against the sharded KV cache.
+The paper's deployment model made literal (§IV-B, Fig. 4): with ``--exec
+aimc`` the whole network is programmed ONCE (CM_INITIALIZE, outside the
+region of interest), the `AimcProgram` is install()ed into the parameter
+tree, and every token vector afterwards pays only queue/process/dequeue on
+stationary crossbar weights. The engine then serves a REQUEST STREAM against
+that installed program: ragged prompts, staggered arrivals, per-request
+decode budgets, slot-based continuous batching with jit-stable shapes.
 
-``--exec aimc`` is the paper's deployment model made literal: the whole
-network is programmed ONCE via ``core.program.program_model`` (CM_INITIALIZE,
-outside the serving loop), the resulting `AimcProgram` is install()ed into
-the parameter tree, and every decoded token pays only queue/process/dequeue
-on the stationary crossbar weights. CM_* instruction totals are reported from
-the program's static accounting — CM_INITIALIZE is independent of the number
-of generated tokens. ``--reprogram`` restores the legacy per-call STE path
-(the network re-programs every forward) for A/B measurement of the
-program-once speedup. ``--int8`` stores the digital weights in the paper's
-number format (int8 + per-channel scales), the §Perf serving optimization.
+Load shapes:
+  (default)            synchronized arrivals — every request at t=0, one
+                       prompt length, one decode budget (the legacy regime)
+  --trace poisson:RATE staggered Poisson arrivals at RATE req/s with ragged
+                       prompt lengths in [prompt_len/2, prompt_len] and
+                       per-request max_new in [1, gen]
+  --arrivals a,b,c     explicit arrival offsets (seconds), one per request
+  --static             the legacy monolithic static-batch loop (one batched
+                       prefill + lockstep decode) for A/B against the engine
+
+``--reprogram`` restores the per-call STE path (the network re-programs
+every forward) for A/B measurement of the program-once speedup. ``--int8``
+stores the digital weights in the paper's number format. Recurrent archs
+(xlstm, rglru) serve through per-slot hidden-state insertion/reset — no
+longer rejected.
 """
 
 from __future__ import annotations
@@ -31,7 +42,23 @@ def parse_args(argv=None):
     ap.add_argument("--arch", default="granite-8b")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=12,
+                    help="decode budget: max_new per request (includes the "
+                         "prefill's first token)")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="decode slots (continuous-batching batch rows); "
+                         "0 -> min(requests, 8)")
+    ap.add_argument("--trace", default="",
+                    help="synthetic load: poisson:RATE (req/s, staggered "
+                         "ragged arrivals); default synchronized")
+    ap.add_argument("--arrivals", default="",
+                    help="explicit comma-separated arrival offsets in "
+                         "seconds, one per request")
+    ap.add_argument("--static", action="store_true",
+                    help="legacy monolithic static-batch loop (A/B baseline)")
+    ap.add_argument("--eos", type=int, default=-1,
+                    help="EOS token id for early retirement (-1: disabled)")
+    ap.add_argument("--admission", default="fifo", choices=["fifo", "sjf"])
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--exec", dest="exec_mode", default="digital",
                     choices=["digital", "aimc"])
@@ -45,9 +72,8 @@ def parse_args(argv=None):
                          "ledgers (core.schedule)")
     ap.add_argument("--pipeline", action="store_true",
                     help="price the multi-core schedule with the "
-                         "position-pipelined latency law (CNN-style, "
-                         "latency = slowest core) instead of the "
-                         "sequential mutex chain (sum of phases)")
+                         "position-pipelined latency law instead of the "
+                         "sequential mutex chain")
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -57,7 +83,39 @@ def parse_args(argv=None):
         ap.error("--cores/--pipeline require the programmed AIMC path "
                  "(--exec aimc, without --reprogram): the multi-core "
                  "schedule lowers an installed AimcProgram")
+    if args.trace and args.arrivals:
+        ap.error("--trace and --arrivals are mutually exclusive")
+    if args.static and (args.trace or args.arrivals):
+        ap.error("--static serves one synchronized batch; staggered "
+                 "traces/arrivals need the engine")
     return args
+
+
+def build_requests(args, vocab: int, min_prompt: int = 1):
+    """The synthetic request stream the CLI serves. ``min_prompt`` floors
+    the ragged prompt lengths (vlm prompts must cover the patch prefix)."""
+    from repro.runtime.batcher import poisson_trace, synchronized_trace
+    n, p, g = args.requests, args.prompt_len, args.gen
+    if p < min_prompt:
+        raise SystemExit(f"--prompt-len {p} < minimum prompt length "
+                         f"{min_prompt} for this arch")
+    if args.trace:
+        kind, _, param = args.trace.partition(":")
+        if kind != "poisson":
+            raise SystemExit(f"unknown --trace kind {kind!r} "
+                             "(supported: poisson:RATE)")
+        rate = float(param or "100")
+        return poisson_trace(n, rate, seed=args.seed,
+                             prompt_len=(max(min_prompt, p // 2), p),
+                             max_new=(1, g), vocab=vocab)
+    base = synchronized_trace(n, prompt_len=p, max_new=g, seed=args.seed,
+                              vocab=vocab)
+    if args.arrivals:
+        offs = [float(x) for x in args.arrivals.split(",")]
+        if len(offs) != n:
+            raise SystemExit(f"--arrivals needs {n} offsets, got {len(offs)}")
+        base = [dataclasses.replace(r, arrival=t) for r, t in zip(base, offs)]
+    return base
 
 
 def main(argv=None):
@@ -70,14 +128,15 @@ def main(argv=None):
     from repro.core.aimc import AimcConfig
     from repro.launch.mesh import make_mesh
     from repro.models.layers import Execution
+    from repro.runtime.engine import ServeEngine
 
     spec = get_arch(args.arch)
     if args.smoke:
         spec = dataclasses.replace(spec, model_cfg=spec.smoke_cfg)
     cfg = spec.model_cfg
-    if spec.module not in ("transformer",):
-        raise SystemExit("serve.py drives the transformer family; "
-                         "recurrent archs decode via launch.steps")
+    if spec.family == "audio":
+        raise SystemExit("serve.py drives decoder-only LMs; the enc-dec "
+                         "audio family decodes via launch.steps")
 
     shape = tuple(int(s) for s in args.mesh.split("x"))
     axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(shape)]
@@ -92,6 +151,9 @@ def main(argv=None):
     model = spec.model_module()
     b, p, g = args.requests, args.prompt_len, args.gen
     max_seq = p + g
+    requests = build_requests(
+        args, cfg.vocab,
+        min_prompt=cfg.n_patches if spec.family == "vlm" else 1)
 
     with use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(args.seed), cfg)
@@ -107,10 +169,8 @@ def main(argv=None):
         schedule = None
         if args.exec_mode == "aimc" and not args.reprogram:
             # CM_INITIALIZE: program the whole network once, outside the
-            # serving loop (paper §IV-B — the inference region of interest
-            # never re-programs). --cores spreads the matrices over that
-            # many per-core tile contexts (paper Fig. 2) and the schedule
-            # lowers them onto virtual cores for per-core accounting.
+            # serving loop (paper §IV-B). --cores spreads the matrices over
+            # per-core tile contexts (paper Fig. 2).
             from repro.core.program import MappingPlan, program_model
             from repro.core.schedule import CoreSchedule
             t0 = time.time()
@@ -128,72 +188,127 @@ def main(argv=None):
             if args.cores > 1 or args.pipeline:
                 print(f"[serve] {schedule.summary()}")
 
-        key = jax.random.PRNGKey(args.seed + 1)
-        prompts = jax.random.randint(key, (b, p), 1, cfg.vocab)
-        pe = (jax.random.normal(key, (b, cfg.n_patches, cfg.d_model))
-              if spec.family == "vlm" else None)
-
-        t0 = time.time()
-        prefill = jax.jit(lambda pr, tk: model.prefill(
-            pr, tk, cfg, exe, max_seq=max_seq, patch_embeds=pe,
-            cache_dtype=jnp.float32))
-        logits, cache = prefill(params, prompts)
-        next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        jax.block_until_ready(next_tok)
-        t_prefill = time.time() - t0
-
-        decode = jax.jit(lambda pr, ca, tk: model.decode_step(pr, ca, tk,
-                                                              cfg, exe))
-        out = [next_tok]
-        t0 = time.time()
-        for _ in range(g - 1):
-            logits, cache = decode(params, cache, out[-1])
-            out.append(jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None])
-        jax.block_until_ready(out[-1])
-        t_decode = time.time() - t0
-
-        gen = jnp.concatenate(out, axis=1)
         print(f"[serve] {spec.arch_id} exec={args.exec_mode} "
-              f"int8={args.int8} batch={b}"
+              f"int8={args.int8} requests={b}"
               + (" (per-call reprogram)" if args.exec_mode == "aimc"
                  and args.reprogram else ""))
-        print(f"  prefill: {b}x{p} tokens in {t_prefill:.2f}s")
-        print(f"  decode:  {g - 1} steps in {t_decode:.2f}s "
-              f"({b * (g - 1) / max(t_decode, 1e-9):.1f} tok/s batched, "
-              f"{t_decode / max(g - 1, 1) * 1e3:.1f} ms/step)")
+
+        if args.static:
+            return _run_static(args, spec, cfg, exe, model, params, program,
+                               schedule, requests, max_seq, jnp)
+
+        # ---- continuous batching (the deployment path) --------------------
+        n_slots = args.slots or min(b, 8)
+        engine = ServeEngine(
+            model, cfg, exe, params, n_slots=n_slots, prompt_pad=p,
+            max_seq=max_seq, cache_dtype=jnp.float32, family=spec.family,
+            module=spec.module, program=program, schedule=schedule,
+            eos_id=None if args.eos < 0 else args.eos,
+            admission=args.admission)
+        t0 = time.time()
+        engine.warmup()
+        print(f"[serve] engine warmed up in {time.time() - t0:.2f}s "
+              f"({n_slots} slots, prompt_pad={p}, max_seq={max_seq}; "
+              f"compiled {engine.compile_counts()})")
+
+        report = engine.serve(requests)
+        print(f"[serve] {report.summary()}")
+        if report.n_steps == 0:
+            print("  prefill-only run: no decode steps executed "
+                  f"({report.n_prefills} prefills, "
+                  f"{report.wall_prefill_s:.2f}s) — no decode tok/s to "
+                  "report")
+        else:
+            print(f"  decode: {report.n_steps} batch steps in "
+                  f"{report.wall_decode_s:.2f}s "
+                  f"({report.wall_decode_s / report.n_steps * 1e3:.1f} "
+                  f"ms/step); slot-idle lanes {report.idle_vectors}, "
+                  f"retries {report.retries}, "
+                  f"stragglers {len(report.stragglers)}")
+
         if program is not None:
             init = program.initialize_counts()
-            # mvm_counts is per token VECTOR (one input row through every
-            # mapped matrix): prefill pushes b*p vectors, each of the g-1
-            # decode steps pushes b more.
             per_vec = program.mvm_counts()
-            n_vec = b * (p + g - 1)
+            n_vec = report.useful_vectors
             roi = per_vec.scaled(n_vec)
             print(f"  CM_INITIALIZE: {init.initialize} device writes, once "
-                  f"per session — independent of the {g} generated tokens")
-            print(f"  CM_* in the serving ROI ({n_vec} token vectors): "
-                  f"queue={roi.queue} process={roi.process} "
+                  f"per session — independent of the {report.generated_tokens}"
+                  f" generated tokens")
+            print(f"  CM_* in the serving ROI ({n_vec} useful token "
+                  f"vectors): queue={roi.queue} process={roi.process} "
                   f"dequeue={roi.dequeue} (per vector: {per_vec.queue}/"
                   f"{per_vec.process}/{per_vec.dequeue})")
-        if schedule is not None and (args.cores > 1 or args.pipeline):
-            from repro.core.schedule import (pipelined_latency,
-                                             sequential_latency)
-            print(f"  per-core ledgers, one token vector "
-                  f"(queue/process/dequeue, comm bytes, load+store bytes):")
-            for led in schedule.ledgers():
-                print(f"    core{led.core}: {led.cm.queue}/{led.cm.process}/"
-                      f"{led.cm.dequeue}  comm={led.comm_bytes}B  "
-                      f"io={led.load_bytes + led.store_bytes}B")
-            times = schedule.phase_times()
-            print(f"  modeled latency/vector (Table I-A system): "
-                  f"sequential={sequential_latency(times) * 1e6:.1f}us  "
-                  f"pipelined={pipelined_latency(times) * 1e6:.1f}us  "
-                  f"(law in effect: "
-                  f"{'pipelined' if args.pipeline else 'sequential'})")
-        for i in range(min(b, 3)):
-            print(f"  req{i}: prompt={list(map(int, prompts[i][:6]))}... "
-                  f"-> gen={list(map(int, gen[i]))}")
-        return gen
+            from repro.runtime.batcher import reconcile
+            led_sum, static_sum = reconcile(program, report.records,
+                                            report.observed_vectors)
+            print(f"  per-request ledger sum reconciles with the program's "
+                  f"static accounting: {led_sum == static_sum}")
+        _print_schedule(args, schedule)
+        for rid in sorted(report.records)[:3]:
+            rec = report.records[rid]
+            print(f"  req{rid}: arrival={rec.request.arrival * 1e3:.1f}ms "
+                  f"prompt={len(rec.request.prompt)} "
+                  f"gen={len(rec.tokens)}/{rec.request.max_new} "
+                  f"({rec.finish_reason}) ttft={rec.ttft * 1e3:.1f}ms "
+                  f"latency={rec.latency * 1e3:.1f}ms "
+                  f"tokens={rec.tokens[:6]}...")
+        return report
+
+
+def _run_static(args, spec, cfg, exe, model, params, program, schedule,
+                requests, max_seq, jnp):
+    """The legacy monolithic path: one synchronized batch, lockstep decode."""
+    from repro.runtime.engine import static_generate
+    b, p, g = args.requests, args.prompt_len, args.gen
+    prompts = jnp.asarray([r.prompt for r in requests], jnp.int32)
+    gen_toks, (t_prefill, t_decode) = static_generate(
+        model, cfg, exe, params, prompts, g, max_seq=max_seq,
+        cache_dtype=jnp.float32)
+    print(f"  prefill: {b}x{p} tokens in {t_prefill:.2f}s")
+    if g <= 1:
+        # honest prefill-only report: a 0-step decode loop has no
+        # throughput; the old script printed a tok/s line from
+        # max(t_decode, 1e-9) here
+        print("  decode:  0 steps (prefill-only, --gen 1) — no decode "
+              "tok/s to report")
+    else:
+        print(f"  decode:  {g - 1} steps in {t_decode:.2f}s "
+              f"({b * (g - 1) / max(t_decode, 1e-9):.1f} tok/s batched, "
+              f"{t_decode / (g - 1) * 1e3:.1f} ms/step)")
+    if program is not None:
+        init = program.initialize_counts()
+        per_vec = program.mvm_counts()
+        n_vec = b * (p + g - 1)
+        roi = per_vec.scaled(n_vec)
+        print(f"  CM_INITIALIZE: {init.initialize} device writes, once "
+              f"per session — independent of the {g} generated tokens")
+        print(f"  CM_* in the serving ROI ({n_vec} token vectors): "
+              f"queue={roi.queue} process={roi.process} "
+              f"dequeue={roi.dequeue} (per vector: {per_vec.queue}/"
+              f"{per_vec.process}/{per_vec.dequeue})")
+    _print_schedule(args, schedule)
+    for i in range(min(b, 3)):
+        print(f"  req{i}: prompt={list(requests[i].prompt[:6])}... "
+              f"-> gen={[int(t) for t in gen_toks[i]]}")
+    return gen_toks
+
+
+def _print_schedule(args, schedule):
+    if schedule is None or not (args.cores > 1 or args.pipeline):
+        return
+    from repro.core.schedule import pipelined_latency, sequential_latency
+    print(f"  per-core ledgers, one token vector "
+          f"(queue/process/dequeue, comm bytes, load+store bytes):")
+    for led in schedule.ledgers():
+        print(f"    core{led.core}: {led.cm.queue}/{led.cm.process}/"
+              f"{led.cm.dequeue}  comm={led.comm_bytes}B  "
+              f"io={led.load_bytes + led.store_bytes}B")
+    times = schedule.phase_times()
+    print(f"  modeled latency/vector (Table I-A system): "
+          f"sequential={sequential_latency(times) * 1e6:.1f}us  "
+          f"pipelined={pipelined_latency(times) * 1e6:.1f}us  "
+          f"(law in effect: "
+          f"{'pipelined' if args.pipeline else 'sequential'})")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,6 @@ Memory discipline baked in here (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -266,33 +265,13 @@ def make_prefill_step(spec: ArchSpec, cell: ShapeCell, mesh,
                        abstract_batch(spec, cell), mesh)
     b, s = cell.global_batch, cell.seq_len
 
-    if spec.family == "audio":
-        tgt = max(s // spec.tgt_ratio, 64)
-
-        def prefill(params, batch):
-            logits, cache = model.prefill(params, batch["frames"],
-                                          batch["tokens"], cfg, exe,
-                                          max_seq=s, cache_dtype=cache_dt)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
-    elif spec.family == "vlm":
-        def prefill(params, batch):
-            logits, cache = model.prefill(params, batch["tokens"], cfg, exe,
-                                          max_seq=s,
-                                          patch_embeds=batch["patch_embeds"],
-                                          cache_dtype=cache_dt)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
-    elif spec.module == "transformer":
-        def prefill(params, batch):
-            logits, cache = model.prefill(params, batch["tokens"], cfg, exe,
-                                          max_seq=s, cache_dtype=cache_dt)
-            return jnp.argmax(logits, -1).astype(jnp.int32), cache
-    else:
-        # recurrent families prefill by running forward; the dry-run cell
-        # lowers forward + cache init (state carried from forward is the
-        # cache for rglru/xlstm — exercised via decode cells)
-        def prefill(params, batch):
-            logits, _ = model.forward(params, batch["tokens"], cfg, exe)
-            return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), ()
+    # the model-facing prefill math lives in runtime.engine — one
+    # implementation under both the static shape cells and the
+    # continuous-batching ServeEngine
+    from repro.runtime.engine import static_prefill_closure
+    prefill = static_prefill_closure(model, cfg, exe, family=spec.family,
+                                     module=spec.module, max_seq=s,
+                                     cache_dtype=cache_dt)
 
     abstract_b = abstract_batch(spec, cell)
     cache_shape = jax.eval_shape(prefill, params_shape, abstract_b)[1]
@@ -335,9 +314,9 @@ def make_serve_step(spec: ArchSpec, cell: ShapeCell, mesh,
     cspecs = fit_specs(cache_specs(cache_shape, mesh), cache_shape, mesh)
     dp = dp_axes(mesh)
 
-    def serve_step(params, cache, tokens):
-        logits, new_cache = model.decode_step(params, cache, tokens, cfg, exe)
-        return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+    # the lockstep decode math shared with the engine (runtime.engine)
+    from repro.runtime.engine import static_decode_closure
+    serve_step = static_decode_closure(model, cfg, exe)
 
     tok_spec = fit_spec(P(dp, None), (b, 1), mesh)
     abstract = (params_shape, cache_shape,

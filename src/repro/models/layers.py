@@ -102,6 +102,51 @@ def shard_act(x: jnp.ndarray, model_dim: int | None = None):
     return jax.lax.with_sharding_constraint(x, P(*spec))
 
 
+def mask_batch_select(new, old, active, axis: int = 0):
+    """Per-request freeze: keep `new` where `active`, else `old`.
+
+    `active`: [B] bool; `axis` is the batch axis of the (same-shape) arrays.
+    The continuous-batching engine uses this to make a retired/empty slot's
+    state bit-frozen through a decode step — the dense batch still computes
+    the slot's lane, but none of its cache/recurrent state advances."""
+    shape = [1] * new.ndim
+    shape[axis] = active.shape[0]
+    return jnp.where(active.reshape(shape), new, old)
+
+
+def recurrent_prefill(decode_fn, cache0, tokens, n_vocab, valid_len=None):
+    """Serving prefill for O(1)-state archs (xlstm / rglru): scan the
+    single-token decode recurrence over a (right-padded) prompt batch.
+
+    ``decode_fn(cache, tok[B,1]) -> (logits [B,1,V], new_cache)`` is the
+    model's own decode step with params/cfg closed over; the cache is a flat
+    dict whose leaves carry batch at axis 1 except ``"len"`` (axis 0) — the
+    shared recurrent-cache layout. Steps at positions >= ``valid_len`` are
+    padding: the cache is bit-frozen through them (mask_batch_select), and
+    the returned logits are each row's own last valid step. One fixed
+    padded shape serves every ragged prompt (jit-stability contract)."""
+    b, s = tokens.shape
+    vl = (jnp.full((b,), s, jnp.int32) if valid_len is None
+          else valid_len.astype(jnp.int32))
+
+    def step(carry, xs):
+        cache, last = carry
+        t, tok_t = xs
+        logits, new_cache = decode_fn(cache, tok_t[:, None])
+        active = t < vl
+        cache = {k: mask_batch_select(new_cache[k], cache[k], active,
+                                      axis=0 if k == "len" else 1)
+                 for k in new_cache}
+        last = jnp.where((t == vl - 1)[:, None, None],
+                         logits.astype(jnp.float32), last)
+        return (cache, last), None
+
+    last0 = jnp.zeros((b, 1, n_vocab), jnp.float32)
+    (cache, logits), _ = jax.lax.scan(step, (cache0, last0),
+                                      (jnp.arange(s), tokens.T))
+    return logits, cache
+
+
 def as_weight(w, dtype):
     """Materialize a weight that may be stored as int8 codes + scales.
 

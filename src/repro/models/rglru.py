@@ -27,8 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (as_weight, Execution, decode_attention, dense_init,
-                                 embed_init, flash_attention, linear, rmsnorm,
-                                 rope)
+                                 embed_init, flash_attention, linear,
+                                 recurrent_prefill, rmsnorm, rope)
 
 C_RGLRU = 8.0
 
@@ -293,6 +293,22 @@ def init_cache(cfg: RglruConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
         cache |= {"tail_r": jnp.zeros((cfg.n_tail, batch, dr), jnp.float32),
                   "tail_conv": jnp.zeros((cfg.n_tail, batch, cw - 1, dr), dtype)}
     return cache
+
+
+def prefill(params, tokens, cfg: RglruConfig, exe: Execution = None,
+            max_seq: int | None = None, cache_dtype=jnp.bfloat16,
+            valid_len=None):
+    """Prompt ingestion for serving: scan the O(1) decode recurrence (conv
+    window + RG-LRU state + ring-buffer window cache) over a (right-padded)
+    prompt, freezing each row's state past its own ``valid_len``. Returns
+    (last-valid logits [B,1,V], decode cache) for slot insertion by the
+    continuous-batching engine."""
+    exe = exe or Execution()
+    cache0 = init_cache(cfg, tokens.shape[0], max_seq or tokens.shape[1],
+                        cache_dtype)
+    return recurrent_prefill(
+        lambda cache, tok: decode_step(params, cache, tok, cfg, exe),
+        cache0, tokens, cfg.vocab, valid_len)
 
 
 def decode_step(params, cache, tokens, cfg: RglruConfig, exe: Execution = None):

@@ -286,8 +286,15 @@ def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
 
 def prefill(params, tokens, cfg: TransformerConfig, exe: Execution = None,
             max_seq: int | None = None, patch_embeds=None,
-            cache_dtype=jnp.bfloat16):
-    """Full-sequence forward that also materializes the KV cache."""
+            cache_dtype=jnp.bfloat16, valid_len=None):
+    """Full-sequence forward that also materializes the KV cache.
+
+    ``valid_len`` ([B] int32) serves ragged prompts at one padded shape (the
+    engine's shape-stability contract): tokens at positions >= valid_len are
+    right-padding, the returned logits are gathered at each row's own last
+    valid position, and the cache lengths are set per row — decode then
+    masks attention with the ragged ``len`` and overwrites the padding K/V
+    slots as real tokens arrive."""
     exe = exe or Execution()
     b, s = tokens.shape
     max_seq = max_seq or s
@@ -311,35 +318,49 @@ def prefill(params, tokens, cfg: TransformerConfig, exe: Execution = None,
     h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
-    logits = h[:, -1:].astype(jnp.float32) @ as_weight(unembed, jnp.float32)
-    cache = {"k": ks, "v": vs,
-             "len": jnp.full((b,), s, jnp.int32)}
+    if valid_len is None:
+        h_last = h[:, -1:]
+        lens = jnp.full((b,), s, jnp.int32)
+    else:
+        lens = valid_len.astype(jnp.int32)
+        idx = jnp.clip(lens - 1, 0, s - 1)
+        h_last = h[jnp.arange(b), idx][:, None]                  # [B, 1, D]
+    logits = h_last.astype(jnp.float32) @ as_weight(unembed, jnp.float32)
+    cache = {"k": ks, "v": vs, "len": lens}
     return logits, cache
 
 
 def decode_step(params, cache, tokens, cfg: TransformerConfig,
-                exe: Execution = None):
-    """tokens: [B, 1] one new token per sequence -> (logits [B,1,V], cache)."""
+                exe: Execution = None, ragged: bool = False):
+    """tokens: [B, 1] one new token per sequence -> (logits [B,1,V], cache).
+
+    ``ragged=False`` is the lockstep fast path (decode_32k/long_500k cells:
+    every sequence is at the same position, so one dynamic_update_slice
+    writes the whole batch). ``ragged=True`` is the continuous-batching
+    contract: each row writes its K/V at its OWN ``cache["len"]`` position
+    (row scatter, `_scatter_kv`) and attends over its own valid length —
+    slots prefilled at different times decode side by side in one batch."""
     exe = exe or Execution()
     b = tokens.shape[0]
     h = jnp.take(params["embed"], tokens, axis=0).astype(exe.cdtype)
     positions = cache["len"][:, None]                              # [B, 1]
-
-    # decode_32k/long_500k cells run lockstep batches: every sequence writes
-    # its new K/V at the SAME buffer slot, so one dynamic_update_slice
-    # suffices (a per-row scatter lowers to full-cache rewrites; ragged
-    # lengths are handled by the per-row kv_len attention mask + _scatter_kv)
+    max_seq = cache["k"].shape[2]
     pos0 = cache["len"][0]
+    row_idx = jnp.clip(cache["len"], 0, max_seq - 1)               # [B]
 
     def body(h, xs):
         blk, kc, vc = xs
         keys = [None] * 6
         q, k, v = _qkv(rmsnorm(h, blk["ln1"], cfg.norm_eps), blk, cfg, exe,
                        keys, positions)
-        kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
-                                          (0, pos0, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
-                                          (0, pos0, 0, 0))
+        if ragged:
+            kc = _scatter_kv(kc, k, row_idx)
+            vc = _scatter_kv(vc, v, row_idx)
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype),
+                                              (0, pos0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype),
+                                              (0, pos0, 0, 0))
         att = decode_attention(q, kc, vc, kv_len=cache["len"] + 1)
         h = h + linear(att.reshape(b, 1, -1), blk["wo"], exe, keys[3])
         ff, _ = _ffn(rmsnorm(h, blk["ln2"], cfg.norm_eps), blk, cfg, exe, keys)

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.aimc import AimcLinearState, stack_states
 from repro.models.layers import (Execution, dense_init, embed_init, linear,
-                                 linear_stack, rmsnorm)
+                                 linear_stack, recurrent_prefill, rmsnorm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -373,6 +373,22 @@ def init_cache(cfg: XlstmConfig, batch: int, max_seq: int = 0,
         "s_m": jnp.full((n, batch, d), -1e30, dtype),
         "len": jnp.zeros((batch,), jnp.int32),
     }
+
+
+def prefill(params, tokens, cfg: XlstmConfig, exe: Execution = None,
+            max_seq: int | None = None, cache_dtype=jnp.float32,
+            valid_len=None):
+    """Prompt ingestion for serving: scan the O(1) decode recurrence over a
+    (right-padded) prompt, freezing each row's state past its own
+    ``valid_len``. Returns (last-valid logits [B,1,V], decode cache) — the
+    recurrent counterpart of the transformer KV prefill, and what lets the
+    continuous-batching engine insert an xLSTM request into a live slot."""
+    exe = exe or Execution()
+    cache0 = init_cache(cfg, tokens.shape[0], max_seq or tokens.shape[1],
+                        cache_dtype)
+    return recurrent_prefill(
+        lambda cache, tok: decode_step(params, cache, tok, cfg, exe),
+        cache0, tokens, cfg.vocab, valid_len)
 
 
 def decode_step(params, cache, tokens, cfg: XlstmConfig, exe: Execution = None):

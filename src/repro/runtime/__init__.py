@@ -1,3 +1,11 @@
-"""Runtime resilience: retries, straggler detection, heartbeats, re-mesh."""
+"""Runtime subsystem: the continuous-batching serving engine (request
+admission, slot-based decode, per-request CM_* accounting) plus resilience
+(bounded retry of transient failures, straggler detection, heartbeats,
+elastic re-mesh tables)."""
+from repro.runtime.batcher import (Batcher, Request, RequestRecord,
+                                   SlotAllocator, poisson_trace, reconcile,
+                                   request_ledgers, synchronized_trace)
+from repro.runtime.engine import ServeEngine, ServeReport, static_generate
 from repro.runtime.fault_tolerance import (Heartbeat, StragglerMonitor,
-                                           elastic_mesh_shapes, resilient_step)
+                                           elastic_mesh_shapes, is_transient,
+                                           resilient_step)

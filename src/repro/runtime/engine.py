@@ -1,0 +1,511 @@
+"""ServeEngine: request-level continuous batching over a programmed AIMC
+model (the `runtime/` serving subsystem).
+
+ALPINE's deployment model is weights-stationary inference (§IV-B, Fig. 4):
+CM_INITIALIZE happens once, outside the region of interest, and serving is a
+forever-loop of queue/process/dequeue token vectors. This module is that
+loop made real at the REQUEST level, modeled on the saxml server split
+(servable model owns jitted device functions; a host-side driver owns slots
+and admission):
+
+  request lifecycle   queued -> admitted -> prefilled -> [slot i] decoding
+                      -> retired (EOS / length / max_new) -> slot refilled
+
+  slot state machine  a fixed batch of ``n_slots`` decode lanes. Each lane
+                      is FREE or holds one request. Prefill runs per request
+                      at one padded shape [1, prompt_pad] (ragged prompts
+                      via ``valid_len``), the resulting KV/recurrent state
+                      is inserted into the lane at the request's own length,
+                      and the dense decode batch advances every lane at
+                      once — retired/free lanes compute but are bit-frozen
+                      (`mask_batch_select`), so they never corrupt state or
+                      accounting.
+
+  shape stability     exactly three device closures exist — prefill
+                      [1, prompt_pad], insert (slot index is a traced
+                      scalar), decode [n_slots, 1] — each compiled ONCE at
+                      warmup. No shape depends on arrival order, prompt
+                      length, or live-request count, so a ragged Poisson
+                      trace runs the whole session on the warmup
+                      executables (asserted by `compile_counts`).
+
+The decode loop is wrapped in `fault_tolerance.resilient_step` (transient
+device errors retry; terminal ones — e.g. RESOURCE_EXHAUSTED — raise) and
+timed by a `fault_tolerance.StragglerMonitor`.
+
+CM_* accounting: every USEFUL token vector (prompt tokens at prefill, one
+vector per decode step a request rides in) is booked to its request's
+`RequestRecord`; padding lanes (prompt pad, idle slots) are tracked
+separately as waste. `batcher.reconcile` proves the per-request ledgers sum
+exactly to ``program.mvm_counts().scaled(total_vectors)``.
+
+`launch.steps.make_prefill_step` / `make_serve_step` build their device
+functions from this module's closure builders (`static_prefill_closure`,
+`static_decode_closure`), so the static shape cells and the engine serve
+through one implementation of the model-facing math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Execution, mask_batch_select
+from repro.runtime.batcher import (Batcher, Request, RequestRecord,
+                                   SlotAllocator, percentile)
+from repro.runtime.fault_tolerance import StragglerMonitor, resilient_step
+
+RECURRENT_MODULES = ("xlstm", "rglru")
+
+
+# ---------------------------------------------------------------------------
+# closure builders — the model-facing math, shared with launch.steps
+# ---------------------------------------------------------------------------
+
+def static_prefill_closure(model, cfg, exe: Execution, *, family: str = "lm",
+                           module: str = "transformer", max_seq: int,
+                           cache_dtype) -> Callable:
+    """(params, batch dict) -> (next_tok [B,1] int32, cache).
+
+    The static-batch prefill math: one call covers audio (enc-dec), vlm,
+    transformer and recurrent families. `launch.steps.make_prefill_step`
+    jits exactly this; the engine's static A/B baseline reuses it."""
+    if family == "audio":
+        def prefill(params, batch):
+            logits, cache = model.prefill(params, batch["frames"],
+                                          batch["tokens"], cfg, exe,
+                                          max_seq=max_seq,
+                                          cache_dtype=cache_dtype)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    elif family == "vlm":
+        def prefill(params, batch):
+            logits, cache = model.prefill(params, batch["tokens"], cfg, exe,
+                                          max_seq=max_seq,
+                                          patch_embeds=batch["patch_embeds"],
+                                          cache_dtype=cache_dtype)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    elif module == "transformer":
+        def prefill(params, batch):
+            logits, cache = model.prefill(params, batch["tokens"], cfg, exe,
+                                          max_seq=max_seq,
+                                          cache_dtype=cache_dtype)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+    else:
+        # recurrent families: forward-only lowering (the dry-run cells carry
+        # no cache; slot-cache prefill is `model.prefill`, used by the
+        # engine's per-request closure below)
+        def prefill(params, batch):
+            logits, _ = model.forward(params, batch["tokens"], cfg, exe)
+            return jnp.argmax(logits[:, -1:], -1).astype(jnp.int32), ()
+    return prefill
+
+
+def static_decode_closure(model, cfg, exe: Execution) -> Callable:
+    """(params, cache, tokens [B,1]) -> (next_tok [B,1] int32, cache) —
+    the lockstep decode step `launch.steps.make_serve_step` jits."""
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode_step(params, cache, tokens, cfg, exe)
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeReport:
+    """Everything one `ServeEngine.serve` run produced."""
+    records: dict[int, RequestRecord]
+    n_steps: int = 0               # decode batch steps executed
+    n_prefills: int = 0
+    idle_vectors: int = 0          # frozen decode lanes (slot-idle waste)
+    prefill_pad_vectors: int = 0   # prompt-padding lanes (prefill waste)
+    # useful vectors counted FROM THE DEVICE LOOP (prompt lengths at the
+    # prefill call + busy lanes at each decode call) — independent of the
+    # per-request RequestRecord bookkeeping, so the two can actually
+    # disagree if the engine double- or under-counts (reconcile's job)
+    observed_vectors: int = 0
+    wall_prefill_s: float = 0.0
+    wall_decode_s: float = 0.0
+    makespan_s: float = 0.0        # engine clock: last retirement - start
+    retries: int = 0
+    stragglers: list = dataclasses.field(default_factory=list)
+
+    @property
+    def useful_vectors(self) -> int:
+        return sum(r.vectors for r in self.records.values())
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.records.values())
+
+    def tokens(self, rid: int) -> list[int]:
+        return self.records[rid].tokens
+
+    def latency_percentiles(self, qs=(50, 99)) -> dict[str, float]:
+        lats = [r.latency for r in self.records.values()]
+        ttfts = [r.ttft for r in self.records.values()]
+        out = {}
+        for q in qs:
+            out[f"p{q}_latency_s"] = percentile(lats, q)
+            out[f"p{q}_ttft_s"] = percentile(ttfts, q)
+        return out
+
+    def summary(self) -> str:
+        gen = self.generated_tokens
+        wall = self.wall_prefill_s + self.wall_decode_s
+        pct = self.latency_percentiles()
+        return (f"{len(self.records)} requests, {gen} tokens in "
+                f"{self.makespan_s:.2f}s engine-time ({gen / max(wall, 1e-9):.1f}"
+                f" tok/s compute; {self.n_prefills} prefills, {self.n_steps} "
+                f"decode steps, {self.idle_vectors} idle lanes); "
+                f"p50/p99 latency {pct['p50_latency_s']:.2f}/"
+                f"{pct['p99_latency_s']:.2f}s")
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class ServeEngine:
+    """Continuous-batching serving engine over one installed model.
+
+    Owns: the (program-installed) parameter tree, the slot-shaped decode
+    cache, and the three jitted closures. Drives: admission (`Batcher`),
+    slot allocation, retirement, refill, per-request accounting.
+
+    ``params`` should already carry installed `AimcLinearState`s when
+    serving the programmed AIMC path (``program.install(params)``); pass
+    the `AimcProgram` as ``program`` for CM_* ledger reconciliation.
+    """
+
+    def __init__(self, model, cfg, exe: Execution, params, *,
+                 n_slots: int = 4, prompt_pad: int = 16, max_seq: int = 64,
+                 cache_dtype=jnp.float32, family: str = "lm",
+                 module: str = "transformer", program=None, schedule=None,
+                 eos_id: int | None = None, pad_id: int = 0,
+                 max_retries: int = 2, straggler_threshold: float = 3.0,
+                 admission: str = "fifo"):
+        if family == "audio":
+            raise ValueError("ServeEngine serves decoder-only LMs; the "
+                             "enc-dec audio family decodes via launch.steps")
+        if prompt_pad > max_seq:
+            raise ValueError(f"prompt_pad {prompt_pad} > max_seq {max_seq}")
+        if family == "vlm" and prompt_pad < cfg.n_patches:
+            raise ValueError(
+                f"vlm prompts start with {cfg.n_patches} patch positions; "
+                f"prompt_pad {prompt_pad} cannot hold them")
+        self.model, self.cfg, self.exe, self.params = model, cfg, exe, params
+        self.n_slots, self.prompt_pad, self.max_seq = n_slots, prompt_pad, max_seq
+        self.cache_dtype = cache_dtype
+        self.family, self.module = family, module
+        self.program, self.schedule = program, schedule
+        self.eos_id, self.pad_id = eos_id, pad_id
+        self.admission = admission
+        self.recurrent = module in RECURRENT_MODULES
+        self.monitor = StragglerMonitor(threshold=straggler_threshold)
+        self._retries = 0
+        self._step_no = 0          # engine-lifetime decode step counter
+
+        # per-leaf batch axes of the decode cache (probed, not hardcoded:
+        # transformer KV stacks batch at axis 1, recurrent state trees too,
+        # but "len" and any future leaf may differ — shape-diffing two
+        # abstract init_cache calls finds the axis without model knowledge)
+        self._axes = self._probe_batch_axes()
+
+        self._jit_prefill = jax.jit(self._prefill_fn)
+        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 2))
+        # the decode cache is NOT donated: the step runs under
+        # resilient_step, and a retry after a transient failure must be able
+        # to re-present the same input buffers (donation would have
+        # invalidated them on the failed attempt)
+        self._jit_decode = jax.jit(self._decode_fn)
+        self._safe_decode = resilient_step(
+            self._jit_decode, max_retries=max_retries,
+            on_retry=lambda attempt, e: self._count_retry())
+
+    # -- closures ------------------------------------------------------------
+    def _probe_batch_axes(self):
+        def shapes(b):
+            return jax.eval_shape(lambda: self.model.init_cache(
+                self.cfg, b, self.max_seq, self.cache_dtype))
+
+        def axis_of(s2, s3):
+            for i, (a, b) in enumerate(zip(s2.shape, s3.shape)):
+                if a != b:
+                    return i
+            raise ValueError(f"no batch axis found in cache leaf {s2}")
+
+        return jax.tree.map(axis_of, shapes(2), shapes(3))
+
+    def _prefill_fn(self, params, tokens, valid_len):
+        """[1, prompt_pad] ragged prefill -> (first_tok [1,1], cache1)."""
+        kw = {}
+        if self.family == "vlm":
+            # patch positions are a prompt prefix; the engine serves the
+            # text path with zero patch embeddings unless a request-level
+            # frontend supplies them (frontend-stub rule)
+            kw["patch_embeds"] = jnp.zeros(
+                (tokens.shape[0], self.cfg.n_patches, self.cfg.d_model),
+                jnp.float32)
+        logits, cache = self.model.prefill(
+            params, tokens, self.cfg, self.exe, max_seq=self.max_seq,
+            cache_dtype=self.cache_dtype, valid_len=valid_len, **kw)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        return tok, cache
+
+    def _insert_fn(self, cache, cache1, tok_buf, tok1, slot):
+        """Write a prefilled request's state into decode lane ``slot``."""
+        def put(big, one, ax):
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, one.astype(big.dtype), slot, axis=ax)
+
+        cache = jax.tree.map(put, cache, cache1, self._axes)
+        tok_buf = jax.lax.dynamic_update_slice(tok_buf, tok1, (slot, 0))
+        return cache, tok_buf
+
+    def _decode_fn(self, params, cache, tokens, active):
+        """One dense decode step; inactive lanes are bit-frozen."""
+        if self.module == "transformer":
+            logits, new_cache = self.model.decode_step(
+                params, cache, tokens, self.cfg, self.exe, ragged=True)
+        else:
+            logits, new_cache = self.model.decode_step(
+                params, cache, tokens, self.cfg, self.exe)
+        new_cache = jax.tree.map(
+            lambda n, o, ax: mask_batch_select(n, o, active, ax),
+            new_cache, cache, self._axes)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        tok = jnp.where(active[:, None], tok, tokens)
+        return tok, new_cache
+
+    # -- warmup / compile accounting ----------------------------------------
+    def _empty_cache(self):
+        return self.model.init_cache(self.cfg, self.n_slots, self.max_seq,
+                                     self.cache_dtype)
+
+    def warmup(self):
+        """Compile all three closures once, outside the serving clock."""
+        tokens = jnp.zeros((1, self.prompt_pad), jnp.int32)
+        vl = jnp.ones((1,), jnp.int32)
+        tok1, cache1 = self._jit_prefill(self.params, tokens, vl)
+        cache = self._empty_cache()
+        tok_buf = jnp.zeros((self.n_slots, 1), jnp.int32)
+        cache, tok_buf = self._jit_insert(cache, cache1, tok_buf, tok1,
+                                          jnp.int32(0))
+        active = jnp.zeros((self.n_slots,), bool)
+        tok, cache = self._jit_decode(self.params, cache, tok_buf, active)
+        jax.block_until_ready(tok)
+        return self.compile_counts()
+
+    def compile_counts(self) -> dict[str, int]:
+        """Executable-cache sizes of the engine closures. After `warmup`,
+        serving any trace must leave every count at 1 — the shape-stability
+        contract (pinned by tests/test_engine.py)."""
+        return {"prefill": self._jit_prefill._cache_size(),
+                "insert": self._jit_insert._cache_size(),
+                "decode": self._jit_decode._cache_size()}
+
+    def _count_retry(self):
+        self._retries += 1
+
+    # -- request plumbing ----------------------------------------------------
+    def _pad_prompt(self, prompt):
+        if len(prompt) > self.prompt_pad:
+            raise ValueError(f"prompt length {len(prompt)} exceeds "
+                             f"prompt_pad {self.prompt_pad}")
+        if self.family == "vlm" and len(prompt) < self.cfg.n_patches:
+            # positions [0, n_patches) are patch embeddings wholesale; a
+            # shorter prompt would gather its "last valid" logit inside the
+            # patch prefix and serve silently wrong
+            raise ValueError(
+                f"vlm prompt length {len(prompt)} < n_patches "
+                f"{self.cfg.n_patches}: the prompt must cover the patch "
+                f"positions")
+        padded = list(prompt) + [self.pad_id] * (self.prompt_pad - len(prompt))
+        return (jnp.asarray(padded, jnp.int32)[None],
+                jnp.asarray([len(prompt)], jnp.int32))
+
+    def _prefill_request(self, req: Request, rec: RequestRecord):
+        """Run the [1, prompt_pad] prefill; book vectors and the first token."""
+        tokens, vl = self._pad_prompt(req.prompt)
+        t0 = time.perf_counter()
+        tok1, cache1 = self._jit_prefill(self.params, tokens, vl)
+        tok1.block_until_ready()
+        dt = time.perf_counter() - t0
+        rec.prefill_vectors = len(req.prompt)
+        rec.pad_vectors = self.prompt_pad - len(req.prompt)
+        first = int(tok1[0, 0])
+        rec.tokens.append(first)
+        return tok1, cache1, first, dt
+
+    # -- the serving loop ----------------------------------------------------
+    def serve(self, requests, max_steps: int = 100_000) -> ServeReport:
+        """Serve a full trace to completion (simulated arrival clock).
+
+        The engine clock starts at 0 and advances by the measured wall time
+        of each device call; when every slot is empty it jumps to the next
+        arrival. Request arrival times are in the same (second) units."""
+        queue = Batcher(requests, policy=self.admission)
+        slots = SlotAllocator(self.n_slots)
+        report = ServeReport(records={})
+        slot_rec: dict[int, RequestRecord] = {}       # slot -> live record
+        # snapshot lifetime counters so a reused engine reports only THIS
+        # run's retries/straggler flags (the EWMA baseline itself carries
+        # over on purpose — it stays warm across traces)
+        retries0 = self._retries
+        flagged0 = len(self.monitor.flagged)
+
+        cache = self._empty_cache()
+        tok_buf = jnp.zeros((self.n_slots, 1), jnp.int32)
+        active = [False] * self.n_slots
+        now = 0.0
+
+        def retire(rec: RequestRecord, reason: str, at: float):
+            rec.finish_reason = reason
+            rec.t_done = at
+
+        while len(queue) or slots.n_busy:
+            # ---- admission + slot refill (continuous batching) ------------
+            while slots.n_free:
+                req = queue.pop_ready(now)
+                if req is None:
+                    break
+                rec = RequestRecord(request=req, t_admit=now)
+                report.records[req.rid] = rec
+                tok1, cache1, first, dt = self._prefill_request(req, rec)
+                now += dt
+                report.wall_prefill_s += dt
+                report.n_prefills += 1
+                report.prefill_pad_vectors += rec.pad_vectors
+                report.observed_vectors += len(req.prompt)
+                rec.t_first = now
+                eos_hit = self.eos_id is not None and first == self.eos_id
+                if req.max_new == 1 or eos_hit:
+                    # prefill-only retirement: the request never occupies a
+                    # decode slot (the --gen 1 regime, served honestly)
+                    retire(rec, "eos" if eos_hit else "length", now)
+                    continue
+                slot = slots.alloc(req.rid)
+                slot_rec[slot] = rec
+                t0 = time.perf_counter()
+                cache, tok_buf = self._jit_insert(cache, cache1, tok_buf,
+                                                  tok1, jnp.int32(slot))
+                tok_buf.block_until_ready()
+                ins = time.perf_counter() - t0
+                now += ins
+                report.wall_prefill_s += ins
+                active[slot] = True
+
+            if not slots.n_busy:
+                nxt = queue.next_arrival()
+                if nxt is None:
+                    break
+                now = max(now, nxt)       # idle: jump to the next arrival
+                continue
+
+            # ---- one dense decode step ------------------------------------
+            if report.n_steps >= max_steps:
+                for slot in list(slot_rec):
+                    retire(slot_rec.pop(slot), "cap", now)
+                    slots.release(slot)
+                    active[slot] = False
+                break
+            amask = jnp.asarray(active)
+            t0 = time.perf_counter()
+            tok_buf, cache = self._safe_decode(self.params, cache, tok_buf,
+                                               amask)
+            tok_buf.block_until_ready()
+            dt = time.perf_counter() - t0
+            now += dt
+            report.wall_decode_s += dt
+            report.n_steps += 1
+            report.idle_vectors += self.n_slots - slots.n_busy
+            report.observed_vectors += slots.n_busy
+            self._step_no += 1
+            self.monitor.record(self._step_no, dt)
+            host_tok = jax.device_get(tok_buf)[:, 0].tolist()
+
+            # ---- bookkeeping + retirement ---------------------------------
+            for slot in list(slot_rec):
+                rec = slot_rec[slot]
+                rec.decode_vectors += 1
+                rec.tokens.append(host_tok[slot])
+                done_len = len(rec.tokens) >= rec.request.max_new
+                done_eos = (self.eos_id is not None
+                            and host_tok[slot] == self.eos_id)
+                # the KV write position is bounded by max_seq; O(1)-state
+                # recurrent archs have no such cap
+                done_cap = (not self.recurrent
+                            and len(rec.request.prompt) + rec.decode_vectors
+                            >= self.max_seq)
+                if done_len or done_eos or done_cap:
+                    retire(rec, "eos" if done_eos
+                           else ("length" if done_len else "cap"), now)
+                    slot_rec.pop(slot)
+                    slots.release(slot)
+                    active[slot] = False
+
+        report.makespan_s = now
+        report.retries = self._retries - retries0
+        report.stragglers = list(self.monitor.flagged[flagged0:])
+        return report
+
+    # -- CM_* books ----------------------------------------------------------
+    def ledgers(self, report: ServeReport) -> dict:
+        """rid -> CM_* counts (requires a programmed engine)."""
+        from repro.runtime.batcher import request_ledgers
+        if self.program is None:
+            raise ValueError("CM_* ledgers require an AimcProgram")
+        return request_ledgers(self.program, report.records)
+
+
+# ---------------------------------------------------------------------------
+# the legacy static-batch path (A/B baseline + bit-equality oracle)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def _static_closures(model, cfg, exe, max_seq, cache_dtype):
+    """Jitted static-path closures, cached per configuration — a fresh
+    `jax.jit(lambda ...)` per call would recompile every invocation and
+    bill the A/B baseline for jit time the engine's warmup doesn't pay."""
+    prefill = jax.jit(lambda pr, tk: model.prefill(
+        pr, tk, cfg, exe, max_seq=max_seq, cache_dtype=cache_dtype))
+    decode = jax.jit(lambda pr, ca, tk: model.decode_step(pr, ca, tk, cfg,
+                                                          exe))
+    return prefill, decode
+
+
+def static_generate(model, cfg, exe: Execution, params, prompts, gen: int,
+                    max_seq: int | None = None, cache_dtype=jnp.float32):
+    """The monolithic serve loop this engine replaced: one synchronized
+    batch, one prompt length, ``gen`` lockstep decode steps. Kept as the
+    oracle the continuous-batching tests compare against bit-for-bit, and
+    as the bench's static-batching baseline.
+
+    prompts: [B, P] int32. Returns ([B, gen] tokens, wall seconds
+    (prefill_s, decode_s)). ``gen=1`` is prefill-only: no decode loop runs
+    and the decode time is honestly 0.0.
+    """
+    b, p = prompts.shape
+    max_seq = max_seq or (p + gen)
+    prefill, decode = _static_closures(model, cfg, exe, max_seq, cache_dtype)
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, prompts)
+    out = [jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]]
+    jax.block_until_ready(out[-1])
+    t_prefill = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(gen - 1):
+        logits, cache = decode(params, cache, out[-1])
+        out.append(jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None])
+    if gen > 1:
+        jax.block_until_ready(out[-1])
+    t_decode = time.perf_counter() - t0 if gen > 1 else 0.0
+    return jnp.concatenate(out, axis=1), (t_prefill, t_decode)

@@ -25,19 +25,61 @@ import os
 import time
 from typing import Callable
 
+# The candidate exception TYPES a transient device/runtime failure surfaces
+# as. Type alone is NOT enough to retry: XLA raises RuntimeError/XlaRuntimeError
+# for genuine bugs (INVALID_ARGUMENT) and for out-of-memory (RESOURCE_EXHAUSTED)
+# just as it does for a flaky interconnect — retrying an OOM re-runs the
+# allocation that already failed, and retrying a bug hides it. Classification
+# is therefore on the error MESSAGE: terminal substrings always raise,
+# transient substrings (plus plain I/O errors) retry.
 TRANSIENT_ERRORS = (RuntimeError, OSError)
+
+# Never retry: deterministic failures — the same call will fail the same way
+# (or worse, an OOM retry loop wedges the host until the supervisor kills it).
+TERMINAL_SUBSTRINGS = (
+    "RESOURCE_EXHAUSTED", "out of memory", "OUT_OF_MEMORY",
+    "INVALID_ARGUMENT", "FAILED_PRECONDITION", "UNIMPLEMENTED",
+    "PERMISSION_DENIED", "NOT_FOUND",
+)
+
+# Worth retrying: infrastructure flakes that a backoff genuinely clears.
+TRANSIENT_SUBSTRINGS = (
+    "UNAVAILABLE", "DEADLINE_EXCEEDED", "ABORTED", "CANCELLED", "INTERNAL",
+    "DATA_LOSS", "connection", "socket", "timed out", "timeout", "transient",
+    "temporarily",
+)
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Should this step failure be retried in-process?
+
+    Terminal substrings win outright (an OSError carrying RESOURCE_EXHAUSTED
+    is still terminal). Otherwise OSErrors — I/O against a live fleet — are
+    presumed transient, while RuntimeErrors must positively look like an
+    infrastructure flake: an unrecognized RuntimeError is a bug and raises
+    immediately rather than being retried as "transient".
+    """
+    if not isinstance(exc, TRANSIENT_ERRORS):
+        return False
+    low = str(exc).lower()
+    if any(s.lower() in low for s in TERMINAL_SUBSTRINGS):
+        return False
+    if isinstance(exc, OSError):
+        return True
+    return any(s.lower() in low for s in TRANSIENT_SUBSTRINGS)
 
 
 def resilient_step(step_fn: Callable, max_retries: int = 2,
                    on_retry: Callable[[int, Exception], None] | None = None):
-    """Wrap a compiled step function with bounded retry."""
+    """Wrap a compiled step function with bounded retry of TRANSIENT
+    failures (`is_transient`); terminal errors propagate immediately."""
 
     def wrapped(*args, **kwargs):
         for attempt in range(max_retries + 1):
             try:
                 return step_fn(*args, **kwargs)
-            except TRANSIENT_ERRORS as e:          # pragma: no cover - fleet
-                if attempt == max_retries:
+            except TRANSIENT_ERRORS as e:
+                if not is_transient(e) or attempt == max_retries:
                     raise
                 if on_retry:
                     on_retry(attempt, e)
