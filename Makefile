@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast test-all bench bench-pipeline bench-json \
         bench-serving serve-aimc serve-aimc-reprogram serve-aimc-multicore \
-        serve-smoke
+        serve-smoke serve-sharded docs-check
 
 # Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
@@ -31,16 +31,25 @@ bench-pipeline:
 
 # Machine-readable benchmark artifact: per-case wall-clock, modeled latency
 # and check pass/fail (the cross-PR perf-trajectory record). The full suite
-# writes BENCH_all.json; the kernel perf-smoke alone writes
-# BENCH_kernels.json (same artifact ci.sh --fast produces).
+# writes BENCH_all.json — including the sharded-engine serving checks on a
+# forced 2-device mesh; the kernel perf-smoke alone writes
+# BENCH_kernels.json (same artifact ci.sh --fast produces). A partial run
+# (crashed sub-bench, --only) refuses to overwrite a complete BENCH_all.json.
 bench-json:
-	$(PY) -m benchmarks.run --json BENCH_all.json
+	$(PY) -m benchmarks.run --mesh data:2,model:1 --json BENCH_all.json
 	$(PY) -m benchmarks.bench_kernels --json BENCH_kernels.json
 
-# Serving-engine benchmark alone (continuous batching vs static batch:
-# throughput + latency percentiles under synthetic traces).
+# Serving-engine benchmark alone (continuous batching vs static batch,
+# PLUS the sharded engine vs single-device on a forced 2-device
+# host-platform mesh: bit-equality + ledger reconciliation are the bar).
 bench-serving:
-	$(PY) -m benchmarks.bench_serving --json BENCH_serving.json
+	$(PY) -m benchmarks.bench_serving --mesh data:2,model:1 \
+	    --json BENCH_serving.json
+
+# Docs link-rot gate: every file path README/DESIGN/EXPERIMENTS/ROADMAP
+# mention must exist (tools/docs_check.py; part of ci.sh --fast).
+docs-check:
+	$(PY) tools/docs_check.py
 
 # Continuous-batching engine smoke: a ragged Poisson trace through the
 # programmed AIMC path (the ci.sh --fast engine smoke, runnable alone).
@@ -60,3 +69,12 @@ serve-aimc-reprogram:
 # per-core CM_*/comm ledgers + modeled latency reported (core.schedule).
 serve-aimc-multicore:
 	$(PY) -m repro.launch.serve --arch granite-8b --smoke --exec aimc --cores 4
+
+# Sharded serving smoke: the continuous-batching engine over a forced
+# 2-device host-platform mesh (slots over data, crossbar bit lines over
+# model; DESIGN.md §11) with per-device ledger reporting.
+serve-sharded:
+	XLA_FLAGS="--xla_force_host_platform_device_count=2 $(XLA_FLAGS)" \
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
+	    --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
+	    --cores 2 --mesh data:2,model:1

@@ -17,6 +17,16 @@ Measured per case (one transformer, one recurrent arch):
   * engine compile counts (shape stability under the ragged trace);
   * bit-equality of engine vs static tokens for synchronized arrivals.
 
+``--mesh data:D,model:M`` additionally benchmarks the SHARDED engine
+(`runtime.engine.ShardedServeEngine`, DESIGN.md §11) against the
+single-device engine on the same traces: decode slots sharded over the data
+axis, programmed crossbar bit lines over the model axis. On the forced
+host-platform mesh the devices share one CPU, so the point is not speedup —
+it is that the sharded run is BIT-EQUAL to the single-device engine and
+that the per-core/per-request CM_* ledgers still reconcile exactly
+(EXPERIMENTS.md §Sharded serving). The flag forces
+``--xla_force_host_platform_device_count`` as needed when run as a module.
+
 ``--json BENCH_serving.json`` is the machine-readable artifact
 (``benchmarks.run --json`` includes this module; ``make bench-json``).
 """
@@ -33,9 +43,10 @@ from repro.configs import get_arch
 from repro.core.aimc import AimcConfig
 from repro.core.program import MappingPlan, program_model
 from repro.models.layers import Execution
-from repro.runtime.batcher import (poisson_trace, reconcile,
+from repro.runtime.batcher import (poisson_trace, reconcile, reconcile_cores,
                                    synchronized_trace)
-from repro.runtime.engine import ServeEngine, static_generate
+from repro.runtime.engine import (ServeEngine, ShardedServeEngine,
+                                  static_generate)
 
 N_REQ = 16
 RATE = 100.0                 # req/s: arrivals overlap decode at smoke scale
@@ -45,7 +56,7 @@ PAD = 12
 N_SLOTS = 4
 
 
-def _setup(arch: str, programmed: bool):
+def _setup(arch: str, programmed: bool, n_contexts: int = 1):
     spec = get_arch(arch)
     cfg = spec.smoke_cfg
     model = spec.model_module()
@@ -60,8 +71,8 @@ def _setup(arch: str, programmed: bool):
         aimc_cfg = AimcConfig(impl="ref", input_scale=0.1)
         exe = Execution(mode="aimc", aimc=aimc_cfg, compute_dtype="float32",
                         programmed=True)
-        program = program_model(params, MappingPlan(), aimc_cfg,
-                                jax.random.PRNGKey(2))
+        program = program_model(params, MappingPlan(n_contexts=n_contexts),
+                                aimc_cfg, jax.random.PRNGKey(2))
         params = program.install(params)
     else:
         exe = Execution(compute_dtype="float32")
@@ -187,19 +198,113 @@ def _bench_case(arch: str, programmed: bool, verbose: bool) -> dict:
     return case
 
 
-def run(verbose: bool = True) -> dict:
+def _bench_sharded_case(arch: str, programmed: bool, mesh, mesh_arg: str,
+                        verbose: bool) -> dict:
+    """Sharded vs single-device engine on identical traces (DESIGN.md §11):
+    same params/program/trace, the only variable is the mesh placement."""
+    from repro.core.schedule import CoreSchedule
+    n_ctx = max(2, mesh.shape.get("model", 1)) if programmed else 1
+    spec, cfg, model, params, exe, program = _setup(arch, programmed, n_ctx)
+    schedule = (CoreSchedule.from_program(program)
+                if program is not None else None)
+    max_seq = PAD + MAX_NEW[1] + 2
+    kw = dict(n_slots=N_SLOTS, prompt_pad=PAD, max_seq=max_seq,
+              cache_dtype=jnp.float32, family=spec.family,
+              module=spec.module, program=program, schedule=schedule)
+    single = ServeEngine(model, cfg, exe, params, **kw)
+    single.warmup()
+    t0 = time.time()
+    sharded = ShardedServeEngine(model, cfg, exe, params, mesh=mesh, **kw)
+    sharded.warmup()
+    t_warm = time.time() - t0
+
+    trace = poisson_trace(N_REQ, RATE, seed=11, prompt_len=PROMPT,
+                          max_new=MAX_NEW, vocab=cfg.vocab)
+    cont_single, _ = _serve_continuous(single, trace)
+    cont_sharded, rep_sharded = _serve_continuous(sharded, trace)
+
+    # the equality bar: the SAME trace decodes to the SAME tokens on the
+    # mesh as on one device (every request, every token)
+    sync = synchronized_trace(N_SLOTS, prompt_len=PAD, max_new=6, seed=3,
+                              vocab=cfg.vocab)
+    sync_single = single.serve(sync)
+    sync_sharded = sharded.serve(sync)
+    bit_equal = all(sync_single.tokens(r.rid) == sync_sharded.tokens(r.rid)
+                    for r in sync)
+
+    ledger_exact = (rep_sharded.observed_vectors
+                    == rep_sharded.useful_vectors)
+    if program is not None:
+        led_sum, static_sum = reconcile(program, rep_sharded.records,
+                                        rep_sharded.observed_vectors)
+        core_sum, sched_total = reconcile_cores(
+            schedule, rep_sharded.records, rep_sharded.observed_vectors)
+        ledger_exact = (ledger_exact and led_sum == static_sum
+                        and core_sum == sched_total
+                        and sched_total == program.mvm_counts().scaled(
+                            rep_sharded.observed_vectors))
+
+    case = {
+        "arch": spec.arch_id,
+        "exec": "aimc-programmed" if programmed else "digital",
+        "mesh": mesh_arg,
+        "trace": f"poisson:{RATE:.0f} n={N_REQ} prompt={PROMPT} "
+                 f"max_new={MAX_NEW}",
+        "n_slots": N_SLOTS,
+        "warmup_s": t_warm,
+        "single": cont_single,
+        "sharded": cont_sharded,
+        "tok_s_ratio": cont_sharded["tok_s"] / max(cont_single["tok_s"],
+                                                   1e-9),
+        "compile_counts": sharded.compile_counts(),
+        "stable_shapes": sharded.compile_counts()
+        == {"prefill": 1, "insert": 1, "decode": 1},
+        "sync_bit_equal": bit_equal,
+        "ledger_exact": ledger_exact,
+    }
+    if verbose:
+        rows = [[mode, f"{d['tok_s']:.1f}", f"{d['makespan_s'] * 1e3:.0f}",
+                 f"{d['p50_latency_s'] * 1e3:.0f}",
+                 f"{d['p99_latency_s'] * 1e3:.0f}",
+                 f"{d['p50_ttft_s'] * 1e3:.0f}"]
+                for mode, d in (("single-device", cont_single),
+                                ("sharded", cont_sharded))]
+        print(table(
+            f"{spec.arch_id} [{case['exec']}] engine on mesh {mesh_arg}",
+            ["engine", "tok/s", "makespan ms", "p50 lat ms", "p99 lat ms",
+             "p50 ttft ms"], rows))
+        print(f"  sharded/single tok/s ratio: {case['tok_s_ratio']:.2f} "
+              f"(host-platform devices share one CPU; equality, not "
+              f"speedup, is the bar)")
+        print(f"  shape-stable: {case['stable_shapes']}  "
+              f"sync bit-equal: {bit_equal}  ledger exact: {ledger_exact}")
+    return case
+
+
+def run(verbose: bool = True, mesh_arg: str | None = None) -> dict:
     cases = [
         _bench_case("granite-8b", programmed=True, verbose=verbose),
         _bench_case("xlstm-350m", programmed=False, verbose=verbose),
     ]
-    return {"cases": cases}
+    out = {"cases": cases}
+    if mesh_arg:
+        from repro.launch.mesh import make_mesh
+        from repro.launch.serve import parse_named_mesh
+        shape, axes = parse_named_mesh(mesh_arg)
+        mesh = make_mesh(shape, axes)
+        out["sharded_cases"] = [
+            _bench_sharded_case("granite-8b", True, mesh, mesh_arg, verbose),
+            _bench_sharded_case("xlstm-350m", False, mesh, mesh_arg,
+                                verbose),
+        ]
+    return out
 
 
 def checks(results=None) -> list[Check]:
     results = results or run(verbose=False)
     cases = results["cases"]
     min_ratio = min(c["tok_s_ratio"] for c in cases)
-    return [
+    out = [
         Check("continuous batching beats static tok/s on every "
               "staggered trace",
               1.0 if min_ratio > 1.0 else 0.0, 1.0, rtol=0.01),
@@ -213,6 +318,20 @@ def checks(results=None) -> list[Check]:
               1.0 if all(c["ledger_exact"] for c in cases) else 0.0,
               1.0, rtol=0.01),
     ]
+    sharded = results.get("sharded_cases")
+    if sharded:
+        out += [
+            Check("sharded engine bit-equal to single-device on the mesh",
+                  1.0 if all(c["sync_bit_equal"] for c in sharded) else 0.0,
+                  1.0, rtol=0.01),
+            Check("sharded engine shapes jit-stable (no recompile)",
+                  1.0 if all(c["stable_shapes"] for c in sharded) else 0.0,
+                  1.0, rtol=0.01),
+            Check("shard-aggregated per-core ledgers reconcile exactly",
+                  1.0 if all(c["ledger_exact"] for c in sharded) else 0.0,
+                  1.0, rtol=0.01),
+        ]
+    return out
 
 
 if __name__ == "__main__":
@@ -223,8 +342,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", metavar="PATH",
                     help="write results + checks as JSON")
+    ap.add_argument("--mesh", metavar="SPEC", default=None,
+                    help="also bench the sharded engine on this mesh "
+                         "(data:D,model:M); forces host-platform device "
+                         "count as needed")
     args = ap.parse_args()
-    res = run()
+    if args.mesh:
+        # must precede first backend use: XLA fixes the device count at init
+        from repro.launch.serve import force_host_device_count
+        force_host_device_count(args.mesh)
+    res = run(mesh_arg=args.mesh)
     cs = checks(res)
     for c in cs:
         print(c.row())

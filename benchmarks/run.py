@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -70,6 +71,38 @@ def _jsonable(obj):
     return None
 
 
+def write_report(path: str, report: dict, complete: bool) -> bool:
+    """Write the JSON artifact — unless the run is PARTIAL (a sub-bench
+    crashed, or ``--only`` restricted the module set) and a COMPLETE
+    artifact already exists at ``path``.
+
+    BENCH_all.json is the cross-PR perf-trajectory record: clobbering it
+    with a partial run would silently erase the last complete baseline. A
+    complete run that merely has failing CHECKS still writes — all its data
+    is present and the exit code carries the failure (the documented
+    pre-existing CNN top-1 failure must not wedge the artifact). Partial
+    runs stamp ``"partial": true`` into the payload, so an existing
+    partial artifact never blocks a refresh (artifacts written before this
+    stamp existed are presumed complete). Returns whether the file was
+    written."""
+    report = dict(report, partial=not complete)
+    if not complete and os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev_complete = not json.load(f).get("partial", False)
+        except (OSError, ValueError):
+            prev_complete = False              # unreadable: nothing to protect
+        if prev_complete:
+            print(f"\nNOT writing {path}: this run is partial (crashed "
+                  f"sub-bench or --only) and a complete artifact exists "
+                  f"(refusing to overwrite the last complete baseline)")
+            return False
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\nwrote {path}")
+    return True
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(prog="benchmarks.run")
     ap.add_argument("--json", metavar="PATH",
@@ -77,17 +110,37 @@ def main(argv=None) -> None:
     ap.add_argument("--only", metavar="NAME",
                     choices=[k for k, *_ in MODULES],
                     help="run a single benchmark module")
+    ap.add_argument("--mesh", metavar="SPEC", default=None,
+                    help="also bench the SHARDED serving engine on this "
+                         "mesh (data:D,model:M); forces the host-platform "
+                         "device count as needed (must precede first "
+                         "backend use)")
     args = ap.parse_args(argv)
+    if args.mesh:
+        from repro.launch.serve import force_host_device_count
+        force_host_device_count(args.mesh)
 
     all_checks = []
     report = {"modules": {}}
+    errored = []
     t_start = time.time()
     selected = [m for m in MODULES if args.only in (None, m[0])]
     for key, title, mod in selected:
         print(f"\n{'=' * 72}\n{title}\n{'=' * 72}")
         t0 = time.time()
-        results = mod.run(verbose=True)
-        checks = mod.checks(results)
+        try:
+            if key == "serving" and args.mesh:
+                results = mod.run(verbose=True, mesh_arg=args.mesh)
+            else:
+                results = mod.run(verbose=True)
+            checks = mod.checks(results)
+        except Exception as e:             # a crashed sub-bench must not
+            elapsed = time.time() - t0     # silently vanish from the report
+            print(f"  ERROR: {type(e).__name__}: {e}")
+            errored.append(key)
+            report["modules"][key] = {"title": title, "elapsed_s": elapsed,
+                                      "error": f"{type(e).__name__}: {e}"}
+            continue
         all_checks.extend(checks)
         for c in checks:
             print(c.row())
@@ -109,16 +162,20 @@ def main(argv=None) -> None:
     n_fail = sum(1 for c in all_checks if not c.ok)
     report["summary"] = {"passed": len(all_checks) - n_fail,
                          "total": len(all_checks),
+                         "errored_modules": errored,
                          "elapsed_s": time.time() - t_start}
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(report, f, indent=2)
-        print(f"\nwrote {args.json}")
+        # an --only run is partial by construction: it must not clobber a
+        # complete multi-module baseline
+        write_report(args.json, report,
+                     complete=not errored and args.only is None)
 
     print(f"\n{'=' * 72}")
     print(f"SUMMARY: {len(all_checks) - n_fail}/{len(all_checks)} paper-claim "
-          f"validations passed ({time.time() - t_start:.1f}s)")
-    if n_fail:
+          f"validations passed ({time.time() - t_start:.1f}s)"
+          + (f"; {len(errored)} module(s) ERRORED: {', '.join(errored)}"
+             if errored else ""))
+    if n_fail or errored:
         for c in all_checks:
             if not c.ok:
                 print(c.row())

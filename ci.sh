@@ -5,8 +5,12 @@
 #                      interpret-mode Pallas sweeps and subprocess tests)
 #   ./ci.sh --fast     inner-loop tier: skip tests marked pallas/slow
 #                      (see [tool.pytest.ini_options].markers), then run the
-#                      kernel perf-smoke (bench_kernels in interpret mode,
-#                      writes BENCH_kernels.json, fails on check regression)
+#                      docs smokes (docs-check + examples/quickstart.py, the
+#                      README front door), the engine smokes (single-device
+#                      poisson trace + the sharded engine on a forced
+#                      2-device host-platform mesh), and the kernel
+#                      perf-smoke (bench_kernels in interpret mode, writes
+#                      BENCH_kernels.json, fails on check regression)
 #   ./ci.sh --install  pip-install pinned deps first (no-op in the baked image)
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -19,9 +23,17 @@ fi
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -x -q -m "not pallas and not slow"
+    echo "== docs-smoke: file references + README quickstart =="
+    python tools/docs_check.py
+    python examples/quickstart.py
     echo "== engine smoke: continuous-batching serve (poisson trace) =="
     python -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
         --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc
+    echo "== engine smoke: sharded engine on a 2-device host-platform mesh =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+        python -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
+        --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
+        --cores 2 --mesh data:2,model:1
     echo "== perf-smoke: bench_kernels (interpret mode) =="
     exec python -m benchmarks.bench_kernels --json BENCH_kernels.json
 fi

@@ -25,6 +25,17 @@ traffic. This module makes that split first-class for whole models:
 
 Training is unchanged: without an installed program, ``Execution(mode="aimc")``
 keeps the on-the-fly STE path (noise-aware training).
+
+Public surface: `MappingPlan`, `program_model`, `AimcProgram`
+(`install`, `install_shape`, `initialize_counts`, `mvm_counts`, placement
+stats), `ProgramBuilder`, `CapacityError`.
+
+Invariants (pinned by tests/test_program.py): programming + apply
+reproduces the seed's `aimc_linear_ste` bit-for-bit under the same keys;
+CM_* counts are pure functions of mapped shapes (no instrumentation inside
+jit); `install` replaces ONLY plan-selected leaves and is idempotent over
+already-installed trees; an `AimcProgram` crosses jit boundaries, shards
+and donates like any parameter tree (all bookkeeping is static aux data).
 """
 
 from __future__ import annotations

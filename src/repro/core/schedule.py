@@ -30,7 +30,17 @@ analytically; this module makes them RUN:
 Builders for every paper multi-core case live at the bottom
 (`mlp_schedule`, `lstm_schedule`, `cnn_schedule`) and `from_program` lowers
 any `program_model` output (zoo models) using its MappingPlan contexts as
-cores.
+cores. `mesh_placement` / `device_ledgers` fold the virtual cores onto a
+JAX mesh's model-axis devices for the sharded serving engine
+(DESIGN.md §11) — placement regroups the books but never creates or loses
+traffic.
+
+Invariants (pinned by tests/test_schedule.py): column splits are EXACT
+(concatenated shard outputs == single-core apply, noise off); unsplit
+per-core ledgers sum to `program.mvm_counts()` while column splits
+partition dequeue/initialize exactly and duplicate queue/process by the
+split factor; `modeled_latency()` equals `costmodel.evaluate()` on the
+matching Workload IR bit-for-bit (shared accounting).
 """
 
 from __future__ import annotations
@@ -349,6 +359,40 @@ class CoreSchedule:
         times = self.phase_times(sys, p, coupling)
         law = pipelined_latency if self.pipelined else sequential_latency
         return law(times)
+
+    # -- mesh placement (sharded serving, DESIGN.md §11) -----------------------
+    def mesh_placement(self, mesh, axis: str = "model") -> dict[int, int]:
+        """virtual core -> device slot along mesh ``axis`` (round-robin).
+
+        The placement rule the sharded serving engine uses: cores fold onto
+        the model-parallel devices in index order, so an N-core schedule on
+        a D-device axis puts core c on device ``c % D``. With D >= N every
+        core owns a device (the paper's one-core-per-unit regime); with
+        D < N devices time-share cores exactly as a single device
+        time-shares every core today — the ledgers are placement-invariant
+        either way. A mesh without ``axis`` is a single device slot."""
+        n_dev = mesh.shape[axis] if axis in mesh.axis_names else 1
+        return {c: c % n_dev for c in range(self.n_cores)}
+
+    def device_ledgers(self, mesh,
+                       axis: str = "model") -> dict[int, CoreLedger]:
+        """device slot -> per-inference ledger summed over the cores placed
+        there (`mesh_placement`). The ``core`` field of each returned
+        `CoreLedger` is the DEVICE slot; summed over devices the books equal
+        `ledger_totals()` — placement never creates or loses traffic."""
+        place = self.mesh_placement(mesh, axis)
+        acc: dict[int, list] = {}
+        for led in self.ledgers():
+            d = place[led.core]
+            if d not in acc:
+                acc[d] = [isa.CmCounts(), 0, 0, 0, 0]
+            a = acc[d]
+            a[0] = a[0] + led.cm
+            a[1] += led.comm_bytes
+            a[2] += led.comm_events
+            a[3] += led.load_bytes
+            a[4] += led.store_bytes
+        return {d: CoreLedger(d, *acc[d]) for d in sorted(acc)}
 
     def summary(self) -> str:
         law = "pipelined" if self.pipelined else "sequential"

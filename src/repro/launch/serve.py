@@ -28,6 +28,15 @@ every forward) for A/B measurement of the program-once speedup. ``--int8``
 stores the digital weights in the paper's number format. Recurrent archs
 (xlstm, rglru) serve through per-slot hidden-state insertion/reset — no
 longer rejected.
+
+``--mesh data:D,model:M`` serves through the SHARDED engine
+(`runtime.engine.ShardedServeEngine`, DESIGN.md §11): decode slots shard
+over the data axis, programmed crossbar bit lines over the model axis, and
+the decode output is bit-equal to the single-device engine. Combined with
+``--cores N`` the per-core CM_* ledgers additionally report per mesh
+device (`CoreSchedule.mesh_placement`). The legacy ``DxM`` spelling keeps
+the single-device engine. CPU hosts must force the device count BEFORE
+launch: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 
 from __future__ import annotations
@@ -59,7 +68,14 @@ def parse_args(argv=None):
     ap.add_argument("--eos", type=int, default=-1,
                     help="EOS token id for early retirement (-1: disabled)")
     ap.add_argument("--admission", default="fifo", choices=["fifo", "sjf"])
-    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--mesh", default="1x1",
+                    help="device mesh: 'data:D,model:M' serves through the "
+                         "sharded engine (slots over data, crossbar bit "
+                         "lines over model; bit-equal to the single-device "
+                         "path); legacy 'DxM' keeps the single-device "
+                         "engine. Needs D*M visible devices (CPU: set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N before launch)")
     ap.add_argument("--exec", dest="exec_mode", default="digital",
                     choices=["digital", "aimc"])
     ap.add_argument("--reprogram", action="store_true",
@@ -89,6 +105,66 @@ def parse_args(argv=None):
         ap.error("--static serves one synchronized batch; staggered "
                  "traces/arrivals need the engine")
     return args
+
+
+def parse_mesh(arg: str):
+    """(shape, axes, sharded) from a --mesh string.
+
+    ``data:D,model:M`` (any subset/order of named axes) selects the sharded
+    engine; the legacy ``DxM`` / ``PxDxM`` positional syntax keeps the
+    single-device `ServeEngine` (mesh used for context only, as before)."""
+    if ":" in arg:
+        pairs = [p.split(":", 1) for p in arg.split(",")]
+        bad = [p for p in pairs if len(p) != 2 or not p[1].isdigit()
+               or int(p[1]) < 1]
+        if bad or not pairs:
+            raise SystemExit(f"--mesh {arg!r}: expected AXIS:SIZE[,AXIS:SIZE]"
+                             " with SIZE >= 1 (e.g. data:2,model:1)")
+        axes = tuple(name for name, _ in pairs)
+        if len(set(axes)) != len(axes):
+            raise SystemExit(f"--mesh {arg!r}: duplicate axis")
+        return tuple(int(s) for _, s in pairs), axes, True
+    try:
+        shape = tuple(int(s) for s in arg.split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh {arg!r}: expected DxM / PxDxM or the "
+                         "named AXIS:SIZE[,AXIS:SIZE] syntax") from None
+    if len(shape) not in (2, 3) or any(s < 1 for s in shape):
+        raise SystemExit(f"--mesh {arg!r}: positional syntax takes 2 (DxM) "
+                         "or 3 (PxDxM) sizes, each >= 1")
+    axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(shape)]
+    return shape, axes, False
+
+
+def parse_named_mesh(arg: str):
+    """(shape, axes) from a --mesh string, REQUIRING the named syntax.
+
+    The benchmark/sharded entry points take only ``data:D,model:M`` — the
+    legacy positional spelling means "single-device engine" in this CLI and
+    must not silently select the sharded one elsewhere."""
+    shape, axes, sharded = parse_mesh(arg)
+    if not sharded:
+        raise SystemExit(f"--mesh {arg!r}: this path takes the named "
+                         "AXIS:SIZE[,AXIS:SIZE] syntax (e.g. "
+                         "data:2,model:1); the positional DxM spelling "
+                         "selects the single-device engine in launch.serve")
+    return shape, axes
+
+
+def force_host_device_count(arg: str):
+    """Parse a named --mesh spec and force the XLA host-platform device
+    count to fit it. MUST run before the first jax backend use (the device
+    count is fixed at backend init) — call it at the top of a ``__main__``
+    entry point, never from library code. Returns (shape, axes)."""
+    import math
+    import os
+    shape, axes = parse_named_mesh(arg)
+    need = math.prod(shape)
+    if need > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={need} "
+            + os.environ.get("XLA_FLAGS", ""))
+    return shape, axes
 
 
 def build_requests(args, vocab: int, min_prompt: int = 1):
@@ -128,7 +204,7 @@ def main(argv=None):
     from repro.core.aimc import AimcConfig
     from repro.launch.mesh import make_mesh
     from repro.models.layers import Execution
-    from repro.runtime.engine import ServeEngine
+    from repro.runtime.engine import ServeEngine, ShardedServeEngine
 
     spec = get_arch(args.arch)
     if args.smoke:
@@ -138,8 +214,11 @@ def main(argv=None):
         raise SystemExit("serve.py drives decoder-only LMs; the enc-dec "
                          "audio family decodes via launch.steps")
 
-    shape = tuple(int(s) for s in args.mesh.split("x"))
-    axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(shape)]
+    shape, axes, sharded = parse_mesh(args.mesh)
+    if sharded and args.static:
+        raise SystemExit("--static is the single-device A/B oracle; "
+                         "the sharded engine needs the named-mesh engine "
+                         "path (drop --static or use the legacy DxM syntax)")
     mesh = make_mesh(shape, axes)
     aimc_cfg = AimcConfig(impl="ref")
     exe = (Execution(mode="aimc", aimc=aimc_cfg, compute_dtype="float32",
@@ -199,17 +278,23 @@ def main(argv=None):
 
         # ---- continuous batching (the deployment path) --------------------
         n_slots = args.slots or min(b, 8)
-        engine = ServeEngine(
-            model, cfg, exe, params, n_slots=n_slots, prompt_pad=p,
-            max_seq=max_seq, cache_dtype=jnp.float32, family=spec.family,
-            module=spec.module, program=program, schedule=schedule,
-            eos_id=None if args.eos < 0 else args.eos,
-            admission=args.admission)
+        common = dict(n_slots=n_slots, prompt_pad=p, max_seq=max_seq,
+                      cache_dtype=jnp.float32, family=spec.family,
+                      module=spec.module, program=program, schedule=schedule,
+                      eos_id=None if args.eos < 0 else args.eos,
+                      admission=args.admission)
+        if sharded:
+            engine = ShardedServeEngine(model, cfg, exe, params, mesh=mesh,
+                                        **common)
+        else:
+            engine = ServeEngine(model, cfg, exe, params, **common)
         t0 = time.time()
         engine.warmup()
         print(f"[serve] engine warmed up in {time.time() - t0:.2f}s "
-              f"({n_slots} slots, prompt_pad={p}, max_seq={max_seq}; "
-              f"compiled {engine.compile_counts()})")
+              f"({n_slots} slots, prompt_pad={p}, max_seq={max_seq}"
+              + (f"; sharded over {dict(zip(axes, shape))}" if sharded
+                 else "")
+              + f"; compiled {engine.compile_counts()})")
 
         report = engine.serve(requests)
         print(f"[serve] {report.summary()}")
@@ -243,6 +328,17 @@ def main(argv=None):
                                             report.observed_vectors)
             print(f"  per-request ledger sum reconciles with the program's "
                   f"static accounting: {led_sum == static_sum}")
+            if sharded and schedule is not None:
+                from repro.runtime.batcher import reconcile_cores
+                core_sum, sched_total = reconcile_cores(
+                    schedule, report.records, report.observed_vectors)
+                print(f"  per-core ledgers (aggregated across shards) "
+                      f"reconcile with the schedule totals: "
+                      f"{core_sum == sched_total}")
+                for dev, cm in sorted(engine.device_ledgers(report).items()):
+                    print(f"    mesh device[{engine.model_axis}={dev}]: "
+                          f"queue={cm.queue} process={cm.process} "
+                          f"dequeue={cm.dequeue}")
         _print_schedule(args, schedule)
         for rid in sorted(report.records)[:3]:
             rec = report.records[rid]

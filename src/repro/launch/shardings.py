@@ -196,6 +196,42 @@ def shard_aimc_states(pspecs, params_shape, mesh, axis: str = "model"):
         one, pspecs, params_shape, is_leaf=lambda x: isinstance(x, P))
 
 
+def serve_engine_param_specs(params_shape, mesh, axis: str = "model"):
+    """Parameter placement for the sharded serving engine (DESIGN.md §11).
+
+    Weights-stationary serving: every digital leaf REPLICATES (no per-token
+    gathers, and replication keeps per-row math bit-identical to the
+    single-device engine), while programmed `AimcLinearState` leaves
+    column-shard their bit lines over ``axis`` — each model-parallel device
+    owns a slice of every crossbar's output columns, the multi-core layout
+    `core.schedule.select_columns` proves exact. `fit_spec` drops the axis
+    wherever Np does not divide; a mesh without ``axis`` (data-only
+    serving) replicates the states too."""
+    repl = jax.tree.map(lambda l: P(*([None] * l.ndim)), params_shape)
+    if axis not in mesh.axis_names:
+        return repl
+    return shard_aimc_states(repl, params_shape, mesh, axis)
+
+
+def slot_cache_specs(cache_shape, batch_axes, mesh):
+    """Decode-slot cache placement for the sharded engine.
+
+    The engine's slot axis (the probed per-leaf batch axis) shards over the
+    data axes — each data-parallel device advances its own decode lanes —
+    and every other dimension replicates. No reduction dimension is ever
+    sharded, so the per-lane math stays bit-identical to the single-device
+    engine (the DESIGN.md §11 equality bar). Leaves whose slot count does
+    not divide the data axes fall back to replicated via `fit_spec`."""
+    dp = dp_axes(mesh)
+
+    def one(leaf, ax):
+        spec = [None] * leaf.ndim
+        spec[ax] = dp
+        return fit_spec(P(*spec), leaf.shape, mesh)
+
+    return jax.tree.map(one, cache_shape, batch_axes)
+
+
 def strip_fsdp(specs, mesh):
     """Serving weight placement: keep `model` sharding, drop the FSDP axes
     (weights replicate across data rows — no per-token all-gathers). Used by

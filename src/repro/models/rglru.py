@@ -277,7 +277,12 @@ def unembed_matrix(params, cfg: RglruConfig):
 # serving: O(1)-state decode (window cache + recurrent state)
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: RglruConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+def init_cache(cfg: RglruConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               shardings=None):
+    """RG-LRU state + conv window + ring-buffer window KV + lengths.
+    ``shardings`` (a matching tree of `NamedSharding`s) creates each leaf
+    directly on its mesh placement for the sharded serving engine
+    (host-side callers only; inside jit leave it None)."""
     w = min(cfg.window, max_seq)
     nu, dr, cw = cfg.n_units, cfg.drnn, cfg.conv_width
     cache = {
@@ -292,6 +297,8 @@ def init_cache(cfg: RglruConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
     if cfg.n_tail:
         cache |= {"tail_r": jnp.zeros((cfg.n_tail, batch, dr), jnp.float32),
                   "tail_conv": jnp.zeros((cfg.n_tail, batch, cw - 1, dr), dtype)}
+    if shardings is not None:
+        cache = jax.tree.map(jax.device_put, cache, shardings)
     return cache
 
 

@@ -278,10 +278,18 @@ def unembed_matrix(params, cfg: TransformerConfig):
 # ---------------------------------------------------------------------------
 
 def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
-               dtype=jnp.bfloat16) -> dict:
+               dtype=jnp.bfloat16, shardings=None) -> dict:
+    """KV cache [L, B, S, H, hd] + per-row lengths. ``shardings`` (a matching
+    tree of `NamedSharding`s) creates each leaf directly on its mesh
+    placement — the sharded serving engine's slot cache is born distributed
+    instead of allocated replicated and moved (host-side callers only;
+    inside jit leave it None)."""
     shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            "len": jnp.zeros((batch,), jnp.int32)}
+    cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+             "len": jnp.zeros((batch,), jnp.int32)}
+    if shardings is not None:
+        cache = jax.tree.map(jax.device_put, cache, shardings)
+    return cache
 
 
 def prefill(params, tokens, cfg: TransformerConfig, exe: Execution = None,

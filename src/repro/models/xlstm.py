@@ -361,9 +361,13 @@ def unembed_matrix(params, cfg: XlstmConfig):
 
 
 def init_cache(cfg: XlstmConfig, batch: int, max_seq: int = 0,
-               dtype=jnp.float32):
+               dtype=jnp.float32, shardings=None):
+    """O(1) recurrent state (matrix memory + sLSTM scalars + lengths).
+    ``shardings`` (a matching tree of `NamedSharding`s) creates each leaf
+    directly on its mesh placement for the sharded serving engine
+    (host-side callers only; inside jit leave it None)."""
     n, h, dh, d = cfg.n_pairs, cfg.n_heads, cfg.hd_m, cfg.d_model
-    return {
+    cache = {
         "m_C": jnp.zeros((n, batch, h, dh, dh), dtype),
         "m_n": jnp.zeros((n, batch, h, dh), dtype),
         "m_m": jnp.full((n, batch, h), -1e30, dtype),
@@ -373,6 +377,9 @@ def init_cache(cfg: XlstmConfig, batch: int, max_seq: int = 0,
         "s_m": jnp.full((n, batch, d), -1e30, dtype),
         "len": jnp.zeros((batch,), jnp.int32),
     }
+    if shardings is not None:
+        cache = jax.tree.map(jax.device_put, cache, shardings)
+    return cache
 
 
 def prefill(params, tokens, cfg: XlstmConfig, exe: Execution = None,

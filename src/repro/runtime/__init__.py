@@ -1,11 +1,21 @@
 """Runtime subsystem: the continuous-batching serving engine (request
 admission, slot-based decode, per-request CM_* accounting) plus resilience
 (bounded retry of transient failures, straggler detection, heartbeats,
-elastic re-mesh tables)."""
+elastic re-mesh tables).
+
+Layering: `runtime/` sits between `models/` (whose prefill/decode_step it
+drives) and `launch/` (whose CLIs and mesh placement drive it); it never
+imports from `launch/` except the sharding-spec helpers. The re-exports
+below are the subsystem's public surface — `ServeEngine` /
+`ShardedServeEngine` for serving, `Request`/trace builders for load,
+`reconcile*` for the CM_* books, `resilient_step`/`StragglerMonitor` for
+the failure model (DESIGN.md §10-§11)."""
 from repro.runtime.batcher import (Batcher, Request, RequestRecord,
                                    SlotAllocator, poisson_trace, reconcile,
+                                   reconcile_cores, request_core_ledgers,
                                    request_ledgers, synchronized_trace)
-from repro.runtime.engine import ServeEngine, ServeReport, static_generate
+from repro.runtime.engine import (ServeEngine, ServeReport,
+                                  ShardedServeEngine, static_generate)
 from repro.runtime.fault_tolerance import (Heartbeat, StragglerMonitor,
                                            elastic_mesh_shapes, is_transient,
                                            resilient_step)

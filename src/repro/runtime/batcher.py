@@ -21,6 +21,15 @@ its own number of new tokens — and this module holds its host-side state:
     books against the `AimcProgram`'s static accounting.
   * trace builders   — `poisson_trace` (staggered synthetic load) and
     `synchronized_trace` (the legacy static-batch arrival pattern).
+  * per-core views   — `request_core_ledgers` / `aggregate_core_ledgers`
+    split each request's books across a `core.schedule.CoreSchedule`'s
+    virtual cores; `reconcile_cores` closes the shard-aggregated sum
+    against the schedule totals (sharded serving, DESIGN.md §11).
+
+Invariants: `reconcile` and `reconcile_cores` compare two INDEPENDENT
+countings (per-request records vs the device loop's observed vectors) and
+must close EXACTLY — approximate agreement is a bookkeeping bug. All
+admission orders are deterministic (stable w.r.t. rid) so traces replay.
 """
 
 from __future__ import annotations
@@ -176,6 +185,55 @@ def reconcile(program, records: dict[int, RequestRecord],
         ledger_sum = ledger_sum + cm
     static = program.mvm_counts().scaled(observed_vectors)
     return ledger_sum, static
+
+
+# ---------------------------------------------------------------------------
+# per-core ledger aggregation (against core.schedule.CoreSchedule)
+# ---------------------------------------------------------------------------
+
+def request_core_ledgers(schedule, records: dict[int, RequestRecord]) -> dict:
+    """rid -> {core -> CM_* counts} under a multi-core schedule.
+
+    Each request's useful vectors ride through EVERY core the schedule
+    places shards on, so its ledger splits per core by the schedule's
+    per-vector `CoreLedger`s (column-split cores each queue the full
+    vector; dequeue partitions exactly — core.schedule semantics)."""
+    per_core = {led.core: led.cm for led in schedule.ledgers()}
+    return {rid: {c: cm.scaled(rec.vectors) for c, cm in per_core.items()}
+            for rid, rec in records.items()}
+
+
+def aggregate_core_ledgers(schedule,
+                           records: dict[int, RequestRecord]) -> dict:
+    """core -> CM_* counts summed over all requests (the shard-aggregated
+    view of `request_ledgers`)."""
+    agg: dict[int, object] = {}
+    for cores in request_core_ledgers(schedule, records).values():
+        for c, cm in cores.items():
+            agg[c] = cm if c not in agg else agg[c] + cm
+    return agg
+
+
+def reconcile_cores(schedule, records: dict[int, RequestRecord],
+                    observed_vectors: int | None = None):
+    """(sum over cores of the aggregated per-core ledgers, the schedule's
+    static per-core totals scaled by ``observed_vectors``).
+
+    The multi-core twin of `reconcile`: the left side flows through
+    per-request, per-core bookkeeping; the right is
+    ``schedule.ledger_totals().scaled(observed)``. For layer-per-core
+    schedules (no column splits — `CoreSchedule.from_program`) the right
+    side ALSO equals ``program.mvm_counts().scaled(observed)``, so the
+    sharded engine's books close against the single-core program exactly."""
+    if observed_vectors is None:
+        observed_vectors = sum(rec.vectors for rec in records.values())
+    agg = aggregate_core_ledgers(schedule, records)
+    total = None
+    for cm in agg.values():
+        total = cm if total is None else total + cm
+    if total is None:
+        total = schedule.ledger_totals().scaled(0)
+    return total, schedule.ledger_totals().scaled(observed_vectors)
 
 
 # ---------------------------------------------------------------------------

@@ -43,6 +43,25 @@ exactly to ``program.mvm_counts().scaled(total_vectors)``.
 functions from this module's closure builders (`static_prefill_closure`,
 `static_decode_closure`), so the static shape cells and the engine serve
 through one implementation of the model-facing math.
+
+Public surface
+  * `ServeEngine`         — single-device continuous batching: `warmup()`,
+    `serve(requests) -> ServeReport`, `compile_counts()`, `ledgers()` /
+    `core_ledgers()` (CM_* books).
+  * `ShardedServeEngine`  — the same loop over a JAX mesh (DESIGN.md §11):
+    slots over `data`, crossbar bit lines over `model`; adds
+    `device_ledgers()`. Bit-equal to `ServeEngine` on the same trace.
+  * `ServeReport`         — everything one serve run produced.
+  * `static_generate`, `static_prefill_closure`, `static_decode_closure`
+    — the legacy static-batch oracle and the shared model-facing math.
+
+Invariants (pinned by tests/test_engine.py, tests/test_sharded_engine.py)
+  * shape stability: after `warmup()` every closure's executable cache
+    holds exactly one entry, for any trace, on any mesh;
+  * synchronized arrivals are bit-equal to `static_generate`; the sharded
+    engine is bit-equal to the single-device engine on ANY trace;
+  * slot reuse never leaks state (retired lanes are bit-frozen);
+  * per-request ledgers reconcile exactly with `program.mvm_counts()`.
 """
 
 from __future__ import annotations
@@ -218,7 +237,12 @@ class ServeEngine:
         # but "len" and any future leaf may differ — shape-diffing two
         # abstract init_cache calls finds the axis without model knowledge)
         self._axes = self._probe_batch_axes()
+        self._build_closures(max_retries)
 
+    def _build_closures(self, max_retries: int):
+        """Compile the three device closures. `ShardedServeEngine` overrides
+        this to pin every input/output to a mesh placement; the math
+        (`_prefill_fn`/`_insert_fn`/`_decode_fn`) is shared verbatim."""
         self._jit_prefill = jax.jit(self._prefill_fn)
         self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 2))
         # the decode cache is NOT donated: the step runs under
@@ -290,13 +314,20 @@ class ServeEngine:
         return self.model.init_cache(self.cfg, self.n_slots, self.max_seq,
                                      self.cache_dtype)
 
+    def _empty_tok_buf(self):
+        """The [n_slots, 1] next-token buffer. A hook so the sharded engine
+        can commit it to its mesh placement — an uncommitted buffer would
+        key the insert closure's jit cache differently from the committed
+        buffers later steps feed back, costing a recompile."""
+        return jnp.zeros((self.n_slots, 1), jnp.int32)
+
     def warmup(self):
         """Compile all three closures once, outside the serving clock."""
         tokens = jnp.zeros((1, self.prompt_pad), jnp.int32)
         vl = jnp.ones((1,), jnp.int32)
         tok1, cache1 = self._jit_prefill(self.params, tokens, vl)
         cache = self._empty_cache()
-        tok_buf = jnp.zeros((self.n_slots, 1), jnp.int32)
+        tok_buf = self._empty_tok_buf()
         cache, tok_buf = self._jit_insert(cache, cache1, tok_buf, tok1,
                                           jnp.int32(0))
         active = jnp.zeros((self.n_slots,), bool)
@@ -363,7 +394,7 @@ class ServeEngine:
         flagged0 = len(self.monitor.flagged)
 
         cache = self._empty_cache()
-        tok_buf = jnp.zeros((self.n_slots, 1), jnp.int32)
+        tok_buf = self._empty_tok_buf()
         active = [False] * self.n_slots
         now = 0.0
 
@@ -464,6 +495,127 @@ class ServeEngine:
         if self.program is None:
             raise ValueError("CM_* ledgers require an AimcProgram")
         return request_ledgers(self.program, report.records)
+
+    def core_ledgers(self, report: ServeReport) -> dict:
+        """core -> CM_* totals for this run's useful vectors (requires a
+        `CoreSchedule`). The per-core split of `ledgers`: summed over cores
+        the dequeue/initialize books close exactly against
+        ``program.mvm_counts()`` (`batcher.reconcile_cores`)."""
+        from repro.runtime.batcher import aggregate_core_ledgers
+        if self.schedule is None:
+            raise ValueError("per-core ledgers require a CoreSchedule")
+        return aggregate_core_ledgers(self.schedule, report.records)
+
+
+class ShardedServeEngine(ServeEngine):
+    """`ServeEngine` with its device state laid out over a real JAX mesh.
+
+    The multi-device join of the three prior subsystems (DESIGN.md §11):
+    the installed `AimcProgram`'s crossbar states column-shard their bit
+    lines over the mesh's ``model`` axis (`shardings.serve_engine_param_
+    specs` — the layout `core.schedule` proves exact), every digital leaf
+    replicates over ``data`` (weights-stationary serving), and the decode
+    slots — KV caches, recurrent state, the token buffer, the active mask —
+    shard over the data axes so each data-parallel device advances its own
+    lanes. All three closures are compiled ONCE with `NamedSharding`-pinned
+    inputs AND outputs, so the cache lives sharded on-device across the
+    whole serving session; the host-side loop (admission, slots,
+    accounting) is inherited unchanged.
+
+    Correctness bar: no reduction dimension is ever sharded — column splits
+    concatenate and batch rows are independent — so decode output is
+    BIT-EQUAL to the single-device `ServeEngine` on the same trace
+    (tests/test_sharded_engine.py, forced 2-device host-platform mesh).
+
+    When a `CoreSchedule` is attached, `schedule.mesh_placement` maps its
+    virtual cores onto the model-axis devices and `device_ledgers` reports
+    CM_* totals per mesh device; per-request ledgers aggregate across
+    shards exactly as the single-core path (`batcher.reconcile_cores`).
+
+    ``n_slots`` should divide the data-axis size (and crossbar Np the
+    model-axis size) for the sharding to take effect; non-dividing
+    dimensions fall back to replicated rather than failing.
+    """
+
+    def __init__(self, model, cfg, exe: Execution, params, *, mesh,
+                 model_axis: str = "model", **kw):
+        self.mesh = mesh
+        self.model_axis = model_axis
+        super().__init__(model, cfg, exe, params, **kw)
+
+    def _build_closures(self, max_retries: int):
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.mesh import dp_axes
+        from repro.launch.shardings import (fit_spec, serve_engine_param_specs,
+                                            slot_cache_specs, to_named)
+        mesh = self.mesh
+
+        def named_replicated(shape_tree):
+            return jax.tree.map(
+                lambda l: NamedSharding(mesh, P(*([None] * l.ndim))),
+                shape_tree)
+
+        params_shape = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
+        pspecs = serve_engine_param_specs(params_shape, mesh, self.model_axis)
+        self._param_sh = to_named(pspecs, mesh)
+        # place the (installed) tree once, outside the serving clock
+        self.params = jax.device_put(self.params, self._param_sh)
+
+        cache_shape = jax.eval_shape(lambda: self.model.init_cache(
+            self.cfg, self.n_slots, self.max_seq, self.cache_dtype))
+        self._cache_sh = to_named(
+            slot_cache_specs(cache_shape, self._axes, mesh), mesh)
+        dp = dp_axes(mesh)
+        tok_sh = NamedSharding(
+            mesh, fit_spec(P(dp, None), (self.n_slots, 1), mesh))
+        self._tok_sh = tok_sh
+        act_sh = NamedSharding(mesh, fit_spec(P(dp), (self.n_slots,), mesh))
+        self._act_sh = act_sh
+        repl = NamedSharding(mesh, P())   # fully replicated, any rank
+
+        tokens_s = jax.ShapeDtypeStruct((1, self.prompt_pad), jnp.int32)
+        vl_s = jax.ShapeDtypeStruct((1,), jnp.int32)
+        cache1_shape = jax.eval_shape(self._prefill_fn, params_shape,
+                                      tokens_s, vl_s)[1]
+        cache1_sh = named_replicated(cache1_shape)   # [1, ...]: nothing to split
+
+        self._jit_prefill = jax.jit(
+            self._prefill_fn,
+            in_shardings=(self._param_sh, repl, repl),
+            out_shardings=(repl, cache1_sh))
+        self._jit_insert = jax.jit(
+            self._insert_fn, donate_argnums=(0, 2),
+            in_shardings=(self._cache_sh, cache1_sh, tok_sh, repl, repl),
+            out_shardings=(self._cache_sh, tok_sh))
+        self._jit_decode = jax.jit(
+            self._decode_fn,
+            in_shardings=(self._param_sh, self._cache_sh, tok_sh, act_sh),
+            out_shardings=(tok_sh, self._cache_sh))
+        self._safe_decode = resilient_step(
+            self._jit_decode, max_retries=max_retries,
+            on_retry=lambda attempt, e: self._count_retry())
+
+    def _empty_cache(self):
+        # created ON the mesh placement (models' sharding-annotated init)
+        return self.model.init_cache(self.cfg, self.n_slots, self.max_seq,
+                                     self.cache_dtype,
+                                     shardings=self._cache_sh)
+
+    def _empty_tok_buf(self):
+        return jax.device_put(super()._empty_tok_buf(), self._tok_sh)
+
+    def device_ledgers(self, report: ServeReport) -> dict:
+        """model-axis device slot -> CM_* totals for this run, through the
+        schedule's core->device placement (`CoreSchedule.mesh_placement`)."""
+        if self.schedule is None:
+            raise ValueError("device ledgers require a CoreSchedule")
+        n_vec = report.useful_vectors
+        return {dev: led.cm.scaled(n_vec)
+                for dev, led in self.schedule.device_ledgers(
+                    self.mesh, self.model_axis).items()}
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,13 @@ This module implements the in-process half and the restart protocol:
     real fleet: report the slow host to the scheduler for cordoning).
   * `Heartbeat` — step-progress file other processes / the scheduler can
     watch; doubles as the liveness probe in the launch scripts.
+
+Public surface: `is_transient(exc)`, `resilient_step(fn, max_retries,
+on_retry)`, `StragglerMonitor`, `Heartbeat`, `elastic_mesh_shapes`.
+Invariant: classification is on the error MESSAGE, not the type —
+deterministic failures (RESOURCE_EXHAUSTED, INVALID_ARGUMENT, plain
+RuntimeErrors) raise immediately; only recognized infrastructure flakes
+retry (pinned by tests/test_engine.py).
 """
 
 from __future__ import annotations

@@ -1,0 +1,70 @@
+"""Docs link-rot gate: every file path the front-door docs mention must
+exist (``make docs-check``; the README acceptance bar of ISSUE 5).
+
+Scans README.md / DESIGN.md / EXPERIMENTS.md / ROADMAP.md for repo-path
+lookalikes — tokens with a known source extension or a path into a
+first-level repo directory — and fails listing any that do not resolve.
+Conservative on purpose: URLs, placeholders (``*``, ``<``, ``{``) and
+section references (``file.py::symbol`` keeps only the file part) are
+skipped, so a miss means a genuinely dead reference, not a style choice.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md")
+EXTS = (".py", ".md", ".sh", ".json", ".toml", ".txt")
+# only paths under these roots are checked (bare filenames too ambiguous)
+DIRS = ("src/", "tests/", "benchmarks/", "examples/", "tools/")
+TOKEN = re.compile(r"[A-Za-z0-9_./-]+")
+SKIP_SUBSTR = ("http://", "https://", "*", "<", "{")
+
+
+def candidates(text: str):
+    for tok in TOKEN.findall(text):
+        tok = tok.split("::")[0].rstrip(".")          # file.py::symbol, "x."
+        if any(s in tok for s in SKIP_SUBSTR):
+            continue
+        if tok.startswith(".") or tok.endswith(("_", "/")):
+            continue                                  # glob/prefix fragments
+        if tok.startswith(DIRS) or tok.endswith(EXTS):
+            yield tok
+
+
+def main() -> int:
+    # bare filenames (the architecture diagram names modules without their
+    # directory) resolve against every basename in the tree; qualified
+    # paths must resolve exactly
+    basenames = {p.name for p in ROOT.rglob("*")
+                 if p.is_file() and ".git" not in p.parts}
+    missing = []
+    for doc in DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            missing.append((doc, "(the doc itself is missing)"))
+            continue
+        for tok in set(candidates(path.read_text())):
+            if "/" in tok:
+                # repo-rooted, or package-relative (core/aimc.py — the
+                # docs' convention for modules under src/repro/)
+                ok = ((ROOT / tok).exists()
+                      or (ROOT / "src" / "repro" / tok).exists())
+            else:
+                ok = tok in basenames
+            if not ok:
+                missing.append((doc, tok))
+    if missing:
+        print("dead file references in docs:")
+        for doc, tok in sorted(missing):
+            print(f"  {doc}: {tok}")
+        return 1
+    print(f"docs-check OK: all file references in {', '.join(DOCS)} resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
