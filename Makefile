@@ -2,8 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast test-all bench bench-pipeline bench-json \
-        bench-serving serve-aimc serve-aimc-reprogram serve-aimc-multicore \
-        serve-smoke serve-sharded docs-check
+        bench-serving bench-server serve-aimc serve-aimc-reprogram \
+        serve-aimc-multicore serve-smoke serve-sharded serve-multi docs-check
 
 # Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
@@ -46,6 +46,12 @@ bench-serving:
 	$(PY) -m benchmarks.bench_serving --mesh data:2,model:1 \
 	    --json BENCH_serving.json
 
+# Multi-tenant server benchmark alone (two models on one crossbar pool:
+# per-tenant tok/s + TTFT/TPOT percentiles, quota fairness under a
+# saturated contended window, exact per-tenant ledger reconciliation).
+bench-server:
+	$(PY) -m benchmarks.bench_server --json BENCH_server.json
+
 # Docs link-rot gate: every file path README/DESIGN/EXPERIMENTS/ROADMAP
 # mention must exist (tools/docs_check.py; part of ci.sh --fast).
 docs-check:
@@ -78,3 +84,13 @@ serve-sharded:
 	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
 	    --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
 	    --cores 2 --mesh data:2,model:1
+
+# Multi-tenant serving smoke: two models resident in one process (granite
+# co-programmed on the shared TilePool, xlstm digital), interleaved
+# Poisson traffic with weighted tenant quotas (DESIGN.md §12); exits
+# nonzero on ledger-reconciliation failure or a starved tenant.
+serve-multi:
+	$(PY) -m repro.launch.serve --smoke \
+	    --models granite-8b:aimc,xlstm-350m:digital \
+	    --tenants premium:granite-8b:2,standard:granite-8b:1:sjf,batch:xlstm-350m \
+	    --requests 8 --prompt-len 8 --gen 4 --slots 2 --trace poisson:200

@@ -1,0 +1,223 @@
+"""Multi-tenant server benchmark: co-resident models, one crossbar pool.
+
+The deployment story past a single engine (DESIGN.md §12): a granite-8b
+programmed on the shared AIMC tile pool and an xlstm-350m running digital
+are kept resident in ONE process, and a mixed-tenant request stream is
+routed by tenant over them (`runtime.server.ModelServer`). Weights stay
+stationary for the whole run — CM_INITIALIZE happened once per model at
+build, the serving region is queue/process/dequeue only.
+
+Measured:
+  * mixed Poisson trace over three tenants (premium/standard on granite,
+    weights 2:1; batch on xlstm): per-tenant tok/s, p50/p99 TTFT and
+    per-output-token latency, and that EVERY tenant with requests makes
+    progress;
+  * a saturated synchronized burst on the shared granite slots: each
+    tenant's decode-slot share must track its weight (Jain's index over
+    weight-normalized shares, and the min share/entitlement ratio — the
+    no-starvation bar);
+  * per-tenant CM_* ledger reconciliation: summed per-tenant books close
+    EXACTLY against each programmed model's ``program.mvm_counts()``;
+  * shared-pool crossbar-capacity utilization and per-engine compile
+    counts (shape stability across interleaved multi-model serving).
+
+``--json BENCH_server.json`` is the machine-readable artifact
+(``benchmarks.run --json`` includes this module; ``make bench-json``).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Check, table
+from repro.configs import get_arch
+from repro.runtime.batcher import Request
+from repro.runtime.server import ModelSpec, build_server
+from repro.runtime.tenancy import (TenantPolicy, TenantRequest, jains_index,
+                                   mixed_poisson_trace)
+
+N_REQ = 18
+RATE = 150.0                  # req/s: arrivals overlap decode at smoke scale
+PROMPT = (4, 10)
+MAX_NEW = (2, 10)
+PAD = 10
+N_SLOTS = 3                   # 3 slots + weights 2:1 -> steady state (2, 1)
+
+SPECS = [ModelSpec("granite_8b", "granite-8b", "aimc"),
+         ModelSpec("xlstm_350m", "xlstm-350m", "digital")]
+TENANTS = [TenantPolicy("premium", "granite_8b", weight=2.0,
+                        slo_ttft_s=0.5, slo_tpot_s=0.25),
+           TenantPolicy("standard", "granite_8b", weight=1.0,
+                        admission="sjf"),
+           TenantPolicy("batch", "xlstm_350m", weight=1.0)]
+
+
+def _build(verbose: bool):
+    t0 = time.time()
+    server = build_server(SPECS, TENANTS, smoke=True, n_slots=N_SLOTS,
+                          prompt_pad=PAD, max_seq=PAD + MAX_NEW[1] + 2)
+    server.warmup()
+    t_build = time.time() - t0
+    if verbose:
+        print(f"built + co-programmed + warmed {len(SPECS)} models in "
+              f"{t_build:.1f}s; {server.pool.summary()}")
+    return server, t_build
+
+
+def _mixed_case(server, verbose: bool) -> dict:
+    """Interleaved Poisson traffic across all three tenants."""
+    vocab_of = {s.name: get_arch(s.arch).smoke_cfg.vocab for s in SPECS}
+    trace = mixed_poisson_trace(TENANTS, N_REQ, RATE, vocab_of=vocab_of,
+                                seed=7, prompt_len=PROMPT, max_new=MAX_NEW)
+    report = server.serve(trace)
+    stats = report.tenant_stats()
+    recon = server.reconcile(report)
+    case = {
+        "trace": f"poisson:{RATE:.0f} n={N_REQ} prompt={PROMPT} "
+                 f"max_new={MAX_NEW}",
+        "makespan_s": report.makespan_s,
+        "tenants": {name: {
+            "model": st.model, "n_requests": st.n_requests,
+            "generated_tokens": st.generated_tokens, "tok_s": st.tok_s,
+            "p50_ttft_s": st.p50_ttft_s, "p99_ttft_s": st.p99_ttft_s,
+            "p50_tpot_s": st.p50_tpot_s, "p99_tpot_s": st.p99_tpot_s,
+            "slo_ttft_ok": st.slo_ttft_ok, "slo_tpot_ok": st.slo_tpot_ok,
+        } for name, st in stats.items()},
+        "all_tenants_progress": all(
+            st.generated_tokens > 0 for st in stats.values()
+            if st.n_requests > 0),
+        "ledgers_reconcile": {m: ok for m, ok in recon.items()},
+        "compile_counts": server.compile_counts(),
+        "stable_shapes": all(
+            c == {"prefill": 1, "insert": 1, "decode": 1}
+            for c in server.compile_counts().values()),
+        "pool_utilization": server.pool.utilization,
+    }
+    if verbose:
+        rows = [[n, d["model"], d["n_requests"], d["generated_tokens"],
+                 f"{d['tok_s']:.1f}", f"{d['p50_ttft_s'] * 1e3:.0f}",
+                 f"{d['p99_ttft_s'] * 1e3:.0f}"]
+                for n, d in sorted(case["tenants"].items())]
+        print(table(f"mixed trace — {case['trace']}",
+                    ["tenant", "model", "reqs", "toks", "tok/s",
+                     "p50 ttft ms", "p99 ttft ms"], rows))
+        print(f"  all tenants progress: {case['all_tenants_progress']}  "
+              f"ledgers reconcile: {case['ledgers_reconcile']}  "
+              f"shape-stable: {case['stable_shapes']}  "
+              f"pool util: {case['pool_utilization'] * 100:.0f}%")
+    return case
+
+
+def _saturation_case(server, verbose: bool) -> dict:
+    """Synchronized burst on the shared granite slots: premium (weight 2)
+    and standard (weight 1) each submit more work than the slots hold, so
+    the quota scheduler alone decides the decode-slot split. The run is CUT
+    by a step budget while BOTH tenants still have backlog — over a fully
+    completed equal backlog the whole-run shares are equal by construction;
+    the quota only shows while there is contention."""
+    per_tenant, max_new, p_len, step_budget = 6, 12, 6, 30
+    vocab = get_arch("granite-8b").smoke_cfg.vocab
+    import random
+    rng = random.Random(5)
+    trace = []
+    for i in range(per_tenant * 2):
+        trace.append(TenantRequest(
+            tenant="premium" if i % 2 == 0 else "standard",
+            request=Request(
+                rid=1000 + i,
+                prompt=tuple(rng.randint(1, vocab - 1)
+                             for _ in range(p_len)),
+                max_new=max_new, arrival=0.0)))
+    report = server.serve(trace, max_steps=step_budget)
+    shares = {}
+    for name in ("premium", "standard"):
+        recs = report.tenant_records(name)
+        shares[name] = sum(r.decode_vectors for r in recs.values())
+    total = sum(shares.values())
+    wsum = sum(p.weight for p in TENANTS if p.model == "granite_8b")
+    entitle = {p.name: p.weight / wsum
+               for p in TENANTS if p.model == "granite_8b"}
+    ratio = {n: (shares[n] / total) / entitle[n] for n in shares}
+    fairness = jains_index([shares[n] / entitle[n] for n in shares])
+    case = {
+        "trace": f"synchronized burst, {per_tenant} reqs/tenant x "
+                 f"max_new={max_new} on {N_SLOTS} granite slots, cut at "
+                 f"{step_budget} decode steps (contended window)",
+        "decode_slot_vectors": shares,
+        "entitlement": entitle,
+        "share_over_entitlement": ratio,
+        "min_share_ratio": min(ratio.values()),
+        "jain_weighted": fairness,
+        "ledgers_reconcile": server.reconcile(report),
+    }
+    if verbose:
+        print(table(case["trace"],
+                    ["tenant", "slot-vectors", "share", "entitled",
+                     "share/entitled"],
+                    [[n, shares[n], f"{shares[n] / total:.2f}",
+                      f"{entitle[n]:.2f}", f"{ratio[n]:.2f}"]
+                     for n in sorted(shares)]))
+        print(f"  Jain (weight-normalized): {fairness:.3f}  "
+              f"min share/entitlement: {case['min_share_ratio']:.2f}  "
+              f"ledgers: {case['ledgers_reconcile']}")
+    return case
+
+
+def run(verbose: bool = True) -> dict:
+    server, t_build = _build(verbose)
+    return {
+        "models": [{"name": s.name, "arch": s.arch, "exec": s.exec_mode}
+                   for s in SPECS],
+        "tenant_policies": [{"name": p.name, "model": p.model,
+                             "weight": p.weight, "admission": p.admission}
+                            for p in TENANTS],
+        "n_slots": N_SLOTS,
+        "build_warmup_s": t_build,
+        "pool": server.pool.summary(),
+        "mixed": _mixed_case(server, verbose),
+        "saturation": _saturation_case(server, verbose),
+    }
+
+
+def checks(results=None) -> list[Check]:
+    results = results or run(verbose=False)
+    mixed, sat = results["mixed"], results["saturation"]
+    recon_ok = (all(ok is not False
+                    for ok in mixed["ledgers_reconcile"].values())
+                and all(ok is not False
+                        for ok in sat["ledgers_reconcile"].values()))
+    return [
+        Check("every tenant with requests makes progress (no starvation)",
+              1.0 if mixed["all_tenants_progress"] else 0.0, 1.0, rtol=0.01),
+        Check("per-tenant CM_* ledgers reconcile against each program",
+              1.0 if recon_ok else 0.0, 1.0, rtol=0.01),
+        Check("saturated decode-slot shares track tenant weights (Jain)",
+              sat["jain_weighted"], 1.0, rtol=0.10),
+        Check("min tenant share/entitlement under saturation",
+              sat["min_share_ratio"], 1.0, rtol=0.30),
+        Check("engine shapes jit-stable across interleaved models",
+              1.0 if mixed["stable_shapes"] else 0.0, 1.0, rtol=0.01),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results + checks as JSON")
+    args = ap.parse_args()
+    res = run()
+    cs = checks(res)
+    for c in cs:
+        print(c.row())
+    if args.json:
+        payload = {"results": res,
+                   "checks": [{"name": c.name, "measured": c.measured,
+                               "target": c.target, "ok": c.ok} for c in cs]}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.json}")
+    sys.exit(0 if all(c.ok for c in cs) else 1)

@@ -12,6 +12,8 @@ One module per paper table/figure (DESIGN.md §7):
   bench_kernels   kernels/          (Pallas v2 vs oracle + HBM/VMEM ledgers)
   bench_serving   runtime/engine    (continuous batching vs static batch:
                                      tok/s + latency percentiles on traces)
+  bench_server    runtime/server    (multi-tenant multi-model serving: one
+                                     crossbar pool, per-tenant SLOs/quotas)
   bench_roofline  §Roofline         (dry-run table; run dryrun first)
 
 ``--json PATH`` writes machine-readable results — per-case wall-clock,
@@ -32,7 +34,7 @@ import time
 
 from benchmarks import (bench_accuracy, bench_cnn, bench_coupling,
                         bench_kernels, bench_lstm, bench_mlp, bench_pipeline,
-                        bench_roofline, bench_serving)
+                        bench_roofline, bench_server, bench_serving)
 
 MODULES = [
     ("mlp", "MLP (paper Fig. 7/8)", bench_mlp),
@@ -45,6 +47,8 @@ MODULES = [
     ("kernels", "Pallas kernels", bench_kernels),
     ("serving", "Continuous-batching serving engine (static vs engine)",
      bench_serving),
+    ("server", "Multi-tenant model server (tenant quotas over one pool)",
+     bench_server),
 ]
 
 

@@ -34,6 +34,13 @@ if [[ "${1:-}" == "--fast" ]]; then
         python -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
         --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
         --cores 2 --mesh data:2,model:1
+    echo "== server smoke: two models co-programmed, mixed-tenant trace =="
+    # exits nonzero if per-tenant ledgers fail to reconcile or any tenant
+    # with requests is starved of all tokens (runtime.server front door)
+    python -m repro.launch.serve --smoke \
+        --models granite-8b:aimc,xlstm-350m:digital \
+        --tenants premium:granite-8b:2,standard:granite-8b:1:sjf,batch:xlstm-350m \
+        --requests 8 --prompt-len 8 --gen 4 --slots 2 --trace poisson:200
     echo "== perf-smoke: bench_kernels (interpret mode) =="
     exec python -m benchmarks.bench_kernels --json BENCH_kernels.json
 fi

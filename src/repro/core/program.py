@@ -28,7 +28,9 @@ keeps the on-the-fly STE path (noise-aware training).
 
 Public surface: `MappingPlan`, `program_model`, `AimcProgram`
 (`install`, `install_shape`, `initialize_counts`, `mvm_counts`, placement
-stats), `ProgramBuilder`, `CapacityError`.
+stats), `ProgramBuilder`, `TilePool` (one shared crossbar budget several
+co-programmed models draw from — the multi-tenant server's capacity
+authority), `CapacityError`.
 
 Invariants (pinned by tests/test_program.py): programming + apply
 reproduces the seed's `aimc_linear_ste` bit-for-bit under the same keys;
@@ -55,6 +57,79 @@ from repro.core.tile import TileAllocator, TileMap
 
 class CapacityError(RuntimeError):
     """A MappingPlan asked for more crossbar tiles than a context provides."""
+
+
+# ---------------------------------------------------------------------------
+# TilePool — one shared crossbar budget, many co-programmed models
+# ---------------------------------------------------------------------------
+
+class TilePool:
+    """A shared multi-context crossbar budget several programs draw from.
+
+    One accelerator pool, many co-resident models (the multi-tenant server,
+    DESIGN.md §12): every ``program_model(..., pool=..., label=...)`` call
+    packs its matrices into THE SAME per-context `TileAllocator`s, so
+    capacity is checked against the sum of everything programmed so far —
+    two models that fit individually but not together raise `CapacityError`
+    instead of silently overlapping crossbar tiles. Matrix ids are
+    label-prefixed (``label/path``) so the shared placement table stays
+    unambiguous; re-using a label for a second program raises.
+
+    A failed co-program leaves its partial placements charged to the pool
+    (shelf packing has no rollback); treat `CapacityError` during server
+    bring-up as fatal and rebuild the pool.
+    """
+
+    def __init__(self, cfg: AimcConfig, n_contexts: int = 1,
+                 tiles_per_context: int | None = None):
+        if n_contexts < 1:
+            raise ValueError("n_contexts must be >= 1")
+        self.cfg = cfg
+        self.tiles_per_context = tiles_per_context
+        self.allocators = [TileAllocator(cfg.tile_rows, cfg.tile_cols)
+                           for _ in range(n_contexts)]
+        self.labels: list[str] = []            # programs resident, in order
+
+    @property
+    def n_contexts(self) -> int:
+        return len(self.allocators)
+
+    @property
+    def n_tiles(self) -> int:
+        """Physical tiles opened across all contexts so far."""
+        return sum(a.n_tiles for a in self.allocators)
+
+    @property
+    def capacity_tiles(self) -> int | None:
+        return (None if self.tiles_per_context is None
+                else self.tiles_per_context * self.n_contexts)
+
+    @property
+    def utilization(self) -> float:
+        """Used crossbar cells / capacity cells (opened tiles if uncapped)."""
+        used = sum(p.rows * p.cols for a in self.allocators
+                   for p in a.placements)
+        tiles = self.capacity_tiles or self.n_tiles
+        total = tiles * self.cfg.tile_rows * self.cfg.tile_cols
+        return used / total if total else 0.0
+
+    def placements(self):
+        """Every placement across the pool (for overlap/ownership audits)."""
+        return tuple(p for a in self.allocators for p in a.placements)
+
+    def claim(self, label: str):
+        if label in self.labels:
+            raise ValueError(f"program label {label!r} already resident in "
+                             f"the pool (labels: {self.labels})")
+        self.labels.append(label)
+
+    def summary(self) -> str:
+        cap = (f"/{self.capacity_tiles}" if self.capacity_tiles is not None
+               else "")
+        return (f"TilePool: {len(self.labels)} program(s) "
+                f"({', '.join(self.labels) or 'none'}) on {self.n_tiles}"
+                f"{cap} tiles across {self.n_contexts} context(s), "
+                f"utilization {self.utilization:.0%}")
 
 
 # ---------------------------------------------------------------------------
@@ -130,18 +205,44 @@ class ProgramBuilder:
     Runs at setup time (plain Python over static shapes) — never inside jit.
     Placement is least-loaded-context first; `tiles_per_context` turns the
     allocator into a hard capacity check.
+
+    With ``pool`` (a `TilePool`), the builder packs into the pool's SHARED
+    allocators instead of fresh ones — capacity is then checked against
+    everything already resident (co-programming, DESIGN.md §12). Allocator
+    matrix ids are prefixed ``label/`` so the shared placement table keeps
+    per-program ownership; the built program's `tile_maps` carry only this
+    program's placements (pool-level stats live on the pool).
     """
 
     def __init__(self, cfg: AimcConfig, n_contexts: int = 1,
-                 tiles_per_context: int | None = None):
+                 tiles_per_context: int | None = None,
+                 pool: TilePool | None = None, label: str = ""):
         self.cfg = cfg
-        self.tiles_per_context = tiles_per_context
-        self._allocs = [TileAllocator(cfg.tile_rows, cfg.tile_cols)
-                        for _ in range(n_contexts)]
+        self.pool = pool
+        self.label = label
+        if pool is not None:
+            if (pool.cfg.tile_rows, pool.cfg.tile_cols) != (cfg.tile_rows,
+                                                            cfg.tile_cols):
+                raise ValueError(
+                    f"pool tiles {pool.cfg.tile_rows}x{pool.cfg.tile_cols} "
+                    f"!= program tiles {cfg.tile_rows}x{cfg.tile_cols}")
+            pool.claim(label or f"program{len(pool.labels)}")
+            self.label = self.label or pool.labels[-1]
+            self.tiles_per_context = pool.tiles_per_context
+            self._allocs = pool.allocators
+        else:
+            self.tiles_per_context = tiles_per_context
+            self._allocs = [TileAllocator(cfg.tile_rows, cfg.tile_cols)
+                            for _ in range(n_contexts)]
         self._entries: dict[str, AimcLinearState] = {}
         self._context_of: dict[str, int] = {}
 
     # -- placement ----------------------------------------------------------
+    def _matrix_id(self, name: str) -> str:
+        """The allocator-facing id: label-prefixed when pooled, so two
+        co-programmed models never collide in the shared placement table."""
+        return f"{self.label}/{name}" if self.pool is not None else name
+
     def _pick_context(self) -> int:
         return min(range(len(self._allocs)),
                    key=lambda i: self._allocs[i].n_tiles)
@@ -155,16 +256,23 @@ class ProgramBuilder:
         place(alloc)
         if (self.tiles_per_context is not None
                 and alloc.n_tiles > self.tiles_per_context):
+            resident = (f" (co-resident programs: "
+                        f"{', '.join(self.pool.labels)})"
+                        if self.pool is not None and self.pool.labels
+                        else "")
             raise CapacityError(
                 f"mapping {desc} overflows context {ctx}: "
-                f"{alloc.n_tiles} tiles > cap {self.tiles_per_context}")
+                f"{alloc.n_tiles} tiles > cap {self.tiles_per_context}"
+                + resident)
         self._context_of[name] = ctx
         return ctx
 
     def _allocate(self, name: str, k: int, n: int, instances: int) -> int:
+        mid = self._matrix_id(name)
+
         def place(alloc):
             for i in range(instances):
-                inst = name if instances == 1 else f"{name}[{i}]"
+                inst = mid if instances == 1 else f"{mid}[{i}]"
                 alloc.map_matrix(inst, k, n)
 
         return self._place(name, f"{name!r} ({instances}x[{k}x{n}])", place)
@@ -195,10 +303,11 @@ class ProgramBuilder:
         rows = gates[0].shape[0]
         if any(g.shape[0] != rows for g in gates):
             raise ValueError("gate matrices must share in_features")
+        mid = self._matrix_id(name)
         self._place(
             name, f"gates {name!r} ({len(gates)}x[{rows}x{gates[0].shape[1]}])",
             lambda alloc: alloc.map_side_by_side(
-                [f"{name}.g{i}" for i in range(len(gates))],
+                [f"{mid}.g{i}" for i in range(len(gates))],
                 rows, gates[0].shape[1]))
         w = jnp.concatenate([jnp.asarray(g) for g in gates], axis=1)
         state = program_linear(w, self.cfg, key)
@@ -206,14 +315,33 @@ class ProgramBuilder:
         return state
 
     # -- finalize -----------------------------------------------------------
+    def _own_tile_maps(self) -> tuple[TileMap, ...]:
+        """Per-context tile maps restricted to THIS program's placements.
+
+        Pooled builders share allocators with co-resident programs, so a
+        raw ``finalize()`` would claim foreign placements; filter by the
+        label prefix and count only the tiles this program touches."""
+        prefix = f"{self.label}/"
+        maps = []
+        for alloc in self._allocs:
+            own = tuple(p for p in alloc.placements
+                        if p.matrix_id.startswith(prefix))
+            maps.append(TileMap(
+                tile_rows=self.cfg.tile_rows, tile_cols=self.cfg.tile_cols,
+                placements=own,
+                n_tiles=len({p.tile_id for p in own})))
+        return tuple(maps)
+
     def build(self) -> "AimcProgram":
         names = tuple(sorted(self._entries))
+        tile_maps = (self._own_tile_maps() if self.pool is not None
+                     else tuple(a.finalize() for a in self._allocs))
         return AimcProgram(
             states=tuple(self._entries[n] for n in names),
             names=names,
             cfg=self.cfg,
             contexts=tuple(self._context_of[n] for n in names),
-            tile_maps=tuple(a.finalize() for a in self._allocs),
+            tile_maps=tile_maps,
         )
 
 
@@ -339,7 +467,9 @@ class AimcProgram:
 # ---------------------------------------------------------------------------
 
 def program_model(params, plan: MappingPlan | None, cfg: AimcConfig,
-                  key: jax.Array | None = None) -> AimcProgram:
+                  key: jax.Array | None = None, *,
+                  pool: TilePool | None = None,
+                  label: str = "") -> AimcProgram:
     """CM_INITIALIZE an entire model: program every plan-selected weight.
 
     ``params`` is any parameter pytree (raw float weights, or the int8
@@ -347,10 +477,16 @@ def program_model(params, plan: MappingPlan | None, cfg: AimcConfig,
     programming). Leading stack dims (scanned layers, vmapped experts) are
     programmed per instance with independent noise draws. Returns the
     `AimcProgram`; pair with ``program.install(params)`` for execution.
+
+    ``pool`` co-programs this model into a shared `TilePool` under
+    ``label`` — the pool's contexts and capacity cap supersede the plan's
+    ``n_contexts``/``tiles_per_context``, and the capacity check covers
+    every program already resident (multi-tenant serving, DESIGN.md §12).
     """
     plan = plan or MappingPlan()
     builder = ProgramBuilder(cfg, n_contexts=plan.n_contexts,
-                             tiles_per_context=plan.tiles_per_context)
+                             tiles_per_context=plan.tiles_per_context,
+                             pool=pool, label=label)
     flat, _ = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=_is_quantized_leaf)
     idx = 0

@@ -138,6 +138,11 @@ class TileAllocator:
         """Physical tiles opened so far (the capacity the packer consumed)."""
         return len(self._tiles)
 
+    @property
+    def placements(self) -> tuple[Placement, ...]:
+        """Everything placed so far (finalize() is a snapshot of the same)."""
+        return tuple(self._placements)
+
     def map_matrix(self, matrix_id: str, rows: int, cols: int) -> None:
         """AIMClib ``mapMatrix``: split to tile-sized blocks and pack them."""
         for (r0, c0, r, c) in split_matrix(rows, cols, self.tile_rows, self.tile_cols):
@@ -164,6 +169,28 @@ class TileAllocator:
             placements=tuple(self._placements),
             n_tiles=len(self._tiles),
         )
+
+
+def overlapping_placements(
+        placements: Sequence[Placement]) -> list[tuple[Placement, Placement]]:
+    """Pairs of placements claiming intersecting cell ranges of one physical
+    tile — a packer-invariant violation. Must ALWAYS be empty; checked by
+    the multi-program pool tests so co-programmed models can never silently
+    share crossbar devices (each cell pair holds exactly one weight)."""
+    by_tile: dict[int, list[Placement]] = {}
+    for p in placements:
+        by_tile.setdefault(p.tile_id, []).append(p)
+    bad = []
+    for group in by_tile.values():
+        for i, a in enumerate(group):
+            for b in group[i + 1:]:
+                row_hit = (a.row_off < b.row_off + b.rows
+                           and b.row_off < a.row_off + a.rows)
+                col_hit = (a.col_off < b.col_off + b.cols
+                           and b.col_off < a.col_off + a.cols)
+                if row_hit and col_hit:
+                    bad.append((a, b))
+    return bad
 
 
 def plan_linear(matrix_id: str, in_features: int, out_features: int,

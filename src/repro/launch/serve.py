@@ -37,6 +37,24 @@ the decode output is bit-equal to the single-device engine. Combined with
 device (`CoreSchedule.mesh_placement`). The legacy ``DxM`` spelling keeps
 the single-device engine. CPU hosts must force the device count BEFORE
 launch: ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+``--models NAME:EXEC[,NAME:EXEC...]`` switches to the MULTI-TENANT server
+(`runtime.server.ModelServer`, DESIGN.md §12): every listed model is kept
+resident in one process — the AIMC ones co-programmed against a single
+shared crossbar budget (`core.program.TilePool`; cap it with
+``--tile-budget``) — and an interleaved Poisson trace is routed by tenant:
+
+    PYTHONPATH=src python -m repro.launch.serve --smoke \
+        --models granite-8b:aimc,xlstm-350m:digital \
+        --tenants premium:granite-8b:2,standard:granite-8b:1:sjf,\
+batch:xlstm-350m --requests 16 --trace poisson:200
+
+``--tenants NAME:MODEL[:WEIGHT[:ADMISSION]]`` declares each tenant's
+routing target, fair-share weight for its model's decode slots, and
+admission order (default: one fifo tenant per model, weight 1). The run
+prints per-tenant tok/s, p50/p99 TTFT/TPOT, Jain's quota-fairness index
+and the pool utilization, and exits nonzero if any per-tenant CM_* ledger
+fails to reconcile or a tenant with requests was starved of all tokens.
 """
 
 from __future__ import annotations
@@ -93,7 +111,34 @@ def parse_args(argv=None):
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--models", default="",
+                    help="multi-tenant server: NAME:EXEC[,NAME:EXEC...] "
+                         "(EXEC: aimc|digital) keeps every listed model "
+                         "resident — AIMC ones co-programmed on ONE shared "
+                         "TilePool — and routes a mixed trace by tenant "
+                         "(supersedes --arch/--exec)")
+    ap.add_argument("--tenants", default="",
+                    help="with --models: NAME:MODEL[:WEIGHT[:ADMISSION]]"
+                         "[,...] — routing target, fair-share slot weight "
+                         "and fifo/sjf admission per tenant (default: one "
+                         "fifo tenant per model, weight 1)")
+    ap.add_argument("--tile-budget", type=int, default=0,
+                    help="with --models: cap the shared pool at this many "
+                         "crossbar tiles per context (0: uncapped); "
+                         "co-programmed models exceeding it together fail "
+                         "with CapacityError at program time")
     args = ap.parse_args(argv)
+    if args.models:
+        for on, name in [(args.static, "--static"), (args.int8, "--int8"),
+                         (args.reprogram, "--reprogram"),
+                         (args.cores > 1, "--cores"),
+                         (args.pipeline, "--pipeline"),
+                         (args.arrivals, "--arrivals")]:
+            if on:
+                ap.error(f"{name} is a single-model option; --models serves "
+                         "through the multi-tenant ModelServer")
+    elif args.tenants or args.tile_budget:
+        ap.error("--tenants/--tile-budget require --models")
     if ((args.cores > 1 or args.pipeline)
             and (args.exec_mode != "aimc" or args.reprogram)):
         ap.error("--cores/--pipeline require the programmed AIMC path "
@@ -194,8 +239,127 @@ def build_requests(args, vocab: int, min_prompt: int = 1):
     return base
 
 
+def parse_models(arg: str):
+    """``NAME:EXEC[,NAME:EXEC...]`` -> list of `runtime.server.ModelSpec`.
+    NAME is an arch-registry id (aliases fine) and doubles as the model id
+    requests route by."""
+    from repro.runtime.server import ModelSpec
+    specs = []
+    for part in arg.split(","):
+        name, _, mode = part.partition(":")
+        if not name:
+            raise SystemExit(f"--models {arg!r}: empty model name")
+        try:
+            specs.append(ModelSpec(name=name, arch=name,
+                                   exec_mode=mode or "digital"))
+        except ValueError as e:
+            raise SystemExit(f"--models {arg!r}: {e}") from None
+    return specs
+
+
+def parse_tenants(arg: str, specs):
+    """``NAME:MODEL[:WEIGHT[:ADMISSION]][,...]`` -> `TenantPolicy` list."""
+    from repro.runtime.tenancy import TenantPolicy
+    known = {s.name for s in specs}
+    out = []
+    for part in arg.split(","):
+        fields = part.split(":")
+        if len(fields) < 2 or len(fields) > 4:
+            raise SystemExit(f"--tenants {arg!r}: expected "
+                             "NAME:MODEL[:WEIGHT[:ADMISSION]], got {part!r}")
+        name, model = fields[0], fields[1]
+        if model not in known:
+            raise SystemExit(f"--tenants {arg!r}: tenant {name!r} routes to "
+                             f"{model!r}, not in --models ({sorted(known)})")
+        try:
+            out.append(TenantPolicy(
+                name=name, model=model,
+                weight=float(fields[2]) if len(fields) > 2 else 1.0,
+                admission=fields[3] if len(fields) > 3 else "fifo"))
+        except ValueError as e:
+            raise SystemExit(f"--tenants {arg!r}: {e}") from None
+    return out
+
+
+def _run_server(args):
+    """The --models path: multi-tenant multi-model serving over one pool."""
+    from repro.compat import use_mesh
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime.server import build_server
+    from repro.runtime.tenancy import mixed_poisson_trace
+
+    specs = parse_models(args.models)
+    tenants = parse_tenants(args.tenants, specs) if args.tenants else None
+    shape, axes, sharded = parse_mesh(args.mesh)
+    mesh = make_mesh(shape, axes) if sharded else None
+
+    rate = 100.0
+    if args.trace:
+        kind, _, param = args.trace.partition(":")
+        if kind != "poisson":
+            raise SystemExit(f"unknown --trace kind {kind!r} "
+                             "(supported: poisson:RATE)")
+        rate = float(param or "100")
+
+    p, g = args.prompt_len, args.gen
+    n_slots = args.slots or 4
+    with use_mesh(mesh) if mesh is not None else _nullcontext():
+        t0 = time.time()
+        server = build_server(
+            specs, tenants, smoke=args.smoke, n_slots=n_slots,
+            prompt_pad=p, max_seq=p + g, seed=args.seed,
+            tiles_per_context=args.tile_budget or None,
+            eos_id=None if args.eos < 0 else args.eos, mesh=mesh)
+        server.warmup()
+        print(f"[serve] {len(specs)} model(s) resident, "
+              f"{len(server.policies)} tenant(s), {n_slots} slots each; "
+              f"built+warmed in {time.time() - t0:.2f}s")
+        if server.pool is not None:
+            print(f"[serve] {server.pool.summary()} "
+                  f"(crossbar-capacity utilization "
+                  f"{server.pool.utilization * 100:.0f}%)")
+
+        def vocab(s):
+            a = get_arch(s.arch)
+            return (a.smoke_cfg if args.smoke else a.model_cfg).vocab
+
+        trace = mixed_poisson_trace(
+            list(server.policies.values()), args.requests, rate,
+            vocab_of={s.name: vocab(s) for s in specs}, seed=args.seed,
+            prompt_len=(max(1, p // 2), p), max_new=(1, g))
+        report = server.serve(trace)
+        print(f"[serve] {report.summary()}")
+        for m in server.engines:
+            shares = server.fair_shares(m)
+            print(f"  {m}: entitled slots "
+                  + ", ".join(f"{t}={v:.2f}" for t, v in sorted(shares.items())))
+
+        recon = server.reconcile(report)
+        for m, ok in sorted(recon.items()):
+            label = {True: "True", False: "FAILED", None: "n/a (digital)"}[ok]
+            print(f"  {m}: per-tenant CM_* ledgers reconcile against "
+                  f"program.mvm_counts(): {label}")
+        stats = report.tenant_stats()
+        starved = [name for name, st in stats.items()
+                   if st.n_requests > 0 and st.generated_tokens == 0]
+        if starved:
+            print(f"[serve] STARVED tenants (had requests, got 0 tokens): "
+                  f"{starved}")
+        if any(ok is False for ok in recon.values()) or starved:
+            raise SystemExit(1)
+        return report
+
+
+def _nullcontext():
+    import contextlib
+    return contextlib.nullcontext()
+
+
 def main(argv=None):
     args = parse_args(argv)
+    if args.models:
+        return _run_server(args)
     import jax
     import jax.numpy as jnp
 

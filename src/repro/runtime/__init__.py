@@ -7,15 +7,25 @@ Layering: `runtime/` sits between `models/` (whose prefill/decode_step it
 drives) and `launch/` (whose CLIs and mesh placement drive it); it never
 imports from `launch/` except the sharding-spec helpers. The re-exports
 below are the subsystem's public surface — `ServeEngine` /
-`ShardedServeEngine` for serving, `Request`/trace builders for load,
-`reconcile*` for the CM_* books, `resilient_step`/`StragglerMonitor` for
-the failure model (DESIGN.md §10-§11)."""
+`ShardedServeEngine` for serving, `ModelServer`/`build_server` for
+multi-tenant multi-model serving over one accelerator pool,
+`TenantPolicy`/`mixed_poisson_trace` for tenant load,
+`Request`/trace builders for load, `reconcile*` for the CM_* books,
+`resilient_step`/`StragglerMonitor` for the failure model
+(DESIGN.md §10-§12)."""
 from repro.runtime.batcher import (Batcher, Request, RequestRecord,
                                    SlotAllocator, poisson_trace, reconcile,
                                    reconcile_cores, request_core_ledgers,
                                    request_ledgers, synchronized_trace)
-from repro.runtime.engine import (ServeEngine, ServeReport,
+from repro.runtime.engine import (EngineSession, ServeEngine, ServeReport,
                                   ShardedServeEngine, static_generate)
 from repro.runtime.fault_tolerance import (Heartbeat, StragglerMonitor,
                                            elastic_mesh_shapes, is_transient,
                                            resilient_step)
+from repro.runtime.server import (ModelServer, ModelSpec, ServerReport,
+                                  build_server)
+from repro.runtime.tenancy import (TenantPolicy, TenantRequest, TenantStats,
+                                   fair_shares, jains_index,
+                                   mixed_poisson_trace, pick_tenant,
+                                   reconcile_tenants, tenant_ledgers,
+                                   tenant_stats)

@@ -147,6 +147,11 @@ class Batcher:
             return None
         return min(r.arrival for r in self._pending)
 
+    def has_ready(self, now: float) -> bool:
+        """Whether any queued request's arrival has passed (non-popping —
+        the multi-tenant server asks every tenant queue before picking)."""
+        return any(r.arrival <= now for r in self._pending)
+
     def pop_ready(self, now: float) -> Request | None:
         """Pop the highest-priority request whose arrival has passed."""
         ready = [r for r in self._pending if r.arrival <= now]

@@ -48,6 +48,11 @@ Public surface
   * `ServeEngine`         — single-device continuous batching: `warmup()`,
     `serve(requests) -> ServeReport`, `compile_counts()`, `ledgers()` /
     `core_ledgers()` (CM_* books).
+  * `EngineSession` + the session primitives `begin()` / `admit()` /
+    `step()` / `cancel_active()` / `finish()` — the serving loop decomposed
+    so an external driver (the multi-tenant `runtime.server.ModelServer`)
+    can interleave several engines under ONE clock. `serve()` is exactly
+    these primitives driven by a single `Batcher`.
   * `ShardedServeEngine`  — the same loop over a JAX mesh (DESIGN.md §11):
     slots over `data`, crossbar bit lines over `model`; adds
     `device_ledgers()`. Bit-equal to `ServeEngine` on the same trace.
@@ -186,6 +191,26 @@ class ServeReport:
                 f"decode steps, {self.idle_vectors} idle lanes); "
                 f"p50/p99 latency {pct['p50_latency_s']:.2f}/"
                 f"{pct['p99_latency_s']:.2f}s")
+
+
+@dataclasses.dataclass
+class EngineSession:
+    """Host-side state of one in-flight serving run.
+
+    Owned by a `ServeEngine`, created by `ServeEngine.begin()`; every field
+    the old monolithic `serve()` loop kept as a local lives here so an
+    external driver (`runtime.server.ModelServer`) can interleave sessions
+    of SEVERAL engines under one clock. Device buffers (``cache``,
+    ``tok_buf``) are reassigned by `admit`/`step` (insert donates), so a
+    session must only ever be driven by its own engine's primitives."""
+    report: ServeReport
+    slots: SlotAllocator
+    slot_rec: dict[int, RequestRecord]    # slot -> live record
+    cache: object
+    tok_buf: object
+    active: list[bool]
+    retries0: int                          # lifetime counters at begin()
+    flagged0: int
 
 
 # ---------------------------------------------------------------------------
@@ -376,6 +401,119 @@ class ServeEngine:
         rec.tokens.append(first)
         return tok1, cache1, first, dt
 
+    # -- session primitives --------------------------------------------------
+    # The serving loop decomposed into driver-steerable pieces: `serve()`
+    # drives one session off a single `Batcher`; the multi-tenant
+    # `runtime.server.ModelServer` drives one session PER co-resident model
+    # under a shared clock with tenant-quota admission. Both produce
+    # identical tokens for identical (request, admission-order) sequences —
+    # the primitives only factor the loop, they never reorder it.
+
+    def begin(self) -> "EngineSession":
+        """Open a serving session: fresh slots, device buffers and books.
+
+        Snapshots lifetime retry/straggler counters so a reused engine
+        reports only THIS session's retries/flags (the EWMA baseline itself
+        carries over on purpose — it stays warm across traces)."""
+        return EngineSession(
+            report=ServeReport(records={}),
+            slots=SlotAllocator(self.n_slots),
+            slot_rec={},
+            cache=self._empty_cache(),
+            tok_buf=self._empty_tok_buf(),
+            active=[False] * self.n_slots,
+            retries0=self._retries,
+            flagged0=len(self.monitor.flagged))
+
+    @staticmethod
+    def _retire(rec: RequestRecord, reason: str, at: float):
+        rec.finish_reason = reason
+        rec.t_done = at
+
+    def admit(self, sess: "EngineSession", req: Request, now: float) -> float:
+        """Admit one request at clock ``now``: prefill, book, and either
+        retire at prefill (max_new=1 / instant EOS — the request never
+        occupies a decode slot) or insert into a free slot. Returns the
+        advanced clock. Caller guarantees ``sess.slots.n_free > 0``."""
+        report = sess.report
+        rec = RequestRecord(request=req, t_admit=now)
+        report.records[req.rid] = rec
+        tok1, cache1, first, dt = self._prefill_request(req, rec)
+        now += dt
+        report.wall_prefill_s += dt
+        report.n_prefills += 1
+        report.prefill_pad_vectors += rec.pad_vectors
+        report.observed_vectors += len(req.prompt)
+        rec.t_first = now
+        eos_hit = self.eos_id is not None and first == self.eos_id
+        if req.max_new == 1 or eos_hit:
+            self._retire(rec, "eos" if eos_hit else "length", now)
+            return now
+        slot = sess.slots.alloc(req.rid)
+        sess.slot_rec[slot] = rec
+        t0 = time.perf_counter()
+        sess.cache, sess.tok_buf = self._jit_insert(
+            sess.cache, cache1, sess.tok_buf, tok1, jnp.int32(slot))
+        sess.tok_buf.block_until_ready()
+        ins = time.perf_counter() - t0
+        now += ins
+        report.wall_prefill_s += ins
+        sess.active[slot] = True
+        return now
+
+    def step(self, sess: "EngineSession", now: float) -> float:
+        """One dense decode step + retirement bookkeeping; returns the
+        advanced clock. Caller guarantees ``sess.slots.n_busy > 0``."""
+        report = sess.report
+        amask = jnp.asarray(sess.active)
+        t0 = time.perf_counter()
+        sess.tok_buf, sess.cache = self._safe_decode(
+            self.params, sess.cache, sess.tok_buf, amask)
+        sess.tok_buf.block_until_ready()
+        dt = time.perf_counter() - t0
+        now += dt
+        report.wall_decode_s += dt
+        report.n_steps += 1
+        report.idle_vectors += self.n_slots - sess.slots.n_busy
+        report.observed_vectors += sess.slots.n_busy
+        self._step_no += 1
+        self.monitor.record(self._step_no, dt)
+        host_tok = jax.device_get(sess.tok_buf)[:, 0].tolist()
+
+        for slot in list(sess.slot_rec):
+            rec = sess.slot_rec[slot]
+            rec.decode_vectors += 1
+            rec.tokens.append(host_tok[slot])
+            done_len = len(rec.tokens) >= rec.request.max_new
+            done_eos = (self.eos_id is not None
+                        and host_tok[slot] == self.eos_id)
+            # the KV write position is bounded by max_seq; O(1)-state
+            # recurrent archs have no such cap
+            done_cap = (not self.recurrent
+                        and len(rec.request.prompt) + rec.decode_vectors
+                        >= self.max_seq)
+            if done_len or done_eos or done_cap:
+                self._retire(rec, "eos" if done_eos
+                             else ("length" if done_len else "cap"), now)
+                sess.slot_rec.pop(slot)
+                sess.slots.release(slot)
+                sess.active[slot] = False
+        return now
+
+    def cancel_active(self, sess: "EngineSession", now: float):
+        """Retire every in-flight request with reason "cap" (step budget)."""
+        for slot in list(sess.slot_rec):
+            self._retire(sess.slot_rec.pop(slot), "cap", now)
+            sess.slots.release(slot)
+            sess.active[slot] = False
+
+    def finish(self, sess: "EngineSession", now: float) -> ServeReport:
+        """Close the session and return its report."""
+        sess.report.makespan_s = now
+        sess.report.retries = self._retries - sess.retries0
+        sess.report.stragglers = list(self.monitor.flagged[sess.flagged0:])
+        return sess.report
+
     # -- the serving loop ----------------------------------------------------
     def serve(self, requests, max_steps: int = 100_000) -> ServeReport:
         """Serve a full trace to completion (simulated arrival clock).
@@ -384,57 +522,18 @@ class ServeEngine:
         of each device call; when every slot is empty it jumps to the next
         arrival. Request arrival times are in the same (second) units."""
         queue = Batcher(requests, policy=self.admission)
-        slots = SlotAllocator(self.n_slots)
-        report = ServeReport(records={})
-        slot_rec: dict[int, RequestRecord] = {}       # slot -> live record
-        # snapshot lifetime counters so a reused engine reports only THIS
-        # run's retries/straggler flags (the EWMA baseline itself carries
-        # over on purpose — it stays warm across traces)
-        retries0 = self._retries
-        flagged0 = len(self.monitor.flagged)
-
-        cache = self._empty_cache()
-        tok_buf = self._empty_tok_buf()
-        active = [False] * self.n_slots
+        sess = self.begin()
         now = 0.0
 
-        def retire(rec: RequestRecord, reason: str, at: float):
-            rec.finish_reason = reason
-            rec.t_done = at
-
-        while len(queue) or slots.n_busy:
+        while len(queue) or sess.slots.n_busy:
             # ---- admission + slot refill (continuous batching) ------------
-            while slots.n_free:
+            while sess.slots.n_free:
                 req = queue.pop_ready(now)
                 if req is None:
                     break
-                rec = RequestRecord(request=req, t_admit=now)
-                report.records[req.rid] = rec
-                tok1, cache1, first, dt = self._prefill_request(req, rec)
-                now += dt
-                report.wall_prefill_s += dt
-                report.n_prefills += 1
-                report.prefill_pad_vectors += rec.pad_vectors
-                report.observed_vectors += len(req.prompt)
-                rec.t_first = now
-                eos_hit = self.eos_id is not None and first == self.eos_id
-                if req.max_new == 1 or eos_hit:
-                    # prefill-only retirement: the request never occupies a
-                    # decode slot (the --gen 1 regime, served honestly)
-                    retire(rec, "eos" if eos_hit else "length", now)
-                    continue
-                slot = slots.alloc(req.rid)
-                slot_rec[slot] = rec
-                t0 = time.perf_counter()
-                cache, tok_buf = self._jit_insert(cache, cache1, tok_buf,
-                                                  tok1, jnp.int32(slot))
-                tok_buf.block_until_ready()
-                ins = time.perf_counter() - t0
-                now += ins
-                report.wall_prefill_s += ins
-                active[slot] = True
+                now = self.admit(sess, req, now)
 
-            if not slots.n_busy:
+            if not sess.slots.n_busy:
                 nxt = queue.next_arrival()
                 if nxt is None:
                     break
@@ -442,51 +541,12 @@ class ServeEngine:
                 continue
 
             # ---- one dense decode step ------------------------------------
-            if report.n_steps >= max_steps:
-                for slot in list(slot_rec):
-                    retire(slot_rec.pop(slot), "cap", now)
-                    slots.release(slot)
-                    active[slot] = False
+            if sess.report.n_steps >= max_steps:
+                self.cancel_active(sess, now)
                 break
-            amask = jnp.asarray(active)
-            t0 = time.perf_counter()
-            tok_buf, cache = self._safe_decode(self.params, cache, tok_buf,
-                                               amask)
-            tok_buf.block_until_ready()
-            dt = time.perf_counter() - t0
-            now += dt
-            report.wall_decode_s += dt
-            report.n_steps += 1
-            report.idle_vectors += self.n_slots - slots.n_busy
-            report.observed_vectors += slots.n_busy
-            self._step_no += 1
-            self.monitor.record(self._step_no, dt)
-            host_tok = jax.device_get(tok_buf)[:, 0].tolist()
+            now = self.step(sess, now)
 
-            # ---- bookkeeping + retirement ---------------------------------
-            for slot in list(slot_rec):
-                rec = slot_rec[slot]
-                rec.decode_vectors += 1
-                rec.tokens.append(host_tok[slot])
-                done_len = len(rec.tokens) >= rec.request.max_new
-                done_eos = (self.eos_id is not None
-                            and host_tok[slot] == self.eos_id)
-                # the KV write position is bounded by max_seq; O(1)-state
-                # recurrent archs have no such cap
-                done_cap = (not self.recurrent
-                            and len(rec.request.prompt) + rec.decode_vectors
-                            >= self.max_seq)
-                if done_len or done_eos or done_cap:
-                    retire(rec, "eos" if done_eos
-                           else ("length" if done_len else "cap"), now)
-                    slot_rec.pop(slot)
-                    slots.release(slot)
-                    active[slot] = False
-
-        report.makespan_s = now
-        report.retries = self._retries - retries0
-        report.stragglers = list(self.monitor.flagged[flagged0:])
-        return report
+        return self.finish(sess, now)
 
     # -- CM_* books ----------------------------------------------------------
     def ledgers(self, report: ServeReport) -> dict:

@@ -208,3 +208,72 @@ def test_program_stacked_matches_per_slice():
         ref = program_linear(w[i], CFG)
         np.testing.assert_array_equal(np.asarray(st.w_q[i]),
                                       np.asarray(ref.w_q))
+
+
+# ---------------------------------------------------------------------------
+# TilePool — shared crossbar budget across co-programmed models
+# ---------------------------------------------------------------------------
+
+def test_pool_contention_raises_capacity_error():
+    """Two programs that each fit the capped pool ALONE must fail when
+    co-programmed: the second one's placement overflows the shared budget
+    with a clear CapacityError naming the resident program — never a
+    silent tile overlap."""
+    from repro.core.program import TilePool
+    full = {"w": jnp.ones((CFG.tile_rows, CFG.tile_cols)) * 0.01}
+    plan = MappingPlan(include=(r"w",))
+    # each program alone occupies exactly one tile -> fits a 1-tile pool
+    solo = TilePool(CFG, tiles_per_context=1)
+    program_model(full, plan, CFG, pool=solo, label="a")
+    assert solo.n_tiles == 1
+
+    pool = TilePool(CFG, tiles_per_context=1)
+    program_model(full, plan, CFG, pool=pool, label="a")
+    with pytest.raises(CapacityError, match="co-resident.*a"):
+        program_model(full, plan, CFG, pool=pool, label="b")
+
+
+def test_pool_placements_never_overlap():
+    """Co-resident programs pack into disjoint crossbar cell ranges, and
+    each program's own tile_maps carry only its label's placements."""
+    from repro.core.program import TilePool
+    from repro.core.tile import overlapping_placements
+    pool = TilePool(CFG)
+    pa = program_model({"w": jnp.ones((200, 80)) * 0.01},
+                       MappingPlan(include=(r"w",)), CFG,
+                       pool=pool, label="a")
+    pb = program_model({"w": jnp.ones((150, 120)) * 0.01},
+                       MappingPlan(include=(r"w",)), CFG,
+                       pool=pool, label="b")
+    assert pool.labels == ["a", "b"]
+    assert overlapping_placements(pool.placements()) == []
+    for prog, label in ((pa, "a"), (pb, "b")):
+        own = [p for tm in prog.tile_maps for p in tm.placements]
+        assert own and all(p.matrix_id.startswith(f"{label}/") for p in own)
+
+
+def test_pool_label_collision_raises():
+    from repro.core.program import TilePool
+    pool = TilePool(CFG)
+    params = {"w": jnp.ones((64, 32)) * 0.01}
+    plan = MappingPlan(include=(r"w",))
+    program_model(params, plan, CFG, pool=pool, label="m")
+    with pytest.raises(ValueError, match="already resident"):
+        program_model(params, plan, CFG, pool=pool, label="m")
+
+
+def test_pooled_program_matches_unpooled_math():
+    """The pool changes WHERE matrices land, never what they compute: same
+    params + key program to identical states and identical CM_* counts."""
+    from repro.core.program import TilePool
+    params = {"wq": jax.random.normal(jax.random.PRNGKey(3),
+                                      (96, 48)) * 0.05}
+    plan = MappingPlan(include=(r"wq",))
+    key = jax.random.PRNGKey(9)
+    plain = program_model(params, plan, CFG, key)
+    pooled = program_model(params, plan, CFG, key,
+                           pool=TilePool(CFG), label="m")
+    assert plain.names == pooled.names
+    assert plain.mvm_counts() == pooled.mvm_counts()
+    np.testing.assert_array_equal(np.asarray(plain["wq"].w_q),
+                                  np.asarray(pooled["wq"].w_q))

@@ -1,0 +1,173 @@
+"""Multi-tenant model server (runtime/server.py, DESIGN.md §12).
+
+The acceptance bars, pinned: two models co-programmed in one process serve
+an interleaved trace with per-tenant slot quotas enforced (no tenant
+starves; saturated shares track weights exactly); summed per-tenant CM_*
+ledgers reconcile EXACTLY against each model's ``program.mvm_counts()``;
+and single-model serving through the server is BIT-EQUAL to the PR-4
+`ServeEngine.serve` loop on the same engine object.
+"""
+
+import pytest
+
+from repro.configs import get_arch
+from repro.runtime.batcher import Request, synchronized_trace
+from repro.runtime.server import ModelServer, ModelSpec, build_server
+from repro.runtime.tenancy import (TenantPolicy, TenantRequest, jains_index,
+                                   mixed_poisson_trace, reconcile_tenants)
+
+SPECS = [ModelSpec("granite_8b", "granite-8b", "aimc"),
+         ModelSpec("xlstm_350m", "xlstm-350m", "digital")]
+TENANTS = [TenantPolicy("premium", "granite_8b", weight=2.0),
+           TenantPolicy("standard", "granite_8b", weight=1.0,
+                        admission="sjf"),
+           TenantPolicy("batch", "xlstm_350m", weight=1.0)]
+N_SLOTS, PAD, MAX_SEQ = 3, 8, 22
+
+
+@pytest.fixture(scope="module")
+def server():
+    srv = build_server(SPECS, TENANTS, smoke=True, n_slots=N_SLOTS,
+                       prompt_pad=PAD, max_seq=MAX_SEQ)
+    srv.warmup()
+    return srv
+
+
+def _vocab_of():
+    return {s.name: get_arch(s.arch).smoke_cfg.vocab for s in SPECS}
+
+
+# ---------------------------------------------------------------------------
+# co-programming / registry
+# ---------------------------------------------------------------------------
+
+def test_two_models_share_one_pool(server):
+    assert server.pool is not None
+    assert server.pool.labels == ["granite_8b"]     # only the AIMC member
+    assert server.engines["granite_8b"].program is not None
+    assert server.engines["xlstm_350m"].program is None
+    assert 0.0 < server.pool.utilization <= 1.0
+
+
+def test_registry_validation(server):
+    eng = server.engines["granite_8b"]
+    with pytest.raises(ValueError, match="unregistered model"):
+        ModelServer({"granite_8b": eng},
+                    [TenantPolicy("t", "nonexistent")])
+    with pytest.raises(ValueError, match="duplicate tenant"):
+        ModelServer({"granite_8b": eng},
+                    [TenantPolicy("t", "granite_8b"),
+                     TenantPolicy("t", "granite_8b")])
+    with pytest.raises(ValueError, match="at least one"):
+        ModelServer({}, [TenantPolicy("t", "granite_8b")])
+    with pytest.raises(ValueError, match="exec_mode"):
+        ModelSpec("m", "granite-8b", "analog")
+
+
+def test_trace_validation(server):
+    with pytest.raises(ValueError, match="unknown tenant"):
+        server.serve([TenantRequest("nobody",
+                                    Request(rid=0, prompt=(1, 2)))])
+    with pytest.raises(ValueError, match="unique"):
+        server.serve([TenantRequest("premium",
+                                    Request(rid=0, prompt=(1, 2))),
+                      TenantRequest("batch",
+                                    Request(rid=0, prompt=(1, 2)))])
+
+
+# ---------------------------------------------------------------------------
+# mixed-trace serving: progress + exact books
+# ---------------------------------------------------------------------------
+
+def test_mixed_trace_progress_and_exact_ledgers(server):
+    trace = mixed_poisson_trace(TENANTS, 12, 150.0, vocab_of=_vocab_of(),
+                                seed=9, prompt_len=(3, PAD),
+                                max_new=(2, 8))
+    report = server.serve(trace)
+    assert sum(len(r.records) for r in report.model_reports.values()) == 12
+
+    stats = report.tenant_stats()
+    for name, st in stats.items():
+        if st.n_requests:
+            assert st.generated_tokens > 0, f"tenant {name} starved"
+            assert st.p99_ttft_s >= st.p50_ttft_s >= 0.0
+
+    # books close per model: device-loop count == per-request records, and
+    # summed per-tenant ledgers == program.mvm_counts() scaled by it
+    for m, rep in report.model_reports.items():
+        assert rep.observed_vectors == rep.useful_vectors
+    recon = server.reconcile(report)
+    assert recon["granite_8b"] is True
+    assert recon["xlstm_350m"] is None              # digital: counts only
+    prog = server.engines["granite_8b"].program
+    rep = report.model_reports["granite_8b"]
+    led_sum, static = reconcile_tenants(prog, rep.records, report.tenant_of,
+                                        rep.observed_vectors)
+    assert led_sum == static
+
+    # interleaved multi-model serving stays shape-stable (no recompiles)
+    assert all(c == {"prefill": 1, "insert": 1, "decode": 1}
+               for c in server.compile_counts().values())
+
+
+# ---------------------------------------------------------------------------
+# quota enforcement under saturation
+# ---------------------------------------------------------------------------
+
+def test_saturated_shares_track_weights(server):
+    """Synchronized equal backlogs from both granite tenants, run CUT while
+    both still have work: the decode-slot split must be exactly the 2:1
+    weight ratio (steady state (2,1) on 3 slots), and weight-normalized
+    fairness must be perfect."""
+    vocab = get_arch("granite-8b").smoke_cfg.vocab
+    trace = []
+    for i in range(12):
+        trace.append(TenantRequest(
+            tenant="premium" if i % 2 == 0 else "standard",
+            request=Request(rid=500 + i,
+                            prompt=tuple((7 * j + i) % (vocab - 1) + 1
+                                         for j in range(6)),
+                            max_new=12, arrival=0.0)))
+    report = server.serve(trace, max_steps=30)
+    shares = {}
+    for name in ("premium", "standard"):
+        recs = report.tenant_records(name)
+        shares[name] = sum(r.decode_vectors for r in recs.values())
+    assert shares["standard"] > 0                   # nobody starved
+    assert shares["premium"] == 2 * shares["standard"]
+    fairness = jains_index([shares["premium"] / 2.0,
+                            shares["standard"] / 1.0])
+    assert fairness == pytest.approx(1.0)
+    # the cut run's books still close exactly (cancelled work is booked)
+    assert server.reconcile(report)["granite_8b"] is True
+
+
+def test_fair_shares_surface(server):
+    shares = server.fair_shares("granite_8b")
+    assert shares == {"premium": 2.0, "standard": 1.0}
+    assert server.fair_shares("xlstm_350m") == {"batch": 3.0}
+
+
+# ---------------------------------------------------------------------------
+# single-model serving through the server == the PR-4 engine loop
+# ---------------------------------------------------------------------------
+
+def test_single_model_bit_equal_to_engine(server):
+    """Wrapping ONE engine in a single-tenant ModelServer and serving the
+    same trace must produce bit-identical tokens to `ServeEngine.serve` —
+    the session primitives factor the loop, they never reorder it."""
+    eng = server.engines["granite_8b"]
+    vocab = get_arch("granite-8b").smoke_cfg.vocab
+    reqs = synchronized_trace(5, prompt_len=PAD, max_new=6, seed=13,
+                              vocab=vocab)
+    direct = eng.serve(reqs)
+    solo = ModelServer({"granite_8b": eng},
+                       [TenantPolicy("only", "granite_8b")])
+    wrapped = solo.serve([TenantRequest("only", r) for r in reqs])
+    rep = wrapped.model_reports["granite_8b"]
+    assert set(rep.records) == set(direct.records)
+    for rid in direct.records:
+        assert rep.records[rid].tokens == direct.records[rid].tokens
+        assert (rep.records[rid].finish_reason
+                == direct.records[rid].finish_reason)
+    assert rep.observed_vectors == direct.observed_vectors

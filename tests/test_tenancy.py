@@ -1,0 +1,189 @@
+"""Tenant policy layer (runtime/tenancy.py).
+
+The quota scheduler, fairness metric, SLO stats and per-tenant CM_* ledger
+aggregation are all host-side pure functions — pinned here without any
+device work (the server-level integration lives in tests/test_server.py).
+"""
+
+import math
+
+import pytest
+
+from repro.core.isa import CmCounts
+from repro.runtime.batcher import Request, RequestRecord
+from repro.runtime.tenancy import (TenantPolicy, fair_shares, jains_index,
+                                   mixed_poisson_trace, pick_tenant,
+                                   reconcile_tenants, tenant_ledgers,
+                                   tenant_stats)
+
+POLICIES = {
+    "premium": TenantPolicy("premium", "m1", weight=2.0),
+    "standard": TenantPolicy("standard", "m1", weight=1.0),
+    "batch": TenantPolicy("batch", "m2", weight=1.0),
+}
+
+
+# ---------------------------------------------------------------------------
+# policy validation
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="name"):
+        TenantPolicy("", "m1")
+    with pytest.raises(ValueError, match="model"):
+        TenantPolicy("t", "")
+    with pytest.raises(ValueError, match="weight"):
+        TenantPolicy("t", "m1", weight=0.0)
+    with pytest.raises(ValueError, match="admission"):
+        TenantPolicy("t", "m1", admission="priority")
+
+
+# ---------------------------------------------------------------------------
+# quota scheduling
+# ---------------------------------------------------------------------------
+
+def test_pick_tenant_weighted_deficit():
+    """The pick minimizes in_flight/weight: a weight-2 tenant holding one
+    slot (ratio 0.5) yields to an idle weight-1 tenant (ratio 0), but beats
+    it once both hold one (0.5 < 1.0)."""
+    cands = ["premium", "standard"]
+    assert pick_tenant(cands, {}, POLICIES) == "premium"      # tie: name order
+    assert pick_tenant(cands, {"premium": 1}, POLICIES) == "standard"
+    assert pick_tenant(cands, {"premium": 1, "standard": 1},
+                       POLICIES) == "premium"
+    assert pick_tenant(cands, {"premium": 2, "standard": 1},
+                       POLICIES) == "premium"                 # 1.0 vs 1.0: name
+    with pytest.raises(ValueError):
+        pick_tenant([], {}, POLICIES)
+
+
+def test_pick_tenant_converges_to_weighted_shares():
+    """Simulated slot churn: admissions via pick_tenant, releases round-
+    robin — the admission tally converges to the 2:1 weight split."""
+    in_flight = {"premium": 0, "standard": 0}
+    admitted = {"premium": 0, "standard": 0}
+    held = []
+    for step in range(300):
+        while sum(in_flight.values()) < 3:          # 3 slots, always backlog
+            t = pick_tenant(list(in_flight), in_flight, POLICIES)
+            in_flight[t] += 1
+            admitted[t] += 1
+            held.append(t)
+        in_flight[held.pop(0)] -= 1                 # oldest admission retires
+    ratio = admitted["premium"] / admitted["standard"]
+    assert 1.8 <= ratio <= 2.2
+
+
+def test_fair_shares_partition_slots():
+    shares = fair_shares(list(POLICIES.values()), "m1", n_slots=3)
+    assert shares == {"premium": 2.0, "standard": 1.0}
+    assert "batch" not in shares
+    assert math.isclose(sum(shares.values()), 3.0)
+
+
+def test_jains_index():
+    assert jains_index([5, 5, 5]) == pytest.approx(1.0)
+    assert jains_index([1, 0, 0]) == pytest.approx(1 / 3)
+    assert jains_index([]) == 0.0
+    assert jains_index([0, 0]) == 0.0
+    # scale invariance
+    assert jains_index([1, 2, 3]) == pytest.approx(jains_index([10, 20, 30]))
+
+
+# ---------------------------------------------------------------------------
+# SLO stats
+# ---------------------------------------------------------------------------
+
+def _rec(rid, arrival, t_first, t_done, n_tokens, prefill, decode):
+    r = RequestRecord(request=Request(rid=rid, prompt=(1,) * prefill,
+                                      max_new=max(n_tokens, 1),
+                                      arrival=arrival))
+    r.t_first, r.t_done = t_first, t_done
+    r.tokens = list(range(n_tokens))
+    r.prefill_vectors, r.decode_vectors = prefill, decode
+    return r
+
+
+def test_tenant_stats_tpot_and_slo():
+    pol = TenantPolicy("t", "m1", slo_ttft_s=0.05, slo_tpot_s=0.02)
+    records = {
+        0: _rec(0, arrival=0.0, t_first=0.01, t_done=0.05, n_tokens=5,
+                prefill=4, decode=4),
+        1: _rec(1, arrival=0.0, t_first=0.02, t_done=0.02, n_tokens=1,
+                prefill=3, decode=0),           # prefill-only: no TPOT sample
+    }
+    st = tenant_stats(pol, records, makespan_s=0.1)
+    assert st.n_requests == 2 and st.generated_tokens == 6
+    assert st.vectors == 4 + 4 + 3
+    assert st.tok_s == pytest.approx(60.0)
+    # TPOT from req 0 only: (0.05 - 0.01) / 4 = 0.01
+    assert st.p50_tpot_s == pytest.approx(0.01)
+    assert st.slo_ttft_ok is True and st.slo_tpot_ok is True
+    tight = TenantPolicy("t", "m1", slo_ttft_s=0.005)
+    assert tenant_stats(tight, records, 0.1).slo_ttft_ok is False
+    # no declared target -> no verdict
+    assert tenant_stats(TenantPolicy("t", "m1"), records, 0.1).slo_ttft_ok \
+        is None
+
+
+# ---------------------------------------------------------------------------
+# per-tenant CM_* ledgers
+# ---------------------------------------------------------------------------
+
+class _StubProgram:
+    """mvm_counts is the only surface the ledger math touches."""
+
+    def mvm_counts(self):
+        return CmCounts(queue=3, process=2, dequeue=1, queue_bytes=12)
+
+
+def test_tenant_ledgers_sum_exactly():
+    records = {
+        0: _rec(0, 0, 0, 0, n_tokens=4, prefill=5, decode=3),   # 8 vectors
+        1: _rec(1, 0, 0, 0, n_tokens=2, prefill=4, decode=1),   # 5 vectors
+        2: _rec(2, 0, 0, 0, n_tokens=1, prefill=2, decode=0),   # 2 vectors
+    }
+    tenant_of = {0: "a", 1: "b", 2: "a"}
+    prog = _StubProgram()
+    led = tenant_ledgers(prog, records, tenant_of)
+    assert led["a"] == prog.mvm_counts().scaled(10)
+    assert led["b"] == prog.mvm_counts().scaled(5)
+    total, static = reconcile_tenants(prog, records, tenant_of)
+    assert total == static == prog.mvm_counts().scaled(15)
+    # an observed count that disagrees with the books must NOT reconcile
+    total, static = reconcile_tenants(prog, records, tenant_of,
+                                      observed_vectors=14)
+    assert total != static
+
+
+# ---------------------------------------------------------------------------
+# mixed traces
+# ---------------------------------------------------------------------------
+
+def test_mixed_poisson_trace_deterministic_and_routed():
+    pols = list(POLICIES.values())
+    vocab_of = {"m1": 64, "m2": 16}
+    a = mixed_poisson_trace(pols, 40, 100.0, vocab_of=vocab_of, seed=3)
+    b = mixed_poisson_trace(pols, 40, 100.0, vocab_of=vocab_of, seed=3)
+    assert a == b                                   # replayable
+    rids = [tr.request.rid for tr in a]
+    assert rids == sorted(rids) and len(set(rids)) == len(rids)
+    arrivals = [tr.request.arrival for tr in a]
+    assert arrivals == sorted(arrivals) and arrivals[0] > 0
+    assert {tr.tenant for tr in a} <= set(POLICIES)
+    for tr in a:
+        vocab = vocab_of[POLICIES[tr.tenant].model]
+        assert all(1 <= t < vocab for t in tr.request.prompt)
+    # weight-proportional assignment (2:1:1 over 40 draws, loose bound)
+    n_premium = sum(tr.tenant == "premium" for tr in a)
+    assert 10 <= n_premium <= 30
+
+
+def test_mixed_poisson_trace_validation():
+    pols = list(POLICIES.values())
+    with pytest.raises(ValueError, match="rate"):
+        mixed_poisson_trace(pols, 4, 0.0, vocab_of={"m1": 8, "m2": 8})
+    with pytest.raises(ValueError, match="missing models"):
+        mixed_poisson_trace(pols, 4, 10.0, vocab_of={"m1": 8})
+    with pytest.raises(ValueError, match="policy"):
+        mixed_poisson_trace([], 4, 10.0, vocab_of={})
