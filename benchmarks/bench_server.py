@@ -19,7 +19,11 @@ Measured:
   * per-tenant CM_* ledger reconciliation: summed per-tenant books close
     EXACTLY against each programmed model's ``program.mvm_counts()``;
   * shared-pool crossbar-capacity utilization and per-engine compile
-    counts (shape stability across interleaved multi-model serving).
+    counts (shape stability across interleaved multi-model serving);
+  * the same mixed trace through a ``decode_chunk=4`` server (DESIGN.md
+    §13): per-request tokens must be chunk-invariant for every tenant and
+    the per-tenant books must still close when quota accounting lands on
+    chunk boundaries instead of single steps.
 
 ``--json BENCH_server.json`` is the machine-readable artifact
 (``benchmarks.run --json`` includes this module; ``make bench-json``).
@@ -163,6 +167,50 @@ def _saturation_case(server, verbose: bool) -> dict:
     return case
 
 
+def _chunked_case(server, verbose: bool) -> dict:
+    """The mixed trace again, through a server whose engines run the
+    k=4 scanned-decode chunk (DESIGN.md §13). Tokens are chunk-invariant
+    by construction, so every tenant's every request must decode to the
+    same ids as the per-step server, and the per-tenant ledgers must still
+    close when quota accounting lands on chunk boundaries."""
+    t0 = time.time()
+    server4 = build_server(SPECS, TENANTS, smoke=True, n_slots=N_SLOTS,
+                           prompt_pad=PAD, max_seq=PAD + MAX_NEW[1] + 2,
+                           decode_chunk=4)
+    server4.warmup()
+    t_build = time.time() - t0
+    vocab_of = {s.name: get_arch(s.arch).smoke_cfg.vocab for s in SPECS}
+    trace = mixed_poisson_trace(TENANTS, N_REQ, RATE, vocab_of=vocab_of,
+                                seed=7, prompt_len=PROMPT, max_new=MAX_NEW)
+    rep1 = server.serve(list(trace))
+    rep4 = server4.serve(list(trace))
+    chunk_invariant = True
+    for pol in TENANTS:
+        recs1 = rep1.tenant_records(pol.name)
+        recs4 = rep4.tenant_records(pol.name)
+        chunk_invariant = chunk_invariant and set(recs1) == set(recs4) and \
+            all(recs1[rid].tokens == recs4[rid].tokens for rid in recs1)
+    recon = server4.reconcile(rep4)
+    # each engine compiles one decode executable per ladder length
+    # {1, 2, 4}; interleaved chunked serving must not add any
+    counts = server4.compile_counts()
+    stable = all(c == {"prefill": 1, "insert": 1, "decode": 3}
+                 for c in counts.values())
+    case = {
+        "decode_chunk": 4,
+        "build_warmup_s": t_build,
+        "tokens_chunk_invariant": chunk_invariant,
+        "ledgers_reconcile": {m: ok for m, ok in recon.items()},
+        "compile_counts": counts,
+        "stable_shapes": stable,
+    }
+    if verbose:
+        print(f"chunked server (k=4): tokens chunk-invariant "
+              f"{chunk_invariant}  ledgers: {case['ledgers_reconcile']}  "
+              f"shape-stable: {stable}")
+    return case
+
+
 def run(verbose: bool = True) -> dict:
     server, t_build = _build(verbose)
     return {
@@ -176,16 +224,20 @@ def run(verbose: bool = True) -> dict:
         "pool": server.pool.summary(),
         "mixed": _mixed_case(server, verbose),
         "saturation": _saturation_case(server, verbose),
+        "chunked": _chunked_case(server, verbose),
     }
 
 
 def checks(results=None) -> list[Check]:
     results = results or run(verbose=False)
     mixed, sat = results["mixed"], results["saturation"]
+    chunked = results["chunked"]
     recon_ok = (all(ok is not False
                     for ok in mixed["ledgers_reconcile"].values())
                 and all(ok is not False
-                        for ok in sat["ledgers_reconcile"].values()))
+                        for ok in sat["ledgers_reconcile"].values())
+                and all(ok is not False
+                        for ok in chunked["ledgers_reconcile"].values()))
     return [
         Check("every tenant with requests makes progress (no starvation)",
               1.0 if mixed["all_tenants_progress"] else 0.0, 1.0, rtol=0.01),
@@ -197,6 +249,11 @@ def checks(results=None) -> list[Check]:
               sat["min_share_ratio"], 1.0, rtol=0.30),
         Check("engine shapes jit-stable across interleaved models",
               1.0 if mixed["stable_shapes"] else 0.0, 1.0, rtol=0.01),
+        Check("chunked (k=4) server tokens chunk-invariant per tenant",
+              1.0 if chunked["tokens_chunk_invariant"] else 0.0, 1.0,
+              rtol=0.01),
+        Check("chunked server shapes jit-stable (ladder pre-compiled)",
+              1.0 if chunked["stable_shapes"] else 0.0, 1.0, rtol=0.01),
     ]
 
 

@@ -18,14 +18,40 @@ Measured per case (one transformer, one recurrent arch):
   * bit-equality of engine vs static tokens for synchronized arrivals.
 
 ``--mesh data:D,model:M`` additionally benchmarks the SHARDED engine
-(`runtime.engine.ShardedServeEngine`, DESIGN.md §11) against the
+(`runtime.engine.ShardedServeEngine`, DESIGN.md §11/§13) against the
 single-device engine on the same traces: decode slots sharded over the data
-axis, programmed crossbar bit lines over the model axis. On the forced
-host-platform mesh the devices share one CPU, so the point is not speedup —
-it is that the sharded run is BIT-EQUAL to the single-device engine and
-that the per-core/per-request CM_* ledgers still reconcile exactly
-(EXPERIMENTS.md §Sharded serving). The flag forces
-``--xla_force_host_platform_device_count`` as needed when run as a module.
+axis, programmed crossbar bit lines over the model axis. The sharded sweep
+runs the k-step chunked decode loop at every k in ``CHUNKS``: per-step host
+rounds are what made the PR-5 sharded engine LOSE to one device (each
+dispatch/sync round trip is paid per token), and the k-step `lax.scan`
+chunk amortizes that round over k tokens.
+
+The sharded gates are STEP-LEVEL, because on the forced host-platform mesh
+the "devices" are threads sharing one physical CPU: total compute is
+conserved, so an end-to-end cross-device speedup is not physically on the
+table at smoke scale (per-call SPMD dispatch and thread contention are pure
+overhead — the seed benchmark said as much). What the chunk is responsible
+for — the per-token host round — IS measurable and gated: (a) the k=1 ->
+k=max saturated step-time gain must exceed ``CHUNK_GAIN_MIN`` for the
+arch where the round DOMINATES the step (the recurrent arch: its light
+step makes the round ~half of k=1 cost and the sweep shows 1.6-2.2x;
+the transformer's heavy step caps its ceiling at ~1.2-1.3x, inside
+measurement noise, so its gain is recorded but not gated), (b) the
+residual host-round share of the step at
+k=max — (t_round/k) / T_step(k) from the fitted roofline — must fall
+under ``ROUND_SHARE_MAX`` (the round no longer matters; at k=1 it is
+25-50% of every step), and (c) each case fits
+`core.schedule.OverlapRoofline`
+(T_step(k) = t_step_s + t_round_s / k) to the measured per-step times and
+gates the fit residual plus the PREDICTED 1->k overlap gain against the
+MEASURED step-time delta — the speedup is explained, not just observed.
+On real multi-device hardware the same discipline is what lets data:N win
+end-to-end; here the end-to-end tok/s of every k is recorded for
+transparency but not gated. Throughout, the chunked run must stay
+BIT-EQUAL to the single-device engine and the per-core/per-request CM_*
+ledgers must reconcile exactly (EXPERIMENTS.md §Sharded serving). The flag
+forces ``--xla_force_host_platform_device_count`` as needed when run as a
+module.
 
 ``--json BENCH_serving.json`` is the machine-readable artifact
 (``benchmarks.run --json`` includes this module; ``make bench-json``).
@@ -54,6 +80,10 @@ PROMPT = (4, 12)
 MAX_NEW = (2, 16)            # wide budget spread: static decodes max for all
 PAD = 12
 N_SLOTS = 4
+CHUNKS = (1, 4, 8)           # decode_chunk sweep for the sharded engine
+ROOFLINE_RTOL = 0.35         # fit residual / predicted-vs-measured gate
+CHUNK_GAIN_MIN = 1.25        # k-sweep step gain where the round dominates
+ROUND_SHARE_MAX = 0.20       # residual host-round share of the step at k=max
 
 
 def _setup(arch: str, programmed: bool, n_contexts: int = 1):
@@ -128,6 +158,22 @@ def _serve_continuous(engine, requests):
     }, report
 
 
+def _measure_step_time(engine, vocab: int, reps: int = 3) -> float:
+    """Mean wall seconds per decode STEP (chunk wall / k) with every slot
+    busy: a synchronized saturated trace keeps all lanes active so the
+    measurement isolates host-round amortization, not slot raggedness.
+    Best of ``reps`` serves shaves OS-scheduler noise off the roofline
+    fit."""
+    best = float("inf")
+    for r in range(reps):
+        sync = synchronized_trace(engine.n_slots, prompt_len=PAD,
+                                  max_new=MAX_NEW[1], seed=5 + r,
+                                  vocab=vocab)
+        rep = engine.serve(sync)
+        best = min(best, rep.wall_decode_s / max(rep.n_steps, 1))
+    return best
+
+
 def _bench_case(arch: str, programmed: bool, verbose: bool) -> dict:
     spec, cfg, model, params, exe, program = _setup(arch, programmed)
     max_seq = PAD + MAX_NEW[1] + 2
@@ -199,10 +245,13 @@ def _bench_case(arch: str, programmed: bool, verbose: bool) -> dict:
 
 
 def _bench_sharded_case(arch: str, programmed: bool, mesh, mesh_arg: str,
-                        verbose: bool) -> dict:
-    """Sharded vs single-device engine on identical traces (DESIGN.md §11):
-    same params/program/trace, the only variable is the mesh placement."""
-    from repro.core.schedule import CoreSchedule
+                        verbose: bool, chunks=CHUNKS) -> dict:
+    """Sharded chunked-decode sweep vs the single-device engine on
+    identical traces (DESIGN.md §11/§13): same params/program/trace, the
+    variables are the mesh placement and the decode chunk size k. Fits
+    `OverlapRoofline` to the measured per-step times across k and records
+    both the predicted and the realized overlap gain."""
+    from repro.core.schedule import CoreSchedule, OverlapRoofline
     n_ctx = max(2, mesh.shape.get("model", 1)) if programmed else 1
     spec, cfg, model, params, exe, program = _setup(arch, programmed, n_ctx)
     schedule = (CoreSchedule.from_program(program)
@@ -213,37 +262,75 @@ def _bench_sharded_case(arch: str, programmed: bool, mesh, mesh_arg: str,
               module=spec.module, program=program, schedule=schedule)
     single = ServeEngine(model, cfg, exe, params, **kw)
     single.warmup()
-    t0 = time.time()
-    sharded = ShardedServeEngine(model, cfg, exe, params, mesh=mesh, **kw)
-    sharded.warmup()
-    t_warm = time.time() - t0
 
     trace = poisson_trace(N_REQ, RATE, seed=11, prompt_len=PROMPT,
                           max_new=MAX_NEW, vocab=cfg.vocab)
     cont_single, _ = _serve_continuous(single, trace)
-    cont_sharded, rep_sharded = _serve_continuous(sharded, trace)
-
-    # the equality bar: the SAME trace decodes to the SAME tokens on the
-    # mesh as on one device (every request, every token)
+    cont_single["step_s"] = _measure_step_time(single, cfg.vocab)
     sync = synchronized_trace(N_SLOTS, prompt_len=PAD, max_new=6, seed=3,
                               vocab=cfg.vocab)
     sync_single = single.serve(sync)
-    sync_sharded = sharded.serve(sync)
-    bit_equal = all(sync_single.tokens(r.rid) == sync_sharded.tokens(r.rid)
-                    for r in sync)
 
-    ledger_exact = (rep_sharded.observed_vectors
-                    == rep_sharded.useful_vectors)
-    if program is not None:
-        led_sum, static_sum = reconcile(program, rep_sharded.records,
-                                        rep_sharded.observed_vectors)
-        core_sum, sched_total = reconcile_cores(
-            schedule, rep_sharded.records, rep_sharded.observed_vectors)
-        ledger_exact = (ledger_exact and led_sum == static_sum
-                        and core_sum == sched_total
-                        and sched_total == program.mvm_counts().scaled(
-                            rep_sharded.observed_vectors))
+    by_chunk = {}
+    step_times = {}
+    bit_equal = ledger_exact = stable = True
+    t_warm = 0.0
+    best_k = chunks[0]
+    for k in chunks:
+        t0 = time.time()
+        sharded = ShardedServeEngine(model, cfg, exe, params, mesh=mesh,
+                                     decode_chunk=k, **kw)
+        sharded.warmup()
+        t_warm += time.time() - t0
+        cont_sharded, rep_sharded = _serve_continuous(sharded, trace)
+        step_times[k] = _measure_step_time(sharded, cfg.vocab)
+        cont_sharded["step_s"] = step_times[k]
 
+        # the equality bar AT EVERY k: the same trace decodes to the same
+        # tokens on the mesh, whatever the chunk size (every request,
+        # every token)
+        sync_sharded = sharded.serve(sync)
+        bit_equal = bit_equal and all(
+            sync_single.tokens(r.rid) == sync_sharded.tokens(r.rid)
+            for r in sync)
+        ok = rep_sharded.observed_vectors == rep_sharded.useful_vectors
+        if program is not None:
+            led_sum, static_sum = reconcile(program, rep_sharded.records,
+                                            rep_sharded.observed_vectors)
+            core_sum, sched_total = reconcile_cores(
+                schedule, rep_sharded.records, rep_sharded.observed_vectors)
+            ok = (ok and led_sum == static_sum and core_sum == sched_total
+                  and sched_total == program.mvm_counts().scaled(
+                      rep_sharded.observed_vectors))
+        ledger_exact = ledger_exact and ok
+        # decode holds one executable per compiled ladder length (powers of
+        # two up to k), all built at warmup; serving must not add any
+        stable = stable and (sharded.compile_counts()
+                             == {"prefill": 1, "insert": 1,
+                                 "decode": len(sharded._ladder)})
+        by_chunk[str(k)] = cont_sharded
+        if cont_sharded["tok_s"] > by_chunk[str(best_k)]["tok_s"]:
+            best_k = k
+
+    # calibrated overlap roofline: T_step(k) = t_step_s + t_round_s / k.
+    # predicted 1->k_max gain must EXPLAIN the measured step-time delta.
+    roofline = OverlapRoofline.fit(step_times)
+    k_lo, k_hi = min(chunks), max(chunks)
+    measured_gain = step_times[k_lo] / max(step_times[k_hi], 1e-12)
+    predicted_gain = roofline.speedup(k_lo, k_hi)
+    residual = max(roofline.residuals(step_times).values())
+
+    best = by_chunk[str(best_k)]
+    # best-k sharded per-step cost relative to the single-device engine's
+    # (recorded for transparency: the residual over 1.0 at large k is SPMD
+    # compute overhead — the thread-devices split one CPU — not the host
+    # round, which the gated round-share isolates)
+    step_ratio = (min(step_times.values())
+                  / max(cont_single["step_s"], 1e-12))
+    # the gated step-level recovery: what fraction of a step is still the
+    # host round at k=k_hi, per the fitted roofline (25-50% at k=1)
+    round_share = ((roofline.t_round_s / k_hi)
+                   / max(roofline.predict_step_s(k_hi), 1e-12))
     case = {
         "arch": spec.arch_id,
         "exec": "aimc-programmed" if programmed else "digital",
@@ -251,33 +338,62 @@ def _bench_sharded_case(arch: str, programmed: bool, mesh, mesh_arg: str,
         "trace": f"poisson:{RATE:.0f} n={N_REQ} prompt={PROMPT} "
                  f"max_new={MAX_NEW}",
         "n_slots": N_SLOTS,
+        "chunks": list(chunks),
         "warmup_s": t_warm,
         "single": cont_single,
-        "sharded": cont_sharded,
-        "tok_s_ratio": cont_sharded["tok_s"] / max(cont_single["tok_s"],
-                                                   1e-9),
-        "compile_counts": sharded.compile_counts(),
-        "stable_shapes": sharded.compile_counts()
-        == {"prefill": 1, "insert": 1, "decode": 1},
+        "sharded_by_chunk": by_chunk,
+        "best_chunk": best_k,
+        "sharded": best,
+        "tok_s_ratio": best["tok_s"] / max(cont_single["tok_s"], 1e-9),
+        "tok_s_ratio_k1": (by_chunk[str(k_lo)]["tok_s"]
+                           / max(cont_single["tok_s"], 1e-9)),
+        "step_ratio": step_ratio,
+        "chunk_step_gain": step_times[k_lo] / max(min(step_times.values()),
+                                                  1e-12),
+        "round_share_k_hi": round_share,
+        "round_share_k1": (roofline.t_round_s
+                           / max(roofline.predict_step_s(k_lo), 1e-12)),
+        "roofline": {
+            "t_step_s": roofline.t_step_s,
+            "t_round_s": roofline.t_round_s,
+            "fit_residual_max": residual,
+            "predicted_gain": predicted_gain,
+            "measured_gain": measured_gain,
+            "k_lo": k_lo, "k_hi": k_hi,
+        },
+        "stable_shapes": stable,
         "sync_bit_equal": bit_equal,
         "ledger_exact": ledger_exact,
     }
     if verbose:
-        rows = [[mode, f"{d['tok_s']:.1f}", f"{d['makespan_s'] * 1e3:.0f}",
-                 f"{d['p50_latency_s'] * 1e3:.0f}",
-                 f"{d['p99_latency_s'] * 1e3:.0f}",
-                 f"{d['p50_ttft_s'] * 1e3:.0f}"]
-                for mode, d in (("single-device", cont_single),
-                                ("sharded", cont_sharded))]
+        rows = [["single k=1", f"{cont_single['tok_s']:.1f}",
+                 f"{cont_single['step_s'] * 1e3:.2f}",
+                 f"{cont_single['makespan_s'] * 1e3:.0f}",
+                 f"{cont_single['p50_latency_s'] * 1e3:.0f}",
+                 f"{cont_single['p99_latency_s'] * 1e3:.0f}"]]
+        rows += [[f"sharded k={k}", f"{d['tok_s']:.1f}",
+                  f"{d['step_s'] * 1e3:.2f}",
+                  f"{d['makespan_s'] * 1e3:.0f}",
+                  f"{d['p50_latency_s'] * 1e3:.0f}",
+                  f"{d['p99_latency_s'] * 1e3:.0f}"]
+                 for k, d in by_chunk.items()]
         print(table(
             f"{spec.arch_id} [{case['exec']}] engine on mesh {mesh_arg}",
-            ["engine", "tok/s", "makespan ms", "p50 lat ms", "p99 lat ms",
-             "p50 ttft ms"], rows))
-        print(f"  sharded/single tok/s ratio: {case['tok_s_ratio']:.2f} "
-              f"(host-platform devices share one CPU; equality, not "
-              f"speedup, is the bar)")
-        print(f"  shape-stable: {case['stable_shapes']}  "
-              f"sync bit-equal: {bit_equal}  ledger exact: {ledger_exact}")
+            ["engine", "tok/s", "step ms", "makespan ms", "p50 lat ms",
+             "p99 lat ms"], rows))
+        print(f"  best chunk k={best_k}: sharded/single tok/s ratio "
+              f"{case['tok_s_ratio']:.2f} (was {case['tok_s_ratio_k1']:.2f}"
+              f" at k=1); per-step cost {case['step_ratio']:.2f}x single, "
+              f"chunk step gain {case['chunk_step_gain']:.2f}x over k=1, "
+              f"host-round share {case['round_share_k1']:.0%} -> "
+              f"{case['round_share_k_hi']:.0%}")
+        print(f"  roofline: t_step={roofline.t_step_s * 1e3:.2f}ms "
+              f"t_round={roofline.t_round_s * 1e3:.2f}ms  "
+              f"predicted {k_lo}->{k_hi} gain {predicted_gain:.2f}x vs "
+              f"measured {measured_gain:.2f}x  (max residual "
+              f"{residual:.2%})")
+        print(f"  shape-stable: {stable}  sync bit-equal: {bit_equal}  "
+              f"ledger exact: {ledger_exact}")
     return case
 
 
@@ -320,8 +436,21 @@ def checks(results=None) -> list[Check]:
     ]
     sharded = results.get("sharded_cases")
     if sharded:
+        max_round_share = max(c["round_share_k_hi"] for c in sharded)
+        # gate the raw sweep gain on the arch where the round dominates
+        # the k=1 step (max across cases): a heavy-step arch's gain
+        # ceiling is ~1.2x and sits inside noise — its recovery is gated
+        # by the normalized round share instead
+        best_chunk_gain = max(c["chunk_step_gain"] for c in sharded)
+        max_resid = max(c["roofline"]["fit_residual_max"] for c in sharded)
+        gain_explained = all(
+            abs(c["roofline"]["predicted_gain"]
+                - c["roofline"]["measured_gain"])
+            <= ROOFLINE_RTOL * c["roofline"]["measured_gain"]
+            for c in sharded)
         out += [
-            Check("sharded engine bit-equal to single-device on the mesh",
+            Check("sharded engine bit-equal to single-device at every "
+                  "chunk size",
                   1.0 if all(c["sync_bit_equal"] for c in sharded) else 0.0,
                   1.0, rtol=0.01),
             Check("sharded engine shapes jit-stable (no recompile)",
@@ -330,6 +459,20 @@ def checks(results=None) -> list[Check]:
             Check("shard-aggregated per-core ledgers reconcile exactly",
                   1.0 if all(c["ledger_exact"] for c in sharded) else 0.0,
                   1.0, rtol=0.01),
+            Check("chunked decode amortizes the per-token host round "
+                  f"(k sweep step gain >= {CHUNK_GAIN_MIN}x where the "
+                  "round dominates)",
+                  1.0 if best_chunk_gain >= CHUNK_GAIN_MIN else 0.0, 1.0,
+                  rtol=0.01),
+            Check("host round reduced to a minor share of the k=max step "
+                  f"(<= {ROUND_SHARE_MAX:.0%} per roofline)",
+                  1.0 if max_round_share <= ROUND_SHARE_MAX else 0.0, 1.0,
+                  rtol=0.01),
+            Check("overlap roofline fit residual within gate",
+                  1.0 if max_resid <= ROOFLINE_RTOL else 0.0, 1.0,
+                  rtol=0.01),
+            Check("roofline-predicted overlap gain matches measured",
+                  1.0 if gain_explained else 0.0, 1.0, rtol=0.01),
         ]
     return out
 

@@ -8,7 +8,8 @@
 #                      docs smokes (docs-check + examples/quickstart.py, the
 #                      README front door), the engine smokes (single-device
 #                      poisson trace + the sharded engine on a forced
-#                      2-device host-platform mesh), and the kernel
+#                      2-device host-platform mesh, per-step and with the
+#                      k=8 scanned decode chunk), and the kernel
 #                      perf-smoke (bench_kernels in interpret mode, writes
 #                      BENCH_kernels.json, fails on check regression)
 #   ./ci.sh --install  pip-install pinned deps first (no-op in the baked image)
@@ -34,6 +35,11 @@ if [[ "${1:-}" == "--fast" ]]; then
         python -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
         --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
         --cores 2 --mesh data:2,model:1
+    echo "== engine smoke: chunked decode (k=8 scan) on the 2-device mesh =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=2 ${XLA_FLAGS:-}" \
+        python -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
+        --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
+        --cores 2 --mesh data:2,model:1 --decode-chunk 8
     echo "== server smoke: two models co-programmed, mixed-tenant trace =="
     # exits nonzero if per-tenant ledgers fail to reconcile or any tenant
     # with requests is starved of all tokens (runtime.server front door)

@@ -26,6 +26,10 @@ analytically; this module makes them RUN:
     over phases of the slowest core, the MLP/LSTM mutex chain) and
     ``pipelined_latency`` (= slowest stage, the CNN position pipeline),
     mirroring `costmodel.evaluate`'s treatment of `Workload.pipelined`.
+  * ``OverlapRoofline`` — the serving-loop latency law: T_step(k) =
+    t_step_s + t_round_s/k, fitted from measured chunked-decode step
+    times; predicts (and the serving bench gates) the host-overlap gain
+    of the k-step scanned decode loop (DESIGN.md §13).
 
 Builders for every paper multi-core case live at the bottom
 (`mlp_schedule`, `lstm_schedule`, `cnn_schedule`) and `from_program` lowers
@@ -167,6 +171,65 @@ def pipelined_latency(phase_times: Sequence[Sequence[float]]) -> float:
     """Position-level pipelining (CNN): at steady state every stage works on
     a different inference — per-inference latency is the slowest stage."""
     return max((t for ph in phase_times for t in ph), default=0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapRoofline:
+    """Calibrated host-overlap roofline for the chunked decode loop.
+
+    The serving engine's per-token cost splits into two empirical
+    constants (the SNIPPETS.md discipline: fit measured constants, then
+    gate predicted-vs-measured like bench_pipeline's ratio checks):
+
+        T_step(k) = t_step_s + t_round_s / k
+
+    ``t_step_s`` is the irreducible per-step device time (model math plus,
+    on a mesh, the model-axis reduction — it scales with neither k nor the
+    host), and ``t_round_s`` is the per-HOST-ROUND overhead (dispatch,
+    sync, readback, Python bookkeeping) that a k-step `lax.scan` chunk
+    amortizes over k steps. `fit` recovers both by least squares from
+    measured synchronous per-step times at >= 2 chunk sizes; `predict_
+    step_s` / `speedup` then EXPLAIN the measured chunked-decode gain, and
+    the serving bench gates |predicted - measured| (BENCH_serving.json).
+    """
+    t_step_s: float
+    t_round_s: float
+
+    @classmethod
+    def fit(cls, step_times: dict[int, float]) -> "OverlapRoofline":
+        """Least-squares fit of (t_step_s, t_round_s) over the basis
+        [1, 1/k]. ``step_times``: chunk size k -> measured mean seconds
+        per decode STEP (chunk wall / k) at that k. Needs >= 2 distinct
+        chunk sizes; negative fitted constants clamp to 0 (wall-clock
+        noise can tilt the regression, but time is not refundable)."""
+        ks = sorted(step_times)
+        if len(ks) < 2:
+            raise ValueError(
+                f"OverlapRoofline.fit needs step times at >= 2 chunk "
+                f"sizes, got {ks}")
+        a_mat = np.array([[1.0, 1.0 / k] for k in ks])
+        y = np.array([step_times[k] for k in ks])
+        (t_step, t_round), *_ = np.linalg.lstsq(a_mat, y, rcond=None)
+        return cls(t_step_s=max(float(t_step), 0.0),
+                   t_round_s=max(float(t_round), 0.0))
+
+    def predict_step_s(self, k: int) -> float:
+        """Predicted seconds per decode step at chunk size ``k``."""
+        if k < 1:
+            raise ValueError(f"chunk size must be >= 1, got {k}")
+        return self.t_step_s + self.t_round_s / k
+
+    def speedup(self, k_from: int = 1, k_to: int = 8) -> float:
+        """Predicted step-time ratio T(k_from) / T(k_to) — the overlap
+        gain the chunked loop should realize by moving from k_from to
+        k_to host-round amortization."""
+        return self.predict_step_s(k_from) / self.predict_step_s(k_to)
+
+    def residuals(self, step_times: dict[int, float]) -> dict[int, float]:
+        """k -> relative |predicted - measured| / measured, the
+        calibration quality the bench gates on."""
+        return {k: abs(self.predict_step_s(k) - t) / t
+                for k, t in step_times.items()}
 
 
 # ---------------------------------------------------------------------------

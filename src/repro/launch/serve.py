@@ -86,6 +86,12 @@ def parse_args(argv=None):
     ap.add_argument("--eos", type=int, default=-1,
                     help="EOS token id for early retirement (-1: disabled)")
     ap.add_argument("--admission", default="fifo", choices=["fifo", "sjf"])
+    ap.add_argument("--decode-chunk", dest="decode_chunk", type=int,
+                    default=1,
+                    help="decode steps per jitted scan chunk (k): retirement"
+                         " runs on-device and the host syncs once per k "
+                         "steps, double-buffered (DESIGN.md §13); 1 = the "
+                         "per-step loop")
     ap.add_argument("--mesh", default="1x1",
                     help="device mesh: 'data:D,model:M' serves through the "
                          "sharded engine (slots over data, crossbar bit "
@@ -149,6 +155,11 @@ def parse_args(argv=None):
     if args.static and (args.trace or args.arrivals):
         ap.error("--static serves one synchronized batch; staggered "
                  "traces/arrivals need the engine")
+    if args.decode_chunk < 1:
+        ap.error(f"--decode-chunk must be >= 1, got {args.decode_chunk}")
+    if args.static and args.decode_chunk > 1:
+        ap.error("--decode-chunk applies to the engine's scanned decode "
+                 "loop; --static is the legacy lockstep baseline")
     return args
 
 
@@ -200,7 +211,13 @@ def force_host_device_count(arg: str):
     """Parse a named --mesh spec and force the XLA host-platform device
     count to fit it. MUST run before the first jax backend use (the device
     count is fixed at backend init) — call it at the top of a ``__main__``
-    entry point, never from library code. Returns (shape, axes)."""
+    entry point, never from library code. Returns (shape, axes).
+
+    The flag is a silent no-op once the backend is up, so after setting it
+    this VERIFIES the device count actually covers the mesh (initializing
+    the backend right here if it was not already) and exits nonzero
+    otherwise — a data:2 run must never proceed on 1 device while claiming
+    a 2-device mesh."""
     import math
     import os
     shape, axes = parse_named_mesh(arg)
@@ -209,6 +226,16 @@ def force_host_device_count(arg: str):
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={need} "
             + os.environ.get("XLA_FLAGS", ""))
+        import jax
+        have = jax.device_count()
+        if have < need:
+            raise SystemExit(
+                f"--mesh {arg!r} needs {need} devices but the JAX backend "
+                f"is already initialized with {have}: XLA_FLAGS was set too "
+                f"late to take effect. Export XLA_FLAGS=--xla_force_host_"
+                f"platform_device_count={need} before the process first "
+                f"touches jax, or call force_host_device_count() before "
+                f"any jax use.")
     return shape, axes
 
 
@@ -446,7 +473,8 @@ def main(argv=None):
                       cache_dtype=jnp.float32, family=spec.family,
                       module=spec.module, program=program, schedule=schedule,
                       eos_id=None if args.eos < 0 else args.eos,
-                      admission=args.admission)
+                      admission=args.admission,
+                      decode_chunk=args.decode_chunk)
         if sharded:
             engine = ShardedServeEngine(model, cfg, exe, params, mesh=mesh,
                                         **common)
@@ -455,7 +483,8 @@ def main(argv=None):
         t0 = time.time()
         engine.warmup()
         print(f"[serve] engine warmed up in {time.time() - t0:.2f}s "
-              f"({n_slots} slots, prompt_pad={p}, max_seq={max_seq}"
+              f"({n_slots} slots, prompt_pad={p}, max_seq={max_seq}, "
+              f"decode_chunk={args.decode_chunk}"
               + (f"; sharded over {dict(zip(axes, shape))}" if sharded
                  else "")
               + f"; compiled {engine.compile_counts()})")

@@ -232,6 +232,22 @@ def slot_cache_specs(cache_shape, batch_axes, mesh):
     return jax.tree.map(one, cache_shape, batch_axes)
 
 
+def slot_state_specs(state_shape, mesh):
+    """Decode-slot retirement-state placement for the sharded engine.
+
+    The chunked decode loop keeps per-lane retirement rows ON DEVICE
+    ({active, gen, pos, max_new}, each [n_slots] — `ServeEngine._empty_
+    state`). They follow the lane split: [n_slots] leaves shard over the
+    data axes exactly like the slot cache, anything else replicates, and
+    `fit_spec` drops non-dividing axes — the same fallback rule as
+    `slot_cache_specs`."""
+    dp = dp_axes(mesh)
+    return jax.tree.map(
+        lambda leaf: (fit_spec(P(dp), leaf.shape, mesh) if leaf.ndim == 1
+                      else P(*([None] * leaf.ndim))),
+        state_shape)
+
+
 def strip_fsdp(specs, mesh):
     """Serving weight placement: keep `model` sharding, drop the FSDP axes
     (weights replicate across data rows — no per-token all-gathers). Used by

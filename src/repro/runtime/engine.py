@@ -21,13 +21,26 @@ and admission):
                       (`mask_batch_select`), so they never corrupt state or
                       accounting.
 
+  chunked decode      the decode closure advances ``decode_chunk`` steps
+                      inside ONE jitted `lax.scan` (DESIGN.md §13). The
+                      retirement predicates (max_new / EOS / max_seq cap)
+                      are traced, so the active mask, per-slot token and
+                      position counters live ON DEVICE for the whole chunk;
+                      the host syncs once per chunk, reading a [k, n_slots]
+                      token block plus per-step active/reason rows it
+                      mirrors into the per-request books. `serve()` double-
+                      buffers: chunk i+1 is dispatched before chunk i's
+                      token block is read, so host bookkeeping and
+                      admission overlap device compute.
+
   shape stability     exactly three device closures exist — prefill
                       [1, prompt_pad], insert (slot index is a traced
-                      scalar), decode [n_slots, 1] — each compiled ONCE at
-                      warmup. No shape depends on arrival order, prompt
-                      length, or live-request count, so a ragged Poisson
-                      trace runs the whole session on the warmup
-                      executables (asserted by `compile_counts`).
+                      scalar), decode ([n_slots, 1] x decode_chunk scanned
+                      steps) — each compiled ONCE at warmup. No shape
+                      depends on arrival order, prompt length, or
+                      live-request count, so a ragged Poisson trace runs
+                      the whole session on the warmup executables
+                      (asserted by `compile_counts`).
 
 The decode loop is wrapped in `fault_tolerance.resilient_step` (transient
 device errors retry; terminal ones — e.g. RESOURCE_EXHAUSTED — raise) and
@@ -64,7 +77,8 @@ Invariants (pinned by tests/test_engine.py, tests/test_sharded_engine.py)
   * shape stability: after `warmup()` every closure's executable cache
     holds exactly one entry, for any trace, on any mesh;
   * synchronized arrivals are bit-equal to `static_generate`; the sharded
-    engine is bit-equal to the single-device engine on ANY trace;
+    engine is bit-equal to the single-device engine on ANY trace; decode
+    is bit-equal across `decode_chunk` sizes (tests/test_chunked_decode.py);
   * slot reuse never leaks state (retired lanes are bit-frozen);
   * per-request ledgers reconcile exactly with `program.mvm_counts()`.
 """
@@ -151,9 +165,10 @@ class ServeReport:
     idle_vectors: int = 0          # frozen decode lanes (slot-idle waste)
     prefill_pad_vectors: int = 0   # prompt-padding lanes (prefill waste)
     # useful vectors counted FROM THE DEVICE LOOP (prompt lengths at the
-    # prefill call + busy lanes at each decode call) — independent of the
-    # per-request RequestRecord bookkeeping, so the two can actually
-    # disagree if the engine double- or under-counts (reconcile's job)
+    # prefill call + the scan's per-step active-lane counts read back with
+    # each chunk) — independent of the per-request RequestRecord
+    # bookkeeping, so the two can actually disagree if the engine double-
+    # or under-counts (reconcile's job)
     observed_vectors: int = 0
     wall_prefill_s: float = 0.0
     wall_decode_s: float = 0.0
@@ -201,16 +216,46 @@ class EngineSession:
     the old monolithic `serve()` loop kept as a local lives here so an
     external driver (`runtime.server.ModelServer`) can interleave sessions
     of SEVERAL engines under one clock. Device buffers (``cache``,
-    ``tok_buf``) are reassigned by `admit`/`step` (insert donates), so a
-    session must only ever be driven by its own engine's primitives."""
+    ``tok_buf``, ``state``) are reassigned by `admit`/`step` (insert
+    donates), so a session must only ever be driven by its own engine's
+    primitives. ``state`` is the DEVICE-resident per-lane retirement rows
+    ({active, gen, pos, max_new}, each [n_slots]) — the host never
+    rebuilds the active mask; it only mirrors retirement decisions read
+    back with each chunk's ys."""
     report: ServeReport
     slots: SlotAllocator
     slot_rec: dict[int, RequestRecord]    # slot -> live record
     cache: object
     tok_buf: object
-    active: list[bool]
+    state: object                          # device retirement rows (see above)
     retries0: int                          # lifetime counters at begin()
     flagged0: int
+    # host-side projection of each busy lane's remaining length/cap budget
+    # (slot -> steps). The chunk dispatcher picks the largest compiled
+    # ladder length that some lane can still use — EOS may retire a lane
+    # earlier than projected (bounded waste), never later.
+    rem: dict[int, int] = dataclasses.field(default_factory=dict)
+    # (record, first-token device handle) pairs whose prefill result the
+    # host has NOT read yet: with no EOS configured nothing about admission
+    # depends on the token's value, so the read defers to the next chunk
+    # sync instead of stalling the host behind an in-flight chunk.
+    lazy: list = dataclasses.field(default_factory=list)
+
+
+# traced retirement codes emitted by the decode scan (0 = still running);
+# priority eos > length > cap, matching the pre-chunk host loop
+_REASONS = {1: "length", 2: "eos", 3: "cap"}
+
+
+@dataclasses.dataclass
+class _PendingChunk:
+    """One in-flight decode chunk: the scan's device outputs plus the
+    dispatch-time clock marks `_process_chunk` needs to bill wall time
+    without double-counting admissions that overlap the chunk."""
+    ys: tuple          # (toks [n,S], active [n,S], reason [n,S])
+    t_wall: float      # perf_counter at dispatch
+    prefill0: float    # report.wall_prefill_s at dispatch
+    n: int             # dispatched chunk length (a ladder size)
 
 
 # ---------------------------------------------------------------------------
@@ -235,7 +280,7 @@ class ServeEngine:
                  module: str = "transformer", program=None, schedule=None,
                  eos_id: int | None = None, pad_id: int = 0,
                  max_retries: int = 2, straggler_threshold: float = 3.0,
-                 admission: str = "fifo"):
+                 admission: str = "fifo", decode_chunk: int = 1):
         if family == "audio":
             raise ValueError("ServeEngine serves decoder-only LMs; the "
                              "enc-dec audio family decodes via launch.steps")
@@ -252,6 +297,10 @@ class ServeEngine:
         self.program, self.schedule = program, schedule
         self.eos_id, self.pad_id = eos_id, pad_id
         self.admission = admission
+        if decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {decode_chunk}")
+        self.decode_chunk = decode_chunk
+        self._ladder = self._chunk_ladder(decode_chunk)
         self.recurrent = module in RECURRENT_MODULES
         self.monitor = StragglerMonitor(threshold=straggler_threshold)
         self._retries = 0
@@ -264,20 +313,37 @@ class ServeEngine:
         self._axes = self._probe_batch_axes()
         self._build_closures(max_retries)
 
+    @staticmethod
+    def _chunk_ladder(k: int) -> tuple[int, ...]:
+        """The compiled chunk lengths: every power of two up to ``k``, plus
+        ``k`` itself. ALL ladder lengths compile at warmup; the dispatcher
+        then picks per chunk (`_pick_chunk`), so serving never recompiles
+        whatever mix of lengths a ragged trace needs."""
+        ladder = {1, k}
+        p = 2
+        while p < k:
+            ladder.add(p)
+            p *= 2
+        return tuple(sorted(ladder))
+
     def _build_closures(self, max_retries: int):
-        """Compile the three device closures. `ShardedServeEngine` overrides
+        """Compile the device closures. `ShardedServeEngine` overrides
         this to pin every input/output to a mesh placement; the math
         (`_prefill_fn`/`_insert_fn`/`_decode_fn`) is shared verbatim."""
         self._jit_prefill = jax.jit(self._prefill_fn)
-        self._jit_insert = jax.jit(self._insert_fn, donate_argnums=(0, 2))
+        self._jit_insert = jax.jit(self._insert_fn,
+                                   donate_argnums=(0, 2, 4))
         # the decode cache is NOT donated: the step runs under
         # resilient_step, and a retry after a transient failure must be able
         # to re-present the same input buffers (donation would have
         # invalidated them on the failed attempt)
-        self._jit_decode = jax.jit(self._decode_fn)
-        self._safe_decode = resilient_step(
-            self._jit_decode, max_retries=max_retries,
-            on_retry=lambda attempt, e: self._count_retry())
+        self._decode_jits = {
+            n: jax.jit(functools.partial(self._decode_fn, length=n))
+            for n in self._ladder}
+        self._safe_decodes = {
+            n: resilient_step(f, max_retries=max_retries,
+                              on_retry=lambda attempt, e: self._count_retry())
+            for n, f in self._decode_jits.items()}
 
     # -- closures ------------------------------------------------------------
     def _probe_batch_axes(self):
@@ -309,30 +375,81 @@ class ServeEngine:
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         return tok, cache
 
-    def _insert_fn(self, cache, cache1, tok_buf, tok1, slot):
-        """Write a prefilled request's state into decode lane ``slot``."""
+    def _insert_fn(self, cache, cache1, tok_buf, tok1, state, slot, pos0,
+                   max_new):
+        """Write a prefilled request's state into decode lane ``slot`` —
+        including the lane's on-device retirement row (active flag,
+        generated-token count, KV position, decode budget), so the decode
+        closure never needs a host-built mask."""
         def put(big, one, ax):
             return jax.lax.dynamic_update_slice_in_dim(
                 big, one.astype(big.dtype), slot, axis=ax)
 
         cache = jax.tree.map(put, cache, cache1, self._axes)
         tok_buf = jax.lax.dynamic_update_slice(tok_buf, tok1, (slot, 0))
-        return cache, tok_buf
+        # gen starts at 1: the prefill's first token counts against max_new
+        state = {"active": state["active"].at[slot].set(True),
+                 "gen": state["gen"].at[slot].set(1),
+                 "pos": state["pos"].at[slot].set(pos0),
+                 "max_new": state["max_new"].at[slot].set(max_new)}
+        return cache, tok_buf, state
 
-    def _decode_fn(self, params, cache, tokens, active):
-        """One dense decode step; inactive lanes are bit-frozen."""
-        if self.module == "transformer":
-            logits, new_cache = self.model.decode_step(
-                params, cache, tokens, self.cfg, self.exe, ragged=True)
-        else:
-            logits, new_cache = self.model.decode_step(
-                params, cache, tokens, self.cfg, self.exe)
-        new_cache = jax.tree.map(
-            lambda n, o, ax: mask_batch_select(n, o, active, ax),
-            new_cache, cache, self._axes)
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        tok = jnp.where(active[:, None], tok, tokens)
-        return tok, new_cache
+    def _decode_fn(self, params, cache, tok_buf, state, length):
+        """``length`` dense decode steps in ONE jitted `lax.scan`; inactive
+        lanes are bit-frozen. Retirement predicates (max_new / EOS /
+        max_seq cap) are traced, so the active mask and per-lane counters
+        never leave the device mid-chunk. ``length`` is host-chosen per
+        dispatch from the COMPILED LADDER (`_chunk_ladder`): the host
+        mirrors every lane's length/cap budget exactly, so it picks the
+        largest ladder length no greater than the longest remaining budget
+        — a chunk never runs past the last live lane (the fixed-k variant
+        over-ran ragged traces by 2-3x decode steps at k=8), and the
+        device needs no early-exit predicate (an `active.any()` loop
+        condition would be a per-token cross-device collective).
+
+        Returns (tok_buf, cache, state, ys) with per-step chunk outputs
+        ys = (toks [length,S], active-at-entry [length,S], reason
+        [length,S]). The per-step busy count is NOT reduced on device:
+        `active.sum()` would be the only other cross-device collective in
+        the data-sharded loop (one all-reduce per token) — the host pops
+        it from the ``active`` rows it reads back anyway. ys rides outside
+        ``state`` because a subsequent insert donates the state buffers
+        while a chunk's readback may still be pending (double-buffered
+        serve)."""
+        def one_step(carry, _):
+            cache, tokens, st = carry
+            active = st["active"]
+            if self.module == "transformer":
+                logits, new_cache = self.model.decode_step(
+                    params, cache, tokens, self.cfg, self.exe, ragged=True)
+            else:
+                logits, new_cache = self.model.decode_step(
+                    params, cache, tokens, self.cfg, self.exe)
+            new_cache = jax.tree.map(
+                lambda n, o, ax: mask_batch_select(n, o, active, ax),
+                new_cache, cache, self._axes)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            tok = jnp.where(active[:, None], tok, tokens)
+            emitted = tok[:, 0]
+            gen = st["gen"] + active.astype(jnp.int32)
+            pos = st["pos"] + active.astype(jnp.int32)
+            done_len = gen >= st["max_new"]
+            done_eos = (jnp.zeros_like(active) if self.eos_id is None
+                        else emitted == jnp.int32(self.eos_id))
+            # the KV write position is bounded by max_seq; O(1)-state
+            # recurrent archs have no such cap
+            done_cap = (jnp.zeros_like(active) if self.recurrent
+                        else pos >= jnp.int32(self.max_seq))
+            reason = jnp.where(done_eos, 2, jnp.where(done_len, 1,
+                               jnp.where(done_cap, 3, 0))).astype(jnp.int32)
+            reason = jnp.where(active, reason, 0)
+            new_st = {"active": active & (reason == 0), "gen": gen,
+                      "pos": pos, "max_new": st["max_new"]}
+            return (new_cache, tok, new_st), (emitted, active, reason)
+
+        (cache, tok_buf, state), ys = jax.lax.scan(
+            one_step, (cache, tok_buf, state), None, length=length)
+        return tok_buf, cache, state, ys
 
     # -- warmup / compile accounting ----------------------------------------
     def _empty_cache(self):
@@ -346,27 +463,45 @@ class ServeEngine:
         buffers later steps feed back, costing a recompile."""
         return jnp.zeros((self.n_slots, 1), jnp.int32)
 
+    def _empty_state(self):
+        """The device-resident per-lane retirement rows, all [n_slots]:
+        active mask, generated-token and KV-position counters, decode
+        budget. Sharded engine override commits them to the mesh. Each leaf
+        must be a DISTINCT buffer — insert donates the whole dict, and XLA
+        rejects donating one buffer twice."""
+        def z():
+            return jnp.zeros((self.n_slots,), jnp.int32)
+        return {"active": jnp.zeros((self.n_slots,), bool),
+                "gen": z(), "pos": z(), "max_new": z()}
+
     def warmup(self):
-        """Compile all three closures once, outside the serving clock."""
+        """Compile every closure (prefill, insert, and one decode
+        executable per ladder length) once, outside the serving clock."""
         tokens = jnp.zeros((1, self.prompt_pad), jnp.int32)
         vl = jnp.ones((1,), jnp.int32)
         tok1, cache1 = self._jit_prefill(self.params, tokens, vl)
         cache = self._empty_cache()
         tok_buf = self._empty_tok_buf()
-        cache, tok_buf = self._jit_insert(cache, cache1, tok_buf, tok1,
-                                          jnp.int32(0))
-        active = jnp.zeros((self.n_slots,), bool)
-        tok, cache = self._jit_decode(self.params, cache, tok_buf, active)
-        jax.block_until_ready(tok)
+        state = self._empty_state()
+        cache, tok_buf, state = self._jit_insert(
+            cache, cache1, tok_buf, tok1, state, jnp.int32(0), jnp.int32(1),
+            jnp.int32(1))
+        for n in self._ladder:
+            tok_buf, cache, state, ys = self._decode_jits[n](
+                self.params, cache, tok_buf, state)
+        jax.block_until_ready(ys)
         return self.compile_counts()
 
     def compile_counts(self) -> dict[str, int]:
         """Executable-cache sizes of the engine closures. After `warmup`,
-        serving any trace must leave every count at 1 — the shape-stability
-        contract (pinned by tests/test_engine.py)."""
+        serving any trace must leave prefill/insert at 1 and decode at
+        ``len(self._ladder)`` (one executable per compiled chunk length,
+        all warmed up front) — the shape-stability contract (pinned by
+        tests/test_engine.py and tests/test_chunked_decode.py)."""
         return {"prefill": self._jit_prefill._cache_size(),
                 "insert": self._jit_insert._cache_size(),
-                "decode": self._jit_decode._cache_size()}
+                "decode": sum(f._cache_size()
+                              for f in self._decode_jits.values())}
 
     def _count_retry(self):
         self._retries += 1
@@ -388,17 +523,25 @@ class ServeEngine:
         return (jnp.asarray(padded, jnp.int32)[None],
                 jnp.asarray([len(prompt)], jnp.int32))
 
-    def _prefill_request(self, req: Request, rec: RequestRecord):
-        """Run the [1, prompt_pad] prefill; book vectors and the first token."""
+    def _prefill_request(self, req: Request, rec: RequestRecord,
+                         lazy: bool = False):
+        """Run the [1, prompt_pad] prefill; book the vector counts. The
+        caller decides whether the first token is delivered output (an
+        instant EOS is control, not payload — `admit`). With ``lazy`` the
+        host does NOT block on the result: ``first`` comes back None and
+        the caller reads the token handle at the next chunk sync — the
+        prefill itself queues behind any in-flight chunk on the device, so
+        blocking here would stall admission on decode compute."""
         tokens, vl = self._pad_prompt(req.prompt)
         t0 = time.perf_counter()
         tok1, cache1 = self._jit_prefill(self.params, tokens, vl)
-        tok1.block_until_ready()
+        first = None
+        if not lazy:
+            tok1.block_until_ready()
+            first = int(tok1[0, 0])
         dt = time.perf_counter() - t0
         rec.prefill_vectors = len(req.prompt)
         rec.pad_vectors = self.prompt_pad - len(req.prompt)
-        first = int(tok1[0, 0])
-        rec.tokens.append(first)
         return tok1, cache1, first, dt
 
     # -- session primitives --------------------------------------------------
@@ -421,7 +564,7 @@ class ServeEngine:
             slot_rec={},
             cache=self._empty_cache(),
             tok_buf=self._empty_tok_buf(),
-            active=[False] * self.n_slots,
+            state=self._empty_state(),
             retries0=self._retries,
             flagged0=len(self.monitor.flagged))
 
@@ -438,77 +581,174 @@ class ServeEngine:
         report = sess.report
         rec = RequestRecord(request=req, t_admit=now)
         report.records[req.rid] = rec
-        tok1, cache1, first, dt = self._prefill_request(req, rec)
+        # with no EOS configured, NOTHING about admission depends on the
+        # first token's value — defer the host read to the next chunk sync
+        # so admission overlaps the in-flight chunk instead of waiting
+        # behind it on the device queue
+        lazy = self.eos_id is None
+        tok1, cache1, first, dt = self._prefill_request(req, rec, lazy)
         now += dt
         report.wall_prefill_s += dt
         report.n_prefills += 1
         report.prefill_pad_vectors += rec.pad_vectors
         report.observed_vectors += len(req.prompt)
         rec.t_first = now
-        eos_hit = self.eos_id is not None and first == self.eos_id
-        if req.max_new == 1 or eos_hit:
-            self._retire(rec, "eos" if eos_hit else "length", now)
+        if lazy:
+            sess.lazy.append((rec, tok1))
+        else:
+            eos_hit = first == self.eos_id
+            if not eos_hit:
+                # the EOS token is control, not payload: it never lands in
+                # `rec.tokens` (so generated_tokens / tok_s count delivered
+                # output only), but its vector stays in the CM_* books
+                rec.tokens.append(first)
+            if eos_hit:
+                self._retire(rec, "eos", now)
+                return now
+        if req.max_new == 1:
+            self._retire(rec, "length", now)
             return now
         slot = sess.slots.alloc(req.rid)
         sess.slot_rec[slot] = rec
+        rem = req.max_new - 1
+        if not self.recurrent:
+            rem = min(rem, self.max_seq - len(req.prompt))
+        sess.rem[slot] = rem
         t0 = time.perf_counter()
-        sess.cache, sess.tok_buf = self._jit_insert(
-            sess.cache, cache1, sess.tok_buf, tok1, jnp.int32(slot))
-        sess.tok_buf.block_until_ready()
+        sess.cache, sess.tok_buf, sess.state = self._jit_insert(
+            sess.cache, cache1, sess.tok_buf, tok1, sess.state,
+            jnp.int32(slot), jnp.int32(len(req.prompt)),
+            jnp.int32(req.max_new))
+        if not lazy:
+            # the blocking (EOS-aware) path bills the full prefill+insert
+            # wall here; the lazy path bills dispatch only — the device
+            # time lands in the next chunk's window, where it actually
+            # serializes (insert chains on the in-flight chunk's outputs)
+            sess.tok_buf.block_until_ready()
         ins = time.perf_counter() - t0
         now += ins
         report.wall_prefill_s += ins
-        sess.active[slot] = True
         return now
 
-    def step(self, sess: "EngineSession", now: float) -> float:
-        """One dense decode step + retirement bookkeeping; returns the
-        advanced clock. Caller guarantees ``sess.slots.n_busy > 0``."""
-        report = sess.report
-        amask = jnp.asarray(sess.active)
+    def _pick_chunk(self, sess: "EngineSession",
+                    responsive: bool = False) -> int:
+        """Chunk length for the next dispatch, from the compiled ladder.
+
+        Default: the largest ladder length not exceeding the longest
+        PROJECTED remaining budget across busy lanes — maximum host-round
+        amortization, and a chunk never runs past the last projected-live
+        lane. ``responsive`` (requests are waiting for a slot): the
+        SMALLEST ladder length covering the earliest projected retirement,
+        so the freed slot reaches the admission loop promptly instead of
+        idling to the end of a long chunk. 0 means every in-flight lane is
+        projected retired (a dispatch would scan an all-frozen batch —
+        skip it)."""
+        rems = [r for r in (sess.rem.get(s, 0) for s in sess.slot_rec)
+                if r > 0]
+        if not rems:
+            return 0
+        if responsive:
+            target = min(rems)
+            for n in self._ladder:
+                if n >= target:
+                    return n
+            return self._ladder[-1]
+        target = max(rems)
+        for n in reversed(self._ladder):
+            if n <= target:
+                return n
+        return 1
+
+    def _dispatch_chunk(self, sess: "EngineSession",
+                        n: int | None = None) -> _PendingChunk:
+        """Launch one ``n``-step scan (a compiled ladder length, default
+        host-picked) WITHOUT waiting for its results; `sess`'s device
+        buffers advance to the chunk's outputs so the next chunk (or an
+        insert) chains on-device."""
+        if n is None:
+            n = self._pick_chunk(sess) or 1
         t0 = time.perf_counter()
-        sess.tok_buf, sess.cache = self._safe_decode(
-            self.params, sess.cache, sess.tok_buf, amask)
-        sess.tok_buf.block_until_ready()
-        dt = time.perf_counter() - t0
+        sess.tok_buf, sess.cache, sess.state, ys = self._safe_decodes[n](
+            self.params, sess.cache, sess.tok_buf, sess.state)
+        for slot in sess.slot_rec:
+            sess.rem[slot] = max(0, sess.rem.get(slot, 0) - n)
+        return _PendingChunk(ys=ys, t_wall=t0,
+                             prefill0=sess.report.wall_prefill_s, n=n)
+
+    def _process_chunk(self, sess: "EngineSession", pend: _PendingChunk,
+                       now: float) -> float:
+        """Sync one dispatched chunk and mirror its on-device retirement
+        rows into the host books. Billing: the chunk costs (wall since
+        dispatch) minus any prefill/insert wall already billed inside that
+        window — the double-buffered loop admits WHILE a chunk flies."""
+        report = sess.report
+        toks, acts, reasons = jax.device_get(pend.ys)
+        # any admission since the last sync has its prefill long done by
+        # now (the chunk we just read back queued after it) — the deferred
+        # first-token reads cost a host copy, not a wait
+        self._resolve_firsts(sess)
+        overlap = report.wall_prefill_s - pend.prefill0
+        dt = max(time.perf_counter() - pend.t_wall - overlap, 0.0)
         now += dt
         report.wall_decode_s += dt
-        report.n_steps += 1
-        report.idle_vectors += self.n_slots - sess.slots.n_busy
-        report.observed_vectors += sess.slots.n_busy
-        self._step_no += 1
-        self.monitor.record(self._step_no, dt)
-        host_tok = jax.device_get(sess.tok_buf)[:, 0].tolist()
+        ran = int(toks.shape[0])
+        busy = int(acts.sum())
+        report.n_steps += ran
+        # busy-lane counts come from the DEVICE (chunk ys), independent of
+        # the per-request records — reconcile compares two real countings
+        report.observed_vectors += busy
+        report.idle_vectors += self.n_slots * ran - busy
+        self._step_no += ran
+        self.monitor.record(self._step_no, dt / max(ran, 1))
 
-        for slot in list(sess.slot_rec):
-            rec = sess.slot_rec[slot]
-            rec.decode_vectors += 1
-            rec.tokens.append(host_tok[slot])
-            done_len = len(rec.tokens) >= rec.request.max_new
-            done_eos = (self.eos_id is not None
-                        and host_tok[slot] == self.eos_id)
-            # the KV write position is bounded by max_seq; O(1)-state
-            # recurrent archs have no such cap
-            done_cap = (not self.recurrent
-                        and len(rec.request.prompt) + rec.decode_vectors
-                        >= self.max_seq)
-            if done_len or done_eos or done_cap:
-                self._retire(rec, "eos" if done_eos
-                             else ("length" if done_len else "cap"), now)
-                sess.slot_rec.pop(slot)
-                sess.slots.release(slot)
-                sess.active[slot] = False
+        for s in range(ran):
+            for slot in list(sess.slot_rec):
+                if not acts[s, slot]:
+                    continue    # freed/refilled after this chunk's dispatch
+                rec = sess.slot_rec[slot]
+                rec.decode_vectors += 1
+                r = int(reasons[s, slot])
+                if r != 2:      # EOS is control, not payload (see admit)
+                    rec.tokens.append(int(toks[s, slot]))
+                if r:
+                    self._retire(rec, _REASONS[r], now)
+                    sess.slot_rec.pop(slot)
+                    sess.slots.release(slot)
+                    sess.rem.pop(slot, None)
         return now
 
+    @staticmethod
+    def _resolve_firsts(sess: "EngineSession"):
+        """Read back the deferred prefill first-tokens (lazy admission,
+        `admit`). Runs before any decode-token append for those records —
+        a record admitted after a chunk's dispatch shows acts=False for
+        that whole chunk, so its first token always lands at index 0."""
+        for rec, tok1 in sess.lazy:
+            rec.tokens.insert(0, int(tok1[0, 0]))
+        sess.lazy.clear()
+
+    def step(self, sess: "EngineSession", now: float) -> float:
+        """One SYNCHRONOUS decode chunk (``decode_chunk`` dense steps,
+        dispatched and immediately processed) + retirement bookkeeping;
+        returns the advanced clock. Caller guarantees ``sess.slots.n_busy
+        > 0``. External drivers (the multi-tenant server) see retirement
+        and quota accounting land on chunk boundaries; `serve()` instead
+        double-buffers dispatch/process for comm/compute overlap."""
+        return self._process_chunk(sess, self._dispatch_chunk(sess), now)
+
     def cancel_active(self, sess: "EngineSession", now: float):
-        """Retire every in-flight request with reason "cap" (step budget)."""
+        """Retire every in-flight request with reason "cap" (step budget).
+        The device-side active rows are left stale on purpose — a canceled
+        session is never stepped again."""
+        self._resolve_firsts(sess)
         for slot in list(sess.slot_rec):
             self._retire(sess.slot_rec.pop(slot), "cap", now)
             sess.slots.release(slot)
-            sess.active[slot] = False
+            sess.rem.pop(slot, None)
 
     def finish(self, sess: "EngineSession", now: float) -> ServeReport:
         """Close the session and return its report."""
+        self._resolve_firsts(sess)
         sess.report.makespan_s = now
         sess.report.retries = self._retries - sess.retries0
         sess.report.stragglers = list(self.monitor.flagged[sess.flagged0:])
@@ -520,12 +760,19 @@ class ServeEngine:
 
         The engine clock starts at 0 and advances by the measured wall time
         of each device call; when every slot is empty it jumps to the next
-        arrival. Request arrival times are in the same (second) units."""
+        arrival. Request arrival times are in the same (second) units.
+
+        Decode is DOUBLE-BUFFERED: chunk i+1 is dispatched before chunk
+        i's token block is read back, so host bookkeeping and admission
+        overlap device compute. Per-request tokens are unaffected — decode
+        lanes are row-independent, so what a request generates never
+        depends on which chunk (or which lane-mates) it rode with."""
         queue = Batcher(requests, policy=self.admission)
         sess = self.begin()
         now = 0.0
+        pending: _PendingChunk | None = None
 
-        while len(queue) or sess.slots.n_busy:
+        while len(queue) or sess.slots.n_busy or pending is not None:
             # ---- admission + slot refill (continuous batching) ------------
             while sess.slots.n_free:
                 req = queue.pop_ready(now)
@@ -533,18 +780,26 @@ class ServeEngine:
                     break
                 now = self.admit(sess, req, now)
 
-            if not sess.slots.n_busy:
+            if not sess.slots.n_busy and pending is None:
                 nxt = queue.next_arrival()
                 if nxt is None:
                     break
                 now = max(now, nxt)       # idle: jump to the next arrival
                 continue
 
-            # ---- one dense decode step ------------------------------------
-            if sess.report.n_steps >= max_steps:
+            # ---- one decode chunk, double-buffered ------------------------
+            in_flight = pending.n if pending is not None else 0
+            capped = sess.report.n_steps + in_flight >= max_steps
+            n_next = (self._pick_chunk(sess, responsive=bool(len(queue)))
+                      if sess.slots.n_busy else 0)
+            cur = (self._dispatch_chunk(sess, n_next)
+                   if n_next and not capped else None)
+            if pending is not None:
+                now = self._process_chunk(sess, pending, now)
+            pending = cur
+            if capped and pending is None:
                 self.cancel_active(sess, now)
                 break
-            now = self.step(sess, now)
 
         return self.finish(sess, now)
 
@@ -575,9 +830,9 @@ class ShardedServeEngine(ServeEngine):
     lines over the mesh's ``model`` axis (`shardings.serve_engine_param_
     specs` — the layout `core.schedule` proves exact), every digital leaf
     replicates over ``data`` (weights-stationary serving), and the decode
-    slots — KV caches, recurrent state, the token buffer, the active mask —
-    shard over the data axes so each data-parallel device advances its own
-    lanes. All three closures are compiled ONCE with `NamedSharding`-pinned
+    slots — KV caches, recurrent state, the token buffer, the retirement
+    state rows — shard over the data axes so each data-parallel device
+    advances its own lanes. All three closures are compiled ONCE with `NamedSharding`-pinned
     inputs AND outputs, so the cache lives sharded on-device across the
     whole serving session; the host-side loop (admission, slots,
     accounting) is inherited unchanged.
@@ -609,7 +864,8 @@ class ShardedServeEngine(ServeEngine):
 
         from repro.launch.mesh import dp_axes
         from repro.launch.shardings import (fit_spec, serve_engine_param_specs,
-                                            slot_cache_specs, to_named)
+                                            slot_cache_specs, slot_state_specs,
+                                            to_named)
         mesh = self.mesh
 
         def named_replicated(shape_tree):
@@ -632,9 +888,15 @@ class ShardedServeEngine(ServeEngine):
         tok_sh = NamedSharding(
             mesh, fit_spec(P(dp, None), (self.n_slots, 1), mesh))
         self._tok_sh = tok_sh
-        act_sh = NamedSharding(mesh, fit_spec(P(dp), (self.n_slots,), mesh))
-        self._act_sh = act_sh
+        state_shape = jax.eval_shape(lambda: ServeEngine._empty_state(self))
+        self._state_sh = to_named(slot_state_specs(state_shape, mesh), mesh)
         repl = NamedSharding(mesh, P())   # fully replicated, any rank
+        # chunk outputs: per-step [n, n_slots] rows follow the lane split
+        # (slots over data axes); the spec is shape-free, so one sharding
+        # serves every compiled ladder length
+        ys_row = NamedSharding(mesh, fit_spec(
+            P(None, dp), (self.decode_chunk, self.n_slots), mesh))
+        ys_sh = (ys_row, ys_row, ys_row)
 
         tokens_s = jax.ShapeDtypeStruct((1, self.prompt_pad), jnp.int32)
         vl_s = jax.ShapeDtypeStruct((1,), jnp.int32)
@@ -647,16 +909,22 @@ class ShardedServeEngine(ServeEngine):
             in_shardings=(self._param_sh, repl, repl),
             out_shardings=(repl, cache1_sh))
         self._jit_insert = jax.jit(
-            self._insert_fn, donate_argnums=(0, 2),
-            in_shardings=(self._cache_sh, cache1_sh, tok_sh, repl, repl),
-            out_shardings=(self._cache_sh, tok_sh))
-        self._jit_decode = jax.jit(
-            self._decode_fn,
-            in_shardings=(self._param_sh, self._cache_sh, tok_sh, act_sh),
-            out_shardings=(tok_sh, self._cache_sh))
-        self._safe_decode = resilient_step(
-            self._jit_decode, max_retries=max_retries,
-            on_retry=lambda attempt, e: self._count_retry())
+            self._insert_fn, donate_argnums=(0, 2, 4),
+            in_shardings=(self._cache_sh, cache1_sh, tok_sh, repl,
+                          self._state_sh, repl, repl, repl),
+            out_shardings=(self._cache_sh, tok_sh, self._state_sh))
+        self._decode_jits = {
+            n: jax.jit(
+                functools.partial(self._decode_fn, length=n),
+                in_shardings=(self._param_sh, self._cache_sh, tok_sh,
+                              self._state_sh),
+                out_shardings=(tok_sh, self._cache_sh, self._state_sh,
+                               ys_sh))
+            for n in self._ladder}
+        self._safe_decodes = {
+            n: resilient_step(f, max_retries=max_retries,
+                              on_retry=lambda attempt, e: self._count_retry())
+            for n, f in self._decode_jits.items()}
 
     def _empty_cache(self):
         # created ON the mesh placement (models' sharding-annotated init)
@@ -666,6 +934,9 @@ class ShardedServeEngine(ServeEngine):
 
     def _empty_tok_buf(self):
         return jax.device_put(super()._empty_tok_buf(), self._tok_sh)
+
+    def _empty_state(self):
+        return jax.device_put(super()._empty_state(), self._state_sh)
 
     def device_ledgers(self, report: ServeReport) -> dict:
         """model-axis device slot -> CM_* totals for this run, through the

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import json
 import os
+import statistics
 import time
 from typing import Callable
 
@@ -97,26 +98,36 @@ def resilient_step(step_fn: Callable, max_retries: int = 2,
 
 
 class StragglerMonitor:
-    """EWMA step-time tracker with a slow-step callback."""
+    """EWMA step-time tracker with a slow-step callback.
+
+    The EWMA baseline is seeded from the MEDIAN of the first ``warmup``
+    samples, not the first sample alone: a slow first step would both
+    escape detection (nothing to compare against) and poison the baseline
+    so steps 2..warmup could never be flagged. Samples buffer until the
+    warmup window fills; flagging starts on the first post-seed sample."""
 
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
                  warmup: int = 3, on_straggler=None):
         self.threshold = threshold
         self.alpha = alpha
-        self.warmup = warmup
+        self.warmup = max(warmup, 1)
         self.on_straggler = on_straggler
         self.ewma = None
         self.count = 0
+        self._warmup_buf: list[float] = []
         self.flagged: list[tuple[int, float, float]] = []
 
     def record(self, step: int, dt: float) -> bool:
         """Record one step time; returns True if flagged as straggler."""
         self.count += 1
         if self.ewma is None:
-            self.ewma = dt
+            self._warmup_buf.append(dt)
+            if len(self._warmup_buf) < self.warmup:
+                return False
+            self.ewma = statistics.median(self._warmup_buf)
+            self._warmup_buf.clear()
             return False
-        is_slow = (self.count > self.warmup and
-                   dt > self.threshold * self.ewma)
+        is_slow = dt > self.threshold * self.ewma
         if is_slow:
             self.flagged.append((step, dt, self.ewma))
             if self.on_straggler:

@@ -33,11 +33,14 @@ registry + routing + policy layer on top:
                    ``program.mvm_counts()`` (`tenancy.reconcile_tenants`).
 
 The serving loop is round-robin over models in registry order: admit
-tenant-fairly into every model's free slots, then run one dense decode step
-per model with busy lanes, advancing the shared clock by measured wall
-time. A single-model server is the PR-4 engine loop verbatim (the session
-primitives only factor it), so single-model output is bit-equal to
-`ServeEngine.serve`.
+tenant-fairly into every model's free slots, then run one SYNCHRONOUS
+decode chunk (``decode_chunk`` scanned steps — `ServeEngine.step`,
+DESIGN.md §13) per model with busy lanes, advancing the shared clock by
+measured wall time. Retirements, slot releases and therefore tenant-quota
+accounting all land on chunk boundaries. A single-model server at chunk 1
+is the PR-4 engine loop verbatim (the session primitives only factor it),
+so single-model output is bit-equal to `ServeEngine.serve` — and stays
+bit-equal at any chunk size, because decode lanes are row-independent.
 
 Public surface
   * `ModelSpec`    — one registry entry (name, arch, aimc|digital).
@@ -233,7 +236,8 @@ class ModelServer:
                     if sess.slots.n_busy > busy0:   # took a slot (not
                         in_flight[t] += 1           # prefill-only retired)
 
-            # ---- one dense decode step per busy model ----------------------
+            # ---- one decode chunk per busy model (quota accounting lands
+            # on the chunk boundary: step() syncs every retirement) ----------
             stepped = False
             for m, eng in self.engines.items():
                 sess = sessions[m]
@@ -309,13 +313,15 @@ def build_server(specs: Sequence[ModelSpec],
                  max_seq: int | None = None, n_contexts: int = 1,
                  tiles_per_context: int | None = None, aimc_cfg=None,
                  seed: int = 0, eos_id: int | None = None, mesh=None,
-                 cache_dtype=None) -> ModelServer:
+                 cache_dtype=None, decode_chunk: int = 1) -> ModelServer:
     """Initialize every registered model, co-program the AIMC members
     against ONE shared `TilePool`, and wrap the engines in a `ModelServer`.
 
     ``tenants=None`` defaults to one tenant per model (weight 1, fifo).
     ``mesh`` (a named JAX mesh) serves every model through
-    `ShardedServeEngine` on that mesh. The default ``aimc_cfg`` uses the
+    `ShardedServeEngine` on that mesh. ``decode_chunk`` sets every
+    engine's scanned-decode chunk size (tokens are chunk-invariant;
+    quota accounting lands on chunk boundaries). The default ``aimc_cfg`` uses the
     deployment configuration (fixed DAC input scale) so programmed output
     is batch-shape independent. Raises `core.program.CapacityError` when
     the co-programmed models exceed ``tiles_per_context`` together."""
@@ -367,7 +373,8 @@ def build_server(specs: Sequence[ModelSpec],
             exe = Execution(compute_dtype="float32")
         kw = dict(n_slots=n_slots, prompt_pad=prompt_pad, max_seq=max_seq,
                   cache_dtype=cache_dtype, family=arch.family,
-                  module=arch.module, program=program, eos_id=eos_id)
+                  module=arch.module, program=program, eos_id=eos_id,
+                  decode_chunk=decode_chunk)
         if mesh is not None:
             engines[spec.name] = ShardedServeEngine(model, cfg, exe, params,
                                                     mesh=mesh, **kw)

@@ -25,7 +25,8 @@ from repro.runtime.batcher import (Batcher, Request, SlotAllocator,
                                    percentile, poisson_trace, reconcile,
                                    synchronized_trace)
 from repro.runtime.engine import ServeEngine, static_generate
-from repro.runtime.fault_tolerance import is_transient, resilient_step
+from repro.runtime.fault_tolerance import (StragglerMonitor, is_transient,
+                                           resilient_step)
 
 EXE = Execution(compute_dtype="float32")
 
@@ -171,7 +172,11 @@ def test_eos_retires_early(tfm):
     eng.warmup()
     report = eng.serve([req])
     rec = report.records[0]
-    assert rec.tokens == ref[:3]                 # stops AT the eos token
+    # the EOS is control, not payload: delivered tokens stop BEFORE it,
+    # but its decode vector stays in the CM_* books (tokens holds the
+    # prefill token plus decode_vectors - 1 delivered decode tokens)
+    assert rec.tokens == ref[:2]
+    assert rec.decode_vectors == len(rec.tokens)
     assert rec.finish_reason == "eos"
 
 
@@ -347,3 +352,27 @@ def test_resilient_step_still_retries_flakes():
     wrapped = resilient_step(flaky, max_retries=3)
     assert wrapped(1) == 2
     assert len(calls) == 3
+
+
+def test_straggler_monitor_flags_slow_step_inside_warmup_window():
+    # regression: the first sample alone used to seed the EWMA, so a slow
+    # step at position 2..warmup could never be flagged
+    mon = StragglerMonitor(threshold=2.0, alpha=0.1, warmup=3)
+    assert not mon.record(1, 0.010)
+    assert not mon.record(2, 0.010)
+    assert not mon.record(3, 0.012)   # window full: median(0.010..0.012) seeds
+    assert mon.record(4, 0.100)       # first post-seed sample CAN be flagged
+    assert mon.flagged and mon.flagged[0][0] == 4
+
+
+def test_straggler_monitor_slow_first_step_does_not_poison_baseline():
+    # regression: a slow FIRST sample used to become the baseline, hiding
+    # every later straggler behind an inflated EWMA
+    mon = StragglerMonitor(threshold=2.0, alpha=0.1, warmup=3)
+    mon.record(1, 0.500)              # slow outlier lands first
+    mon.record(2, 0.010)
+    mon.record(3, 0.010)
+    assert abs(mon.ewma - 0.010) < 1e-12   # median seed ignores the outlier
+    assert mon.record(4, 0.030)            # 3x the real baseline -> flagged
+    # and the seeded baseline keeps tracking normal steps
+    assert not mon.record(5, 0.011)

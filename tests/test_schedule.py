@@ -22,10 +22,10 @@ from repro.core import isa
 from repro.core.aimc import AimcConfig, aimc_apply, program_linear
 from repro.core.costmodel import HIGH_POWER, evaluate
 from repro.core.program import MappingPlan, program_model
-from repro.core.schedule import (CoreSchedule, Shard, cnn_schedule,
-                                 lstm_schedule, mlp_schedule, pipeline_run,
-                                 pipelined_latency, select_columns,
-                                 sequential_latency)
+from repro.core.schedule import (CoreSchedule, OverlapRoofline, Shard,
+                                 cnn_schedule, lstm_schedule, mlp_schedule,
+                                 pipeline_run, pipelined_latency,
+                                 select_columns, sequential_latency)
 from repro.core.workloads import lstm_workloads, mlp_workloads
 from repro.launch.mesh import make_mesh
 from repro.models import paper_nets as pn
@@ -166,6 +166,38 @@ def test_latency_laws_on_synthetic_stage_times():
     assert pipelined_latency(phases) == 5.0                # slowest stage
     assert sequential_latency([]) == 0.0
     assert pipelined_latency([()]) == 0.0
+
+
+def test_overlap_roofline_recovers_exact_constants():
+    # synthetic step times generated FROM the law must fit back exactly
+    truth = OverlapRoofline(t_step_s=2.0e-3, t_round_s=8.0e-3)
+    times = {k: truth.predict_step_s(k) for k in (1, 2, 4, 8)}
+    fit = OverlapRoofline.fit(times)
+    assert abs(fit.t_step_s - truth.t_step_s) < 1e-12
+    assert abs(fit.t_round_s - truth.t_round_s) < 1e-12
+    assert abs(fit.predict_step_s(16) - (2.0e-3 + 8.0e-3 / 16)) < 1e-12
+    # speedup 1 -> 8: (2+8)/(2+1) ms
+    assert abs(fit.speedup(1, 8) - 10.0 / 3.0) < 1e-9
+    assert all(r < 1e-9 for r in fit.residuals(times).values())
+
+
+def test_overlap_roofline_least_squares_and_guards():
+    # noisy over-determined system: fit minimizes residuals, stays close
+    truth = OverlapRoofline(t_step_s=1.0e-3, t_round_s=4.0e-3)
+    noise = {1: 1.02, 2: 0.97, 4: 1.03, 8: 0.99}
+    times = {k: truth.predict_step_s(k) * noise[k] for k in noise}
+    fit = OverlapRoofline.fit(times)
+    assert max(fit.residuals(times).values()) < 0.1
+    # monotone: bigger chunks never predict slower steps
+    preds = [fit.predict_step_s(k) for k in (1, 2, 4, 8, 16)]
+    assert all(a >= b for a, b in zip(preds, preds[1:]))
+    with pytest.raises(ValueError):
+        OverlapRoofline.fit({4: 1.0e-3})
+    with pytest.raises(ValueError):
+        fit.predict_step_s(0)
+    # a fit tilted negative by noise clamps to 0, never negative time
+    neg = OverlapRoofline.fit({1: 1.0e-3, 8: 2.0e-3})
+    assert neg.t_step_s >= 0.0 and neg.t_round_s >= 0.0
 
 
 def test_schedule_latency_uses_the_right_law():

@@ -225,6 +225,32 @@ def test_parse_named_mesh_rejects_positional():
     assert os.environ.get("XLA_FLAGS") == before
 
 
+@pytest.mark.slow
+def test_force_host_device_count_fails_loud_after_late_init():
+    """Setting XLA_FLAGS after jax already initialized its backend is a
+    silent no-op — the old helper then let a 'data:2' bench run all its
+    "sharded" cases on ONE device and report them as a 2-device result.
+    The helper must verify the post-init device count and exit nonzero."""
+    code = textwrap.dedent("""
+        import jax
+        assert jax.device_count() == 1, jax.devices()   # backend is up
+        from repro.launch.serve import force_host_device_count
+        force_host_device_count("data:2,model:1")       # too late: must die
+        print("UNREACHABLE")
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.pathsep.join(
+        ["src", env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode != 0
+    assert "UNREACHABLE" not in proc.stdout
+    assert "device" in proc.stderr         # the message names the problem
+
+
 # ---------------------------------------------------------------------------
 # benchmarks.run artifact discipline
 # ---------------------------------------------------------------------------
