@@ -3,7 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: tier1 test test-fast test-all bench bench-pipeline bench-json \
         bench-serving bench-server serve-aimc serve-aimc-reprogram \
-        serve-aimc-multicore serve-smoke serve-sharded serve-multi docs-check
+        serve-aimc-multicore serve-smoke serve-sharded serve-multi \
+        serve-chaos serve-drift docs-check
 
 # Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
@@ -84,6 +85,24 @@ serve-sharded:
 	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
 	    --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
 	    --cores 2 --mesh data:2,model:1
+
+# Chaos smoke: deterministic mid-trace faults (tile corruption at chunk 1,
+# core kill at chunk 3) through the drift/health/chaos tick (DESIGN.md §14).
+# The engine must detect via probe, drain the dead core onto its peer,
+# hot-reprogram bit-exactly, and close the CM_* + recal-CM_INITIALIZE books
+# exactly — exits nonzero on a lost request, an unfired fault, or ledger
+# drift. Same invocation as the ci.sh --fast chaos smoke.
+serve-chaos:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 6 \
+	    --prompt-len 8 --gen 6 --slots 3 --trace poisson:300 --exec aimc \
+	    --cores 2 --decode-chunk 2 --chaos "corrupt:0@1:0.5,kill:1@3"
+
+# Drift-aware serving smoke: power-law conductance decay on the serve clock
+# with online probes and threshold-triggered hot recalibration.
+serve-drift:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 6 \
+	    --prompt-len 8 --gen 8 --slots 3 --trace poisson:300 --exec aimc \
+	    --cores 2 --decode-chunk 2 --drift 0.3 --drift-t0 0.01
 
 # Multi-tenant serving smoke: two models resident in one process (granite
 # co-programmed on the shared TilePool, xlstm digital), interleaved

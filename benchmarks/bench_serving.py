@@ -397,12 +397,139 @@ def _bench_sharded_case(arch: str, programmed: bool, mesh, mesh_arg: str,
     return case
 
 
+def _bench_drift_case(arch: str, verbose: bool) -> dict:
+    """Drift-aware serving (DESIGN.md §14): accuracy vs program age, the
+    hot-recalibration cost, and a chaos-grade mid-trace kill.
+
+    Three legs, three gates:
+      * probe error GROWS with program age under the power-law drift model
+        and crosses the health threshold (there is something to repair);
+      * after hot recalibration the probe error returns to the FRESH
+        tolerance — reprogramming under the original keys is bit-exact,
+        so the recovery is exact, not approximate;
+      * a deterministic mid-trace core kill through the engine loses zero
+        requests, stays bit-equal to the unfaulted run, and closes the
+        CM_* books exactly INCLUDING the extra recal CM_INITIALIZE.
+    """
+    from repro.core import noise as noise_lib
+    from repro.core.schedule import CoreSchedule
+    from repro.runtime.chaos import parse_chaos
+    from repro.runtime.health import build_health, reconcile_recal
+
+    spec = get_arch(arch)
+    cfg = spec.smoke_cfg
+    model = spec.model_module()
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    aimc_cfg = AimcConfig(impl="ref", input_scale=0.1)
+    exe = Execution(mode="aimc", aimc=aimc_cfg, compute_dtype="float32",
+                    programmed=True)
+    plan = MappingPlan(n_contexts=2)
+    key = jax.random.PRNGKey(2)
+    program = program_model(params, plan, aimc_cfg, key)
+    schedule = CoreSchedule.from_program(program)
+
+    # -- accuracy vs program age (probe error against the fresh oracle) -----
+    drift = noise_lib.drift_only(nu=0.05, t0=0.01)
+    health = build_health(program, params, plan, key, noise=drift)
+    fresh = dict(zip(program.names, program.states))
+    err_fresh = max(health.probe(fresh, 0.0).errors.values())
+    age_curve = {}
+    for age in (0.01, 0.1, 1.0, 10.0, 100.0):
+        entries = program.aged_entries(age, drift) or fresh
+        sample = health.probe(entries, age)
+        age_curve[str(age)] = max(sample.errors.values())
+    t_old = 100.0
+    aged = program.aged_entries(t_old, drift)
+    failing = health.failing_cores(health.probe(aged, t_old))
+    t0 = time.time()
+    entries, names, cm = health.recalibrate(failing, t_old)
+    recal_wall_s = time.time() - t0
+    err_recal = max(health.probe(
+        {**aged, **entries}, t_old + 1e-3).errors.values())
+
+    # -- chaos leg: mid-trace kill through the engine ------------------------
+    max_seq = PAD + MAX_NEW[1] + 2
+    kw = dict(n_slots=N_SLOTS, prompt_pad=PAD, max_seq=max_seq,
+              cache_dtype=jnp.float32, family=spec.family,
+              module=spec.module, program=program, schedule=schedule,
+              decode_chunk=4)
+    trace = poisson_trace(N_REQ, RATE, seed=11, prompt_len=PROMPT,
+                          max_new=MAX_NEW, vocab=cfg.vocab)
+    ref_eng = ServeEngine(model, cfg, exe, program.install(params), **kw)
+    ref_eng.warmup()
+    ref = ref_eng.serve(list(trace))
+
+    chaos = parse_chaos("kill:1@2")
+    chaos_health = build_health(program, params, plan, key)
+    eng = ServeEngine(model, cfg, exe, program.install(params),
+                      health=chaos_health, chaos=chaos, **kw)
+    eng.warmup()
+    rep = eng.serve(list(trace))
+
+    lost = len(trace) - len(rep.records)
+    bit_equal = all(rep.tokens(r.rid) == ref.tokens(r.rid) for r in trace)
+    led_sum, static_sum = reconcile(eng.program, rep.records,
+                                    rep.observed_vectors)
+    books_exact = (lost == 0 and chaos.exhausted and rep.n_recals >= 1
+                   and led_sum == static_sum
+                   and reconcile_recal(eng.program, rep)
+                   and rep.recal_initialize > 0)
+
+    session_init = program.initialize_counts().initialize
+    case = {
+        "arch": spec.arch_id,
+        "drift": {"nu": drift.drift_nu, "t0_s": drift.drift_t0},
+        "health_threshold": health.policy.threshold,
+        "probe_err_fresh": err_fresh,
+        "probe_err_by_age_s": age_curve,
+        "probe_err_after_recal": err_recal,
+        "recal": {
+            "cores": list(failing),
+            "n_matrices": len(names),
+            "cm_initialize": cm.initialize,
+            "session_cm_initialize": session_init,
+            "cost_vs_session": cm.initialize / max(session_init, 1),
+            "wall_s": recal_wall_s,
+        },
+        "chaos": {
+            "spec": "kill:1@2",
+            "lost_requests": lost,
+            "n_recals": rep.n_recals,
+            "recal_cm_initialize": rep.recal_initialize,
+            "probes": rep.probes,
+            "wall_health_s": rep.wall_health_s,
+            "bit_equal": bit_equal,
+            "books_exact": books_exact,
+            "straggler_exempted": len(eng.monitor.exempted),
+        },
+        "drift_detected": age_curve[str(t_old)] > health.policy.threshold,
+        "recal_recovers": err_recal <= err_fresh + 1e-6,
+    }
+    if verbose:
+        rows = [[age, f"{err:.4f}"] for age, err in age_curve.items()]
+        rows.append(["after recal", f"{err_recal:.4f}"])
+        print(table(
+            f"{spec.arch_id} [aimc-programmed] drift nu={drift.drift_nu:g} "
+            f"t0={drift.drift_t0:g}s — max per-core probe error",
+            ["program age (s)", "rel err"], rows))
+        print(f"  recal: {len(names)} matrices on cores {list(failing)}, "
+              f"CM_INITIALIZE={cm.initialize} "
+              f"({case['recal']['cost_vs_session']:.0%} of the session "
+              f"program bill), {recal_wall_s * 1e3:.0f}ms wall")
+        print(f"  chaos kill:1@2: lost={lost} bit-equal={bit_equal} "
+              f"books-exact={books_exact} recal CM_INITIALIZE="
+              f"{rep.recal_initialize} exempted-chunks="
+              f"{case['chaos']['straggler_exempted']}")
+    return case
+
+
 def run(verbose: bool = True, mesh_arg: str | None = None) -> dict:
     cases = [
         _bench_case("granite-8b", programmed=True, verbose=verbose),
         _bench_case("xlstm-350m", programmed=False, verbose=verbose),
     ]
-    out = {"cases": cases}
+    out = {"cases": cases,
+           "drift_case": _bench_drift_case("granite-8b", verbose=verbose)}
     if mesh_arg:
         from repro.launch.mesh import make_mesh
         from repro.launch.serve import parse_named_mesh
@@ -434,6 +561,24 @@ def checks(results=None) -> list[Check]:
               1.0 if all(c["ledger_exact"] for c in cases) else 0.0,
               1.0, rtol=0.01),
     ]
+    drift_case = results.get("drift_case")
+    if drift_case:
+        ch = drift_case["chaos"]
+        out += [
+            Check("conductance drift degrades probe accuracy past the "
+                  "health threshold with program age",
+                  1.0 if drift_case["drift_detected"] else 0.0, 1.0,
+                  rtol=0.01),
+            Check("hot recalibration recovers probe error to the fresh "
+                  "tolerance (bit-exact reprogram)",
+                  1.0 if drift_case["recal_recovers"] else 0.0, 1.0,
+                  rtol=0.01),
+            Check("mid-trace core kill: zero lost requests, books exact "
+                  "incl. recal CM_INITIALIZE",
+                  1.0 if ch["books_exact"] else 0.0, 1.0, rtol=0.01),
+            Check("chaos run tokens bit-equal to the unfaulted run",
+                  1.0 if ch["bit_equal"] else 0.0, 1.0, rtol=0.01),
+        ]
     sharded = results.get("sharded_cases")
     if sharded:
         max_round_share = max(c["round_share_k_hi"] for c in sharded)

@@ -9,7 +9,9 @@
 #                      README front door), the engine smokes (single-device
 #                      poisson trace + the sharded engine on a forced
 #                      2-device host-platform mesh, per-step and with the
-#                      k=8 scanned decode chunk), and the kernel
+#                      k=8 scanned decode chunk), the chaos smoke (mid-trace
+#                      corrupt+kill with drain + hot reprogram; fails on a
+#                      lost request or ledger drift), and the kernel
 #                      perf-smoke (bench_kernels in interpret mode, writes
 #                      BENCH_kernels.json, fails on check regression)
 #   ./ci.sh --install  pip-install pinned deps first (no-op in the baked image)
@@ -40,6 +42,13 @@ if [[ "${1:-}" == "--fast" ]]; then
         python -m repro.launch.serve --arch granite-8b --smoke --requests 4 \
         --prompt-len 8 --gen 4 --slots 2 --trace poisson:300 --exec aimc \
         --cores 2 --mesh data:2,model:1 --decode-chunk 8
+    echo "== chaos smoke: mid-trace corrupt+kill, drain + hot reprogram =="
+    # exits nonzero if any in-flight request is lost, a scheduled fault
+    # never fires, or the CM_* / recal-CM_INITIALIZE ledgers drift
+    # (DESIGN.md §14; launch.serve._verify_resilience)
+    python -m repro.launch.serve --arch granite-8b --smoke --requests 6 \
+        --prompt-len 8 --gen 6 --slots 3 --trace poisson:300 --exec aimc \
+        --cores 2 --decode-chunk 2 --chaos "corrupt:0@1:0.5,kill:1@3"
     echo "== server smoke: two models co-programmed, mixed-tenant trace =="
     # exits nonzero if per-tenant ledgers fail to reconcile or any tenant
     # with requests is starved of all tokens (runtime.server front door)

@@ -84,6 +84,16 @@ class AimcLinearState:
             out *= d
         return out
 
+    def with_gain(self, gain) -> "AimcLinearState":
+        """Conductance drift applied as DATA: scale the effective per-column
+        output scale, leaving the stored codes — and the pytree structure —
+        untouched. Aged states therefore install into a parameter tree with
+        an identical treedef/shape, so refreshing drift mid-serve never
+        triggers a recompile."""
+        return AimcLinearState(w_q=self.w_q,
+                               s_w=self.s_w * jnp.float32(gain),
+                               k=self.k, n=self.n)
+
 
 def _pad_to(v: int, m: int) -> int:
     return (v + m - 1) // m * m

@@ -46,6 +46,11 @@ class NoiseModel:
     drift_nu: float = 0.05
     drift_t_ratio: float = 1.0  # t/t0; 1.0 = freshly programmed (no drift)
     drift_compensate: bool = True
+    # time-dependent drift: reference time t0 (seconds after programming at
+    # which the decay clock starts) and per-core exponent spread (fraction of
+    # drift_nu; cores in a cluster do not drift identically).
+    drift_t0: float = 1.0
+    drift_core_spread: float = 0.0
 
     def drift_gain(self) -> float:
         if self.drift_t_ratio <= 1.0:
@@ -55,8 +60,63 @@ class NoiseModel:
     def compensation_gain(self) -> float:
         return 1.0 / self.drift_gain() if self.drift_compensate else 1.0
 
+    def drift_gain_at(self, t_since_program: float, nu: float | None = None) -> float:
+        """G(t)/G(t0) for a program of age `t_since_program` seconds.
+
+        The power law G(t) = G(t0) * (t/t0)^(-nu) with t0 = `drift_t0`;
+        ages at or below t0 (including a negative clock skew) are "fresh"
+        and decay-free. `nu` overrides the global exponent — pass
+        `per_core_nu(core)` to model per-core variation."""
+        if not self.enabled:
+            return 1.0
+        nu = self.drift_nu if nu is None else nu
+        ratio = t_since_program / self.drift_t0
+        if ratio <= 1.0 or nu == 0.0:
+            return 1.0
+        return float(ratio ** (-nu))
+
+    def per_core_nu(self, core: int, seed: int = 0) -> float:
+        """Deterministic per-core drift exponent: nu * (1 + spread * u),
+        u in [-1, 1) hashed from (seed, core). spread=0 -> the global nu."""
+        if self.drift_core_spread == 0.0:
+            return self.drift_nu
+        u = 2.0 * unit_hash(seed, core) - 1.0
+        return self.drift_nu * (1.0 + self.drift_core_spread * u)
+
 
 DISABLED = NoiseModel(enabled=False)
+
+
+def drift_only(nu: float = 0.05, t0: float = 1.0,
+               core_spread: float = 0.0) -> NoiseModel:
+    """A NoiseModel that drifts with program age but is otherwise ideal.
+
+    Programming/read noise are zeroed and compensation is off, so a serving
+    stack built on this model stays bit-deterministic: the ONLY time-varying
+    effect is the multiplicative power-law decay `drift_gain_at`. This is the
+    model the drift-aware serve loop (runtime.health) evolves online."""
+    return NoiseModel(enabled=True, sigma_prog_min=0.0, sigma_prog_max=0.0,
+                      sigma_read=0.0, drift_nu=nu, drift_t_ratio=1.0,
+                      drift_compensate=False, drift_t0=t0,
+                      drift_core_spread=core_spread)
+
+
+_MASK64 = (1 << 64) - 1
+
+
+def unit_hash(*ints: int) -> float:
+    """Deterministic hash of integers to [0, 1) — splitmix64 finalizer.
+
+    Pure python (no PRNG state, no jax), so per-core variation and backoff
+    jitter are reproducible across processes and platforms."""
+    h = 0x9E3779B97F4A7C15
+    for v in ints:
+        h = (h ^ (int(v) & _MASK64)) & _MASK64
+        h = (h + 0x9E3779B97F4A7C15) & _MASK64
+        h = ((h ^ (h >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+        h = ((h ^ (h >> 27)) * 0x94D049BB133111EB) & _MASK64
+        h = h ^ (h >> 31)
+    return h / float(1 << 64)
 
 
 def programming_noise(key: jax.Array, w_codes: jnp.ndarray, nm: NoiseModel) -> jnp.ndarray:

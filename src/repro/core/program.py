@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import isa
+from repro.core import noise as noise_lib
 from repro.core.aimc import (AimcConfig, AimcLinearState, program_linear,
                              program_stacked)
 from repro.core.tile import TileAllocator, TileMap
@@ -360,22 +361,31 @@ class AimcProgram:
 
     def __init__(self, states: tuple[AimcLinearState, ...],
                  names: tuple[str, ...], cfg: AimcConfig,
-                 contexts: tuple[int, ...], tile_maps: tuple[TileMap, ...]):
+                 contexts: tuple[int, ...], tile_maps: tuple[TileMap, ...],
+                 t_programmed: tuple[float, ...] | None = None):
         self.states = tuple(states)
         self.names = tuple(names)
         self.cfg = cfg
         self.contexts = tuple(contexts)
         self.tile_maps = tuple(tile_maps)
+        # program-age clock: per-matrix programming instant on the SERVE
+        # clock (seconds). Fresh builds are all-zero; hot reprogramming
+        # stamps the recal instant, which restarts that matrix's drift law.
+        self.t_programmed = (tuple(0.0 for _ in self.names)
+                             if t_programmed is None else tuple(t_programmed))
+        if len(self.t_programmed) != len(self.names):
+            raise ValueError("t_programmed must have one entry per matrix")
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         return self.states, (self.names, self.cfg, self.contexts,
-                             self.tile_maps)
+                             self.tile_maps, self.t_programmed)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        names, cfg, contexts, tile_maps = aux
-        return cls(tuple(children), names, cfg, contexts, tile_maps)
+        names, cfg, contexts, tile_maps, t_programmed = aux
+        return cls(tuple(children), names, cfg, contexts, tile_maps,
+                   t_programmed)
 
     # -- mapping ------------------------------------------------------------
     @property
@@ -416,6 +426,141 @@ class AimcProgram:
             params_shape, is_leaf=_is_quantized_leaf)
         leaves = [entries.get(_path_key(path), leaf) for path, leaf in flat]
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def install_updates(self, params, entries: dict[str, AimcLinearState]):
+        """Substitute REFRESHED states into an already-installed tree.
+
+        ``install`` is a no-op over installed trees (the state's children
+        flatten to sub-paths that match nothing); this is the companion that
+        replaces whole `AimcLinearState` nodes by their original path — the
+        mechanism behind online drift refresh and hot reprogramming. Every
+        update has the same shapes/treedef as what it replaces, so jitted
+        closures over the result never recompile. An entry whose path does
+        not exist in the tree raises — a silently dropped update would mean
+        serving stale states while the books charge for fresh ones."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=_is_installed_or_quantized_leaf)
+        unused = set(entries)
+        leaves = []
+        for path, leaf in flat:
+            pkey = _path_key(path)
+            if isinstance(leaf, AimcLinearState) and pkey in entries:
+                leaves.append(entries[pkey])
+                unused.discard(pkey)
+            else:
+                leaves.append(leaf)
+        if unused:
+            raise KeyError(f"install_updates: no installed state at "
+                           f"{sorted(unused)}")
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    # -- program-age clock + drift views (runtime.health's substrate) -------
+    def ages(self, t_now: float) -> dict[str, float]:
+        """Seconds since each matrix was (re)programmed, on the serve clock."""
+        return {n: t_now - t0 for n, t0 in zip(self.names, self.t_programmed)}
+
+    def drift_gains(self, t_now: float,
+                    nm: noise_lib.NoiseModel | None = None,
+                    seed: int = 0) -> dict[str, float]:
+        """Per-matrix conductance decay gain at serve time ``t_now``.
+
+        The power law runs per matrix off its own program age, with the
+        exponent drawn per CORE (`NoiseModel.per_core_nu`) — physically, the
+        matrices of one context share a crossbar's material batch."""
+        nm = self.cfg.noise if nm is None else nm
+        out = {}
+        for name, t0, ctx in zip(self.names, self.t_programmed, self.contexts):
+            out[name] = nm.drift_gain_at(t_now - t0, nm.per_core_nu(ctx, seed))
+        return out
+
+    def aged_entries(self, t_now: float,
+                     nm: noise_lib.NoiseModel | None = None,
+                     seed: int = 0) -> dict[str, AimcLinearState]:
+        """Drift-decayed views of the programmed states at ``t_now``.
+
+        Decay scales the effective output scale (`with_gain`) — codes and
+        pytree structure are untouched, so the result feeds straight into
+        `install_updates`. Empty when nothing has drifted."""
+        gains = self.drift_gains(t_now, nm, seed)
+        if all(g == 1.0 for g in gains.values()):
+            return {}
+        return {n: st.with_gain(gains[n])
+                for n, st in zip(self.names, self.states)}
+
+    def reprogrammed(self, entries: dict[str, AimcLinearState],
+                     t_now: float) -> "AimcProgram":
+        """Hot reprogram: swap in freshly-programmed states for ``entries``
+        and stamp their program age to ``t_now`` (their drift law restarts).
+        The CM_INITIALIZE cost is the caller's to charge — see
+        `runtime.health.Recalibrator`, which never swaps silently."""
+        unknown = set(entries) - set(self.names)
+        if unknown:
+            raise KeyError(f"reprogrammed: unmapped matrices {sorted(unknown)}")
+        states = tuple(entries.get(n, st)
+                       for n, st in zip(self.names, self.states))
+        ages = tuple(t_now if n in entries else t0
+                     for n, t0 in zip(self.names, self.t_programmed))
+        return AimcProgram(states, self.names, self.cfg, self.contexts,
+                           self.tile_maps, t_programmed=ages)
+
+    def remap_context(self, dead: int) -> "AimcProgram":
+        """Survivor placement after losing context (core) ``dead``.
+
+        Every matrix resident on the dead context is re-packed onto the
+        least-loaded SURVIVING context on fresh spare tiles (appended after
+        the survivor's existing tiles — the dead crossbars are retired, not
+        reused), and the dead context's tile map empties. States are
+        unchanged: the caller must reprogram the moved matrices
+        (`reprogrammed`) since their conductances live on new physical
+        tiles. MVM counts are shape-only, so `mvm_counts()` — and therefore
+        ledger reconciliation — is invariant under the remap."""
+        n_ctx = len(self.tile_maps)
+        if not 0 <= dead < n_ctx:
+            raise ValueError(f"context {dead} out of range 0..{n_ctx - 1}")
+        if n_ctx < 2:
+            raise CapacityError(
+                "remap_context: no surviving context to drain onto")
+        moved = [i for i, c in enumerate(self.contexts) if c == dead]
+        if not moved:
+            return self
+        survivors = [c for c in range(n_ctx) if c != dead]
+        extra = {c: TileAllocator(self.cfg.tile_rows, self.cfg.tile_cols)
+                 for c in survivors}
+        contexts = list(self.contexts)
+        for i in moved:
+            st = self.states[i]
+            ctx = min(survivors,
+                      key=lambda c: self.tile_maps[c].n_tiles + extra[c].n_tiles)
+            for j in range(st.instances):
+                inst = (self.names[i] if st.instances == 1
+                        else f"{self.names[i]}[{j}]")
+                extra[ctx].map_matrix(inst, st.k, st.n)
+            contexts[i] = ctx
+        tile_maps = []
+        for c in range(n_ctx):
+            tm = self.tile_maps[c]
+            if c == dead:
+                tile_maps.append(dataclasses.replace(
+                    tm, placements=(), n_tiles=0))
+            elif extra[c].n_tiles:
+                new = extra[c].finalize()
+                shifted = tuple(dataclasses.replace(p, tile_id=p.tile_id
+                                                    + tm.n_tiles)
+                                for p in new.placements)
+                tile_maps.append(dataclasses.replace(
+                    tm, placements=tm.placements + shifted,
+                    n_tiles=tm.n_tiles + new.n_tiles))
+            else:
+                tile_maps.append(tm)
+        return AimcProgram(self.states, self.names, self.cfg, tuple(contexts),
+                           tuple(tile_maps), t_programmed=self.t_programmed)
+
+    def reprogram_counts(self, names) -> isa.CmCounts:
+        """CM_INITIALIZE for reprogramming just ``names`` — the extra device
+        writes a hot recalibration charges on top of `initialize_counts`."""
+        return isa.total(
+            isa.initialize_counts(st.k, st.n).scaled(st.instances)
+            for n, st in zip(self.names, self.states) if n in set(names))
 
     # -- CM_* accounting (static: shapes fully determine the counts) --------
     def initialize_counts(self) -> isa.CmCounts:
@@ -487,6 +632,22 @@ def program_model(params, plan: MappingPlan | None, cfg: AimcConfig,
     builder = ProgramBuilder(cfg, n_contexts=plan.n_contexts,
                              tiles_per_context=plan.tiles_per_context,
                              pool=pool, label=label)
+    for pkey, w, idx in iter_mapped_leaves(params, plan):
+        sub = jax.random.fold_in(key, idx) if key is not None else None
+        builder.add(pkey, w, sub)
+    return builder.build()
+
+
+def iter_mapped_leaves(params, plan: MappingPlan | None):
+    """Yield ``(path, weight, fold_index)`` for every plan-selected leaf, in
+    the exact walk order `program_model` programs them.
+
+    This IS the key-derivation contract: matrix i's programming key is
+    ``fold_in(key, fold_index_i)``. `runtime.health.Recalibrator` replays
+    this walk over the RAW parameter tree to capture reference weights and
+    per-matrix keys, so a hot reprogram reproduces the original
+    `program_stacked` output bit-for-bit."""
+    plan = plan or MappingPlan()
     flat, _ = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=_is_quantized_leaf)
     idx = 0
@@ -497,10 +658,8 @@ def program_model(params, plan: MappingPlan | None, cfg: AimcConfig,
         pkey = _path_key(path)
         if not plan.selects(pkey, tuple(w.shape)):
             continue
-        sub = jax.random.fold_in(key, idx) if key is not None else None
-        builder.add(pkey, w, sub)
+        yield pkey, w, idx
         idx += 1
-    return builder.build()
 
 
 # ---------------------------------------------------------------------------
@@ -510,6 +669,22 @@ def program_model(params, plan: MappingPlan | None, cfg: AimcConfig,
 def _is_quantized_leaf(x) -> bool:
     """Treat the int8 serving format {"q": codes, "s": scales} as one leaf."""
     return isinstance(x, dict) and "q" in x and "s" in x
+
+
+def _is_installed_or_quantized_leaf(x) -> bool:
+    """`install_updates` leaf cut: stop at whole programmed states too, so
+    their tree path is the original weight path (not .../w_q, .../s_w)."""
+    return isinstance(x, AimcLinearState) or _is_quantized_leaf(x)
+
+
+def installed_entries(params) -> dict[str, AimcLinearState]:
+    """path -> installed state for an already-installed tree — the LIVE
+    states serving traffic (drifted / corrupted / repaired), which is what
+    `runtime.health.HealthMonitor.probe` measures."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_installed_or_quantized_leaf)
+    return {_path_key(p): leaf for p, leaf in flat
+            if isinstance(leaf, AimcLinearState)}
 
 
 def _as_matrix(leaf):

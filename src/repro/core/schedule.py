@@ -424,7 +424,8 @@ class CoreSchedule:
         return law(times)
 
     # -- mesh placement (sharded serving, DESIGN.md §11) -----------------------
-    def mesh_placement(self, mesh, axis: str = "model") -> dict[int, int]:
+    def mesh_placement(self, mesh, axis: str = "model",
+                       dead: Sequence[int] = ()) -> dict[int, int]:
         """virtual core -> device slot along mesh ``axis`` (round-robin).
 
         The placement rule the sharded serving engine uses: cores fold onto
@@ -433,17 +434,27 @@ class CoreSchedule:
         core owns a device (the paper's one-core-per-unit regime); with
         D < N devices time-share cores exactly as a single device
         time-shares every core today — the ledgers are placement-invariant
-        either way. A mesh without ``axis`` is a single device slot."""
-        n_dev = mesh.shape[axis] if axis in mesh.axis_names else 1
-        return {c: c % n_dev for c in range(self.n_cores)}
+        either way. A mesh without ``axis`` is a single device slot.
 
-    def device_ledgers(self, mesh,
-                       axis: str = "model") -> dict[int, CoreLedger]:
+        ``dead`` lists device slots lost mid-serve (the chaos/fault path):
+        cores fold round-robin over the SURVIVING slots only, preserving
+        round-robin order — the drain-and-remap rule `runtime.health` pairs
+        with tile reprogramming. Killing every slot raises."""
+        n_dev = mesh.shape[axis] if axis in mesh.axis_names else 1
+        alive = [d for d in range(n_dev) if d not in set(dead)]
+        if not alive:
+            raise ValueError(f"mesh_placement: all {n_dev} device slot(s) "
+                             f"on axis {axis!r} are dead")
+        return {c: alive[c % len(alive)] for c in range(self.n_cores)}
+
+    def device_ledgers(self, mesh, axis: str = "model",
+                       dead: Sequence[int] = ()) -> dict[int, CoreLedger]:
         """device slot -> per-inference ledger summed over the cores placed
         there (`mesh_placement`). The ``core`` field of each returned
         `CoreLedger` is the DEVICE slot; summed over devices the books equal
-        `ledger_totals()` — placement never creates or loses traffic."""
-        place = self.mesh_placement(mesh, axis)
+        `ledger_totals()` — placement never creates or loses traffic (with
+        or without ``dead`` slots excluded)."""
+        place = self.mesh_placement(mesh, axis, dead=dead)
         acc: dict[int, list] = {}
         for led in self.ledgers():
             d = place[led.core]

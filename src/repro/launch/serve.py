@@ -55,6 +55,15 @@ admission order (default: one fifo tenant per model, weight 1). The run
 prints per-tenant tok/s, p50/p99 TTFT/TPOT, Jain's quota-fairness index
 and the pool utilization, and exits nonzero if any per-tenant CM_* ledger
 fails to reconcile or a tenant with requests was starved of all tokens.
+
+``--drift NU`` ages the programmed conductances along the power law on the
+serve clock and ``--chaos kill:CORE@CHUNK,corrupt:CORE@CHUNK[:MAG]``
+injects deterministic faults on the chunk-dispatch clock (DESIGN.md §14):
+the engine probes the live states at chunk boundaries against the digital
+oracle, drains dead cores onto peers, hot-reprograms past
+``--health-threshold``, and the run exits nonzero unless every request
+retires, every fault fires, and the CM_* + recal CM_INITIALIZE books close
+exactly. ``--heartbeat PATH`` beats a liveness file per chunk/pass.
 """
 
 from __future__ import annotations
@@ -117,6 +126,32 @@ def parse_args(argv=None):
     ap.add_argument("--int8", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--drift", type=float, default=0.0,
+                    help="conductance drift exponent nu (power-law decay of "
+                         "the programmed weights on the serve clock); the "
+                         "health monitor probes at chunk boundaries and "
+                         "hot-reprograms cores whose output error passes "
+                         "--health-threshold (DESIGN.md §14). 0 = off")
+    ap.add_argument("--drift-t0", dest="drift_t0", type=float, default=0.05,
+                    help="drift reference time t0 in seconds (decay starts "
+                         "once program age exceeds t0)")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault injection on the chunk-"
+                         "dispatch clock: kill:CORE@CHUNK / "
+                         "corrupt:CORE@CHUNK[:MAG], comma-joined (e.g. "
+                         "'corrupt:0@2:0.5,kill:1@4'). The engine must "
+                         "detect, drain and hot-reprogram with exact CM_* "
+                         "books — the run exits nonzero if any request is "
+                         "lost, any event never fires, or the recal ledger "
+                         "drifts")
+    ap.add_argument("--health-threshold", dest="health_threshold",
+                    type=float, default=0.05,
+                    help="per-core relative probe error that triggers hot "
+                         "recalibration")
+    ap.add_argument("--heartbeat", default="",
+                    help="liveness file beaten once per chunk (engine) or "
+                         "pass (server) with slot occupancy and the last-"
+                         "chunk wall timestamp (fault_tolerance.Heartbeat)")
     ap.add_argument("--models", default="",
                     help="multi-tenant server: NAME:EXEC[,NAME:EXEC...] "
                          "(EXEC: aimc|digital) keeps every listed model "
@@ -134,6 +169,19 @@ def parse_args(argv=None):
                          "co-programmed models exceeding it together fail "
                          "with CapacityError at program time")
     args = ap.parse_args(argv)
+    if args.chaos or args.drift:
+        flag = "--chaos" if args.chaos else "--drift"
+        if args.exec_mode != "aimc" or args.reprogram:
+            ap.error(f"{flag} degrades/repairs PROGRAMMED crossbar states: "
+                     "it requires --exec aimc without --reprogram")
+        if args.static or args.models:
+            ap.error(f"{flag} runs through the engine's chunk-boundary "
+                     "resilience tick (drop --static/--models)")
+    if args.chaos and args.cores < 2:
+        ap.error("--chaos needs --cores >= 2: a killed core drains onto "
+                 "surviving peers, so there must be at least one")
+    if args.drift < 0:
+        ap.error(f"--drift must be >= 0, got {args.drift}")
     if args.models:
         for on, name in [(args.static, "--static"), (args.int8, "--int8"),
                          (args.reprogram, "--reprogram"),
@@ -355,7 +403,11 @@ def _run_server(args):
             list(server.policies.values()), args.requests, rate,
             vocab_of={s.name: vocab(s) for s in specs}, seed=args.seed,
             prompt_len=(max(1, p // 2), p), max_new=(1, g))
-        report = server.serve(trace)
+        heartbeat = None
+        if args.heartbeat:
+            from repro.runtime.fault_tolerance import Heartbeat
+            heartbeat = Heartbeat(args.heartbeat)
+        report = server.serve(trace, heartbeat=heartbeat)
         print(f"[serve] {report.summary()}")
         for m in server.engines:
             shares = server.fair_shares(m)
@@ -437,6 +489,8 @@ def main(argv=None):
 
         program = None
         schedule = None
+        health = None
+        chaos = None
         if args.exec_mode == "aimc" and not args.reprogram:
             # CM_INITIALIZE: program the whole network once, outside the
             # serving loop (paper §IV-B). --cores spreads the matrices over
@@ -444,10 +498,10 @@ def main(argv=None):
             from repro.core.program import MappingPlan, program_model
             from repro.core.schedule import CoreSchedule
             t0 = time.time()
-            program = program_model(params,
-                                    MappingPlan(n_contexts=args.cores),
-                                    aimc_cfg,
-                                    jax.random.PRNGKey(args.seed + 2))
+            plan = MappingPlan(n_contexts=args.cores)
+            prog_key = jax.random.PRNGKey(args.seed + 2)
+            params_raw = params
+            program = program_model(params, plan, aimc_cfg, prog_key)
             params = program.install(params)
             jax.block_until_ready(
                 [st.w_q for st in program.states])
@@ -457,6 +511,28 @@ def main(argv=None):
                                                  pipelined=args.pipeline)
             if args.cores > 1 or args.pipeline:
                 print(f"[serve] {schedule.summary()}")
+            if args.drift or args.chaos:
+                # drift-aware serving (DESIGN.md §14): reference weights +
+                # programming keys captured off the RAW tree so hot
+                # reprogramming is bit-exact
+                from repro.core import noise as noise_lib
+                from repro.runtime.chaos import parse_chaos
+                from repro.runtime.health import HealthPolicy, build_health
+                noise = (noise_lib.drift_only(nu=args.drift,
+                                              t0=args.drift_t0)
+                         if args.drift else None)
+                health = build_health(
+                    program, params_raw, plan, prog_key,
+                    policy=HealthPolicy(threshold=args.health_threshold),
+                    noise=noise)
+                chaos = parse_chaos(args.chaos) if args.chaos else None
+                what = " + ".join(
+                    ([f"drift nu={args.drift:g} t0={args.drift_t0:g}s"]
+                     if args.drift else [])
+                    + ([f"chaos [{', '.join(e.describe() for e in chaos.events)}]"]
+                       if chaos else []))
+                print(f"[serve] resilience: {what}; probe threshold "
+                      f"{args.health_threshold:g}")
 
         print(f"[serve] {spec.arch_id} exec={args.exec_mode} "
               f"int8={args.int8} requests={b}"
@@ -469,12 +545,17 @@ def main(argv=None):
 
         # ---- continuous batching (the deployment path) --------------------
         n_slots = args.slots or min(b, 8)
+        heartbeat = None
+        if args.heartbeat:
+            from repro.runtime.fault_tolerance import Heartbeat
+            heartbeat = Heartbeat(args.heartbeat)
         common = dict(n_slots=n_slots, prompt_pad=p, max_seq=max_seq,
                       cache_dtype=jnp.float32, family=spec.family,
                       module=spec.module, program=program, schedule=schedule,
                       eos_id=None if args.eos < 0 else args.eos,
                       admission=args.admission,
-                      decode_chunk=args.decode_chunk)
+                      decode_chunk=args.decode_chunk,
+                      health=health, chaos=chaos, heartbeat=heartbeat)
         if sharded:
             engine = ShardedServeEngine(model, cfg, exe, params, mesh=mesh,
                                         **common)
@@ -532,6 +613,8 @@ def main(argv=None):
                     print(f"    mesh device[{engine.model_axis}={dev}]: "
                           f"queue={cm.queue} process={cm.process} "
                           f"dequeue={cm.dequeue}")
+        if health is not None:
+            _verify_resilience(engine, report, requests, chaos)
         _print_schedule(args, schedule)
         for rid in sorted(report.records)[:3]:
             rec = report.records[rid]
@@ -580,6 +663,47 @@ def _run_static(args, spec, cfg, exe, model, params, program, schedule,
         print(f"  req{i}: prompt={list(requests[i].prompt[:6])}... "
               f"-> gen={[int(t) for t in gen_toks[i]]}")
     return gen_toks
+
+
+def _verify_resilience(engine, report, requests, chaos):
+    """Hard acceptance for a drift/chaos run — the CI chaos smoke rides on
+    this: exit nonzero if any request was lost, any scheduled fault never
+    fired, the per-request CM_* books fail against the (possibly remapped)
+    program, or the recalibration ledger does not close exactly."""
+    from repro.runtime.batcher import reconcile
+    from repro.runtime.health import reconcile_recal
+    for ev in report.fault_events:
+        print(f"  fault injected: {ev.describe()}")
+    for ev in report.recal_events:
+        print(f"  hot recal [{ev.reason}] cores={list(ev.cores)}: "
+              f"{len(ev.names)} matrices reprogrammed, "
+              f"CM_INITIALIZE={ev.initialize}, {ev.wall_s * 1e3:.0f}ms")
+    print(f"  health: {report.probes} probes, {report.n_recals} recals, "
+          f"recal CM_INITIALIZE={report.recal_initialize} (charged on top "
+          f"of the session's program-once bill), "
+          f"{report.wall_health_s:.2f}s health wall")
+    failures = []
+    if len(report.records) != len(requests):
+        lost = ({r.rid for r in requests}
+                - {rid for rid in report.records})
+        failures.append(f"LOST {len(lost)} in-flight request(s): "
+                        f"{sorted(lost)}")
+    if chaos is not None and not chaos.exhausted:
+        left = [e.describe() for e in chaos.events if e not in chaos.fired]
+        failures.append(f"chaos events never fired: {left}")
+    led_sum, static_sum = reconcile(engine.program, report.records,
+                                    report.observed_vectors)
+    if led_sum != static_sum:
+        failures.append("per-request CM_* ledgers do not reconcile against "
+                        "the recovered program")
+    if not reconcile_recal(engine.program, report):
+        failures.append("recalibration CM_INITIALIZE books do not close")
+    if failures:
+        for f in failures:
+            print(f"  RESILIENCE FAILURE: {f}")
+        raise SystemExit(1)
+    print("  resilience books close exactly: no lost requests, every "
+          "fault fired, CM_* + recal ledgers reconcile")
 
 
 def _print_schedule(args, schedule):

@@ -11,17 +11,25 @@ below are the subsystem's public surface — `ServeEngine` /
 multi-tenant multi-model serving over one accelerator pool,
 `TenantPolicy`/`mixed_poisson_trace` for tenant load,
 `Request`/trace builders for load, `reconcile*` for the CM_* books,
-`resilient_step`/`StragglerMonitor` for the failure model
-(DESIGN.md §10-§12)."""
+`resilient_step`/`StragglerMonitor` for the failure model,
+`HealthMonitor`/`build_health` + `FaultInjector`/`parse_chaos` for
+drift-aware serving and chaos-grade fault injection
+(DESIGN.md §10-§12, §14)."""
 from repro.runtime.batcher import (Batcher, Request, RequestRecord,
                                    SlotAllocator, poisson_trace, reconcile,
                                    reconcile_cores, request_core_ledgers,
                                    request_ledgers, synchronized_trace)
+from repro.runtime.chaos import (FaultEvent, FaultInjector, corrupt_entries,
+                                 parse_chaos)
 from repro.runtime.engine import (EngineSession, ServeEngine, ServeReport,
                                   ShardedServeEngine, static_generate)
 from repro.runtime.fault_tolerance import (Heartbeat, StragglerMonitor,
+                                           backoff_schedule,
                                            elastic_mesh_shapes, is_transient,
                                            resilient_step)
+from repro.runtime.health import (HealthMonitor, HealthPolicy, ProbeSample,
+                                  RecalEvent, Recalibrator, build_health,
+                                  reconcile_recal)
 from repro.runtime.server import (ModelServer, ModelSpec, ServerReport,
                                   build_server)
 from repro.runtime.tenancy import (TenantPolicy, TenantRequest, TenantStats,

@@ -1,0 +1,124 @@
+"""Deterministic chaos harness for the serving engine.
+
+Fault injection that is REPRODUCIBLE: events fire at fixed chunk indices
+(the engine's dispatch counter, not wall time), and every corruption is a
+pure function of the event — same spec, same trace, same failure, every
+run. That determinism is what lets the recovery tests demand bit-equality:
+a chaos run that detects, drains, remaps and hot-reprograms before the
+next chunk dispatches must produce token-for-token the same output as an
+unfaulted run.
+
+Two fault kinds, both applied at a chunk boundary by
+`ServeEngine._resilience_tick`:
+
+  * ``kill``     — a core (context) dies outright: every matrix on it reads
+    as a dead crossbar (output gain 0), and the core is marked dead so the
+    health monitor MUST drain it onto peers (`AimcProgram.remap_context`)
+    and reprogram — recovery on the same core is not an option.
+  * ``corrupt``  — the core's tiles lose a fraction of their conductance
+    (gain 1-magnitude): detectable by the probe when the magnitude clears
+    the health threshold, repaired in place (no remap — the tiles are
+    reprogrammable).
+
+CLI form (``launch.serve --chaos``): comma-separated events
+``kill:CORE@CHUNK`` / ``corrupt:CORE@CHUNK[:MAGNITUDE]``, e.g.
+``--chaos kill:1@4`` or ``--chaos corrupt:0@2:0.5,kill:1@6``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.aimc import AimcLinearState
+from repro.core.program import AimcProgram
+
+KILL = "kill"
+CORRUPT = "corrupt"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One injected fault, scheduled on the engine's chunk-dispatch index."""
+
+    at_chunk: int
+    kind: str                 # KILL | CORRUPT
+    core: int
+    magnitude: float = 1.0    # conductance fraction lost (1.0 = dead)
+
+    def __post_init__(self):
+        if self.kind not in (KILL, CORRUPT):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if not 0.0 < self.magnitude <= 1.0:
+            raise ValueError(f"magnitude must be in (0, 1], "
+                             f"got {self.magnitude}")
+
+    def describe(self) -> str:
+        if self.kind == KILL:
+            return f"kill core {self.core} @ chunk {self.at_chunk}"
+        return (f"corrupt core {self.core} @ chunk {self.at_chunk} "
+                f"(magnitude {self.magnitude:g})")
+
+
+class FaultInjector:
+    """Fires scheduled `FaultEvent`s as the engine's chunk counter passes
+    them. One-shot per event; `fired` keeps the audit trail the serve
+    report exposes."""
+
+    def __init__(self, events):
+        self.events = tuple(sorted(events, key=lambda e: e.at_chunk))
+        self.fired: list[FaultEvent] = []
+        self._idx = 0
+
+    def due(self, chunk_idx: int) -> list[FaultEvent]:
+        out = []
+        while (self._idx < len(self.events)
+               and self.events[self._idx].at_chunk <= chunk_idx):
+            out.append(self.events[self._idx])
+            self._idx += 1
+        self.fired.extend(out)
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return self._idx >= len(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+def corrupt_entries(program: AimcProgram, core: int,
+                    magnitude: float) -> dict[str, AimcLinearState]:
+    """Degraded views of every matrix on ``core``: conductance scaled by
+    ``1 - magnitude`` (0 gain = dead crossbar). Deterministic — the
+    corruption is the event, not a noise draw — and structure-preserving,
+    so it installs via `install_updates` without recompiling."""
+    gain = 1.0 - magnitude
+    return {n: st.with_gain(gain)
+            for n, st, c in zip(program.names, program.states,
+                                program.contexts) if c == core}
+
+
+def parse_chaos(spec: str) -> FaultInjector:
+    """``kill:CORE@CHUNK`` / ``corrupt:CORE@CHUNK[:MAG]``, comma-joined."""
+    events = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            kind, rest = part.split(":", 1)
+            if kind == CORRUPT and rest.count(":") == 1:
+                rest, mag = rest.rsplit(":", 1)
+                magnitude = float(mag)
+            else:
+                magnitude = 1.0
+            core, chunk = rest.split("@")
+            events.append(FaultEvent(at_chunk=int(chunk), kind=kind,
+                                     core=int(core), magnitude=magnitude))
+        except (ValueError, TypeError) as e:
+            raise ValueError(
+                f"bad --chaos event {part!r} (want kill:CORE@CHUNK or "
+                f"corrupt:CORE@CHUNK[:MAG]): {e}") from None
+    if not events:
+        raise ValueError(f"--chaos spec {spec!r} contains no events")
+    return FaultInjector(events)

@@ -175,6 +175,18 @@ class ServeReport:
     makespan_s: float = 0.0        # engine clock: last retirement - start
     retries: int = 0
     stragglers: list = dataclasses.field(default_factory=list)
+    # drift-aware serving books (runtime.health / runtime.chaos): probes
+    # run, faults fired, hot recalibrations performed — and the extra
+    # CM_INITIALIZE device writes they charged (NEVER silent; reconciled by
+    # health.reconcile_recal against reprogram_counts recomputed from
+    # shapes). wall_health_s is the probe+repair wall, billed apart from
+    # decode so chunk timing stays honest under recovery.
+    probes: int = 0
+    n_recals: int = 0
+    recal_initialize: int = 0
+    recal_events: list = dataclasses.field(default_factory=list)
+    fault_events: list = dataclasses.field(default_factory=list)
+    wall_health_s: float = 0.0
 
     @property
     def useful_vectors(self) -> int:
@@ -256,6 +268,8 @@ class _PendingChunk:
     t_wall: float      # perf_counter at dispatch
     prefill0: float    # report.wall_prefill_s at dispatch
     n: int             # dispatched chunk length (a ladder size)
+    health0: float = 0.0   # report.wall_health_s at dispatch (overlap bill)
+    recals0: int = 0       # report.n_recals at dispatch (straggler exemption)
 
 
 # ---------------------------------------------------------------------------
@@ -280,7 +294,8 @@ class ServeEngine:
                  module: str = "transformer", program=None, schedule=None,
                  eos_id: int | None = None, pad_id: int = 0,
                  max_retries: int = 2, straggler_threshold: float = 3.0,
-                 admission: str = "fifo", decode_chunk: int = 1):
+                 admission: str = "fifo", decode_chunk: int = 1,
+                 health=None, chaos=None, heartbeat=None):
         if family == "audio":
             raise ValueError("ServeEngine serves decoder-only LMs; the "
                              "enc-dec audio family decodes via launch.steps")
@@ -305,6 +320,25 @@ class ServeEngine:
         self.monitor = StragglerMonitor(threshold=straggler_threshold)
         self._retries = 0
         self._step_no = 0          # engine-lifetime decode step counter
+        self._chunks_dispatched = 0  # lifetime chunk counter (chaos clock)
+        # drift-aware serving (DESIGN.md §14): a `runtime.health.
+        # HealthMonitor` evolves the installed states with program age,
+        # probes them at chunk boundaries, and hot-reprograms failing
+        # cores; a `runtime.chaos.FaultInjector` fires deterministic
+        # kill/corrupt events on the chunk-dispatch clock. Both act ONLY
+        # between chunks (`_resilience_tick`), so in-flight requests are
+        # never touched. `heartbeat` (fault_tolerance.Heartbeat) makes the
+        # loop's liveness visible to an external supervisor.
+        self.health, self.chaos, self.heartbeat = health, chaos, heartbeat
+        if health is not None:
+            if program is None:
+                raise ValueError("health monitoring requires an AimcProgram")
+            if tuple(health.program.names) != tuple(program.names):
+                raise ValueError("health monitor was built for a different "
+                                 "program (matrix names mismatch)")
+        if chaos is not None and health is None:
+            raise ValueError("chaos injection requires a HealthMonitor to "
+                             "detect and repair the faults it fires")
 
         # per-leaf batch axes of the decode cache (probed, not hardcoded:
         # transformer KV stacks batch at axis 1, recurrent state trees too,
@@ -506,6 +540,81 @@ class ServeEngine:
     def _count_retry(self):
         self._retries += 1
 
+    # -- drift / health / chaos (DESIGN.md §14) -------------------------------
+    def _set_params(self, params):
+        """Swap the served parameter tree. Every update preserves shapes and
+        treedef (drift gains scale s_w; reprogrammed states are
+        structure-identical), so the compiled closures are reused as-is.
+        The sharded engine overrides this to re-pin the mesh placement."""
+        self.params = params
+
+    def _resilience_tick(self, sess: "EngineSession", now: float) -> float:
+        """Chunk-boundary resilience work: fire due chaos events, advance
+        drift, probe the live states, and hot-reprogram failing cores.
+
+        Runs on the host BETWEEN chunk dispatches — an in-flight chunk was
+        dispatched against the previous parameter tree and is untouched, so
+        recovery never drops or perturbs an in-flight request. All wall
+        time spent here is billed to ``wall_health_s`` (and subtracted from
+        the overlapping chunk's decode bill in `_process_chunk`)."""
+        if self.health is None and self.chaos is None:
+            return now
+        from repro.core.program import installed_entries
+        from repro.runtime import chaos as chaos_lib
+        from repro.runtime.health import RecalEvent
+        t0 = time.perf_counter()
+        report = sess.report
+        forced = False
+        if self.chaos is not None:
+            for ev in self.chaos.due(self._chunks_dispatched):
+                prog = self.health.program
+                mag = 1.0 if ev.kind == chaos_lib.KILL else ev.magnitude
+                entries = chaos_lib.corrupt_entries(prog, ev.core, mag)
+                if ev.kind == chaos_lib.KILL:
+                    self.health.mark_dead(ev.core)
+                if entries:
+                    self._set_params(
+                        prog.install_updates(self.params, entries))
+                report.fault_events.append(ev)
+                forced = True
+        if self.health is not None and (forced or self.health.due(now)):
+            drifted = self.health.drifted_entries(now)
+            if drifted:
+                self._set_params(
+                    self.health.program.install_updates(self.params, drifted))
+            live = installed_entries(self.params)
+            sample = self.health.probe(live, now)
+            report.probes += 1
+            failing = self.health.failing_cores(sample)
+            if failing:
+                dead = set(failing) & self.health.dead
+                t_r = time.perf_counter()
+                entries, names, cm = self.health.recalibrate(failing, now)
+                if names:
+                    prog = self.health.program
+                    self.program = prog
+                    if (self.schedule is not None
+                            and self.schedule.name == "from_program"):
+                        from repro.core.schedule import CoreSchedule
+                        self.schedule = CoreSchedule.from_program(
+                            prog, pipelined=self.schedule.pipelined)
+                    self._set_params(
+                        prog.install_updates(self.params, entries))
+                    ev = RecalEvent(
+                        t=now,
+                        reason=("dead_core" if dead
+                                else "fault" if forced else "drift"),
+                        cores=tuple(failing), names=names,
+                        initialize=cm.initialize,
+                        wall_s=time.perf_counter() - t_r)
+                    self.health.events.append(ev)
+                    report.recal_events.append(ev)
+                    report.recal_initialize += cm.initialize
+                    report.n_recals += 1
+        wall = time.perf_counter() - t0
+        report.wall_health_s += wall
+        return now + wall
+
     # -- request plumbing ----------------------------------------------------
     def _pad_prompt(self, prompt):
         if len(prompt) > self.prompt_pad:
@@ -672,8 +781,11 @@ class ServeEngine:
             self.params, sess.cache, sess.tok_buf, sess.state)
         for slot in sess.slot_rec:
             sess.rem[slot] = max(0, sess.rem.get(slot, 0) - n)
+        self._chunks_dispatched += 1
         return _PendingChunk(ys=ys, t_wall=t0,
-                             prefill0=sess.report.wall_prefill_s, n=n)
+                             prefill0=sess.report.wall_prefill_s, n=n,
+                             health0=sess.report.wall_health_s,
+                             recals0=sess.report.n_recals)
 
     def _process_chunk(self, sess: "EngineSession", pend: _PendingChunk,
                        now: float) -> float:
@@ -687,7 +799,8 @@ class ServeEngine:
         # now (the chunk we just read back queued after it) — the deferred
         # first-token reads cost a host copy, not a wait
         self._resolve_firsts(sess)
-        overlap = report.wall_prefill_s - pend.prefill0
+        overlap = ((report.wall_prefill_s - pend.prefill0)
+                   + (report.wall_health_s - pend.health0))
         dt = max(time.perf_counter() - pend.t_wall - overlap, 0.0)
         now += dt
         report.wall_decode_s += dt
@@ -699,7 +812,19 @@ class ServeEngine:
         report.observed_vectors += busy
         report.idle_vectors += self.n_slots * ran - busy
         self._step_no += ran
-        self.monitor.record(self._step_no, dt / max(ran, 1))
+        # a chunk whose window held a hot reprogram is legitimately slow:
+        # exempt it from the straggler EWMA (flagging recovery would page
+        # an operator for behavior the engine itself caused, and the
+        # inflated sample would poison the baseline)
+        self.monitor.record(self._step_no, dt / max(ran, 1),
+                            exempt=report.n_recals > pend.recals0)
+        if self.heartbeat is not None:
+            self.heartbeat.beat(
+                self._step_no, slots_busy=sess.slots.n_busy,
+                slots_free=sess.slots.n_free, chunk_len=ran,
+                last_chunk_s=time.time(),
+                wall_decode_s=report.wall_decode_s,
+                n_recals=report.n_recals)
 
         for s in range(ran):
             for slot in list(sess.slot_rec):
@@ -734,6 +859,7 @@ class ServeEngine:
         > 0``. External drivers (the multi-tenant server) see retirement
         and quota accounting land on chunk boundaries; `serve()` instead
         double-buffers dispatch/process for comm/compute overlap."""
+        now = self._resilience_tick(sess, now)
         return self._process_chunk(sess, self._dispatch_chunk(sess), now)
 
     def cancel_active(self, sess: "EngineSession", now: float):
@@ -779,6 +905,9 @@ class ServeEngine:
                 if req is None:
                     break
                 now = self.admit(sess, req, now)
+
+            # ---- chunk-boundary resilience (drift / chaos / recal) ---------
+            now = self._resilience_tick(sess, now)
 
             if not sess.slots.n_busy and pending is None:
                 nxt = queue.next_arrival()
@@ -925,6 +1054,11 @@ class ShardedServeEngine(ServeEngine):
             n: resilient_step(f, max_retries=max_retries,
                               on_retry=lambda attempt, e: self._count_retry())
             for n, f in self._decode_jits.items()}
+
+    def _set_params(self, params):
+        # re-pin the updated tree to the mesh layout the closures were
+        # compiled against (identical treedef/shapes -> no recompile)
+        self.params = jax.device_put(params, self._param_sh)
 
     def _empty_cache(self):
         # created ON the mesh placement (models' sharding-annotated init)

@@ -18,7 +18,8 @@ This module implements the in-process half and the restart protocol:
     watch; doubles as the liveness probe in the launch scripts.
 
 Public surface: `is_transient(exc)`, `resilient_step(fn, max_retries,
-on_retry)`, `StragglerMonitor`, `Heartbeat`, `elastic_mesh_shapes`.
+on_retry)`, `backoff_schedule`, `StragglerMonitor`, `Heartbeat`,
+`elastic_mesh_shapes`.
 Invariant: classification is on the error MESSAGE, not the type —
 deterministic failures (RESOURCE_EXHAUSTED, INVALID_ARGUMENT, plain
 RuntimeErrors) raise immediately; only recognized infrastructure flakes
@@ -32,6 +33,8 @@ import os
 import statistics
 import time
 from typing import Callable
+
+from repro.core import noise as noise_lib
 
 # The candidate exception TYPES a transient device/runtime failure surfaces
 # as. Type alone is NOT enough to retry: XLA raises RuntimeError/XlaRuntimeError
@@ -77,10 +80,42 @@ def is_transient(exc: BaseException) -> bool:
     return any(s.lower() in low for s in TRANSIENT_SUBSTRINGS)
 
 
+def backoff_schedule(max_retries: int, base: float = 0.05, cap: float = 2.0,
+                     jitter: float = 0.5, seed: int = 0) -> tuple[float, ...]:
+    """The exact sleep (seconds) before each retry: capped exponential
+    backoff with DETERMINISTIC jitter.
+
+    Attempt a sleeps ``min(cap, base * 2^a) * (1 + jitter * u_a)`` with
+    ``u_a`` in [-1, 1) hashed from ``(seed, a)`` — same seed, same schedule,
+    on every process and platform (pinned by tests/test_resilience.py).
+    Jitter decorrelates a fleet of workers retrying the same flaky endpoint
+    without sacrificing reproducibility; ``jitter=0`` is the pure
+    exponential."""
+    out = []
+    for a in range(max_retries):
+        delay = min(cap, base * (2.0 ** a))
+        if jitter:
+            u = 2.0 * noise_lib.unit_hash(seed, a) - 1.0
+            delay *= 1.0 + jitter * u
+        out.append(delay)
+    return tuple(out)
+
+
 def resilient_step(step_fn: Callable, max_retries: int = 2,
-                   on_retry: Callable[[int, Exception], None] | None = None):
+                   on_retry: Callable[[int, Exception], None] | None = None,
+                   *, base_delay: float = 0.05, max_delay: float = 2.0,
+                   jitter: float = 0.5, seed: int = 0,
+                   sleep: Callable[[float], None] = time.sleep):
     """Wrap a compiled step function with bounded retry of TRANSIENT
-    failures (`is_transient`); terminal errors propagate immediately."""
+    failures (`is_transient`); terminal errors propagate immediately.
+
+    Sleeps between attempts follow `backoff_schedule(max_retries,
+    base_delay, max_delay, jitter, seed)` — capped exponential with
+    deterministic jitter, replacing the old linear 0.5s*(attempt+1) ramp
+    (which synchronized retry storms and burned half a second on the first
+    flake). ``sleep`` is injectable so tests pin the schedule without
+    waiting it out."""
+    delays = backoff_schedule(max_retries, base_delay, max_delay, jitter, seed)
 
     def wrapped(*args, **kwargs):
         for attempt in range(max_retries + 1):
@@ -91,7 +126,7 @@ def resilient_step(step_fn: Callable, max_retries: int = 2,
                     raise
                 if on_retry:
                     on_retry(attempt, e)
-                time.sleep(0.5 * (attempt + 1))
+                sleep(delays[attempt])
         raise AssertionError("unreachable")
 
     return wrapped
@@ -104,7 +139,14 @@ class StragglerMonitor:
     samples, not the first sample alone: a slow first step would both
     escape detection (nothing to compare against) and poison the baseline
     so steps 2..warmup could never be flagged. Samples buffer until the
-    warmup window fills; flagging starts on the first post-seed sample."""
+    warmup window fills; flagging starts on the first post-seed sample.
+
+    Windows the caller KNOWS are legitimately slow — a hot-reprogram /
+    recalibration chunk in the serve loop — are recorded with
+    ``exempt=True``: they are never flagged (recovery must not trip the
+    straggler callback) and never enter the EWMA or the warmup buffer (a
+    recal chunk would inflate the baseline and mask real stragglers
+    afterwards). Exempted samples are kept in ``self.exempted``."""
 
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
                  warmup: int = 3, on_straggler=None):
@@ -116,10 +158,14 @@ class StragglerMonitor:
         self.count = 0
         self._warmup_buf: list[float] = []
         self.flagged: list[tuple[int, float, float]] = []
+        self.exempted: list[tuple[int, float]] = []
 
-    def record(self, step: int, dt: float) -> bool:
+    def record(self, step: int, dt: float, exempt: bool = False) -> bool:
         """Record one step time; returns True if flagged as straggler."""
         self.count += 1
+        if exempt:
+            self.exempted.append((step, dt))
+            return False
         if self.ewma is None:
             self._warmup_buf.append(dt)
             if len(self._warmup_buf) < self.warmup:

@@ -1,0 +1,273 @@
+"""Online health monitoring + hot recalibration for drift-aware serving.
+
+Real PCM crossbars do not stay programmed: conductances decay along a power
+law (core.noise.drift_gain_at), cores vary, and — at fleet scale — whole
+cores die mid-trace. This module is the serve-loop counterpart of
+`fault_tolerance.resilient_step`: it detects analog degradation ONLINE and
+repairs it without dropping traffic.
+
+The loop (driven by `ServeEngine._resilience_tick` at chunk boundaries):
+
+  1. **Drift refresh** — `HealthMonitor.drifted_entries(t_now)` re-derives
+     every installed state from the program's FRESH codes with the current
+     power-law gain (`AimcLinearState.with_gain`). Same shapes, same
+     treedef: refreshing drift never recompiles a serve closure.
+  2. **Probe** — `probe(entries, t_now)` pushes a few fixed probe vectors
+     through the LIVE states via the reference kernel (`kernels/ref.py`,
+     the digital oracle path) and compares against the fresh-program
+     outputs captured at build time. The per-core error is exact: a pure
+     drift gain g shows up as relative error 1-g, a dead crossbar as 1.0.
+  3. **Recalibrate** — past `HealthPolicy.threshold` (or on a core marked
+     dead by the chaos harness), `recalibrate(cores, t_now)` reprograms the
+     failing cores' matrices from reference weights under their ORIGINAL
+     programming keys (`Recalibrator`), so the repaired state is bit-equal
+     to the fresh program. Dead cores are first drained onto survivors
+     (`AimcProgram.remap_context` — spare tiles, re-claimed placements).
+     The CM_INITIALIZE cost is returned to the caller and charged to the
+     serve report — NEVER silently.
+
+Invariants (pinned by tests/test_resilience.py): probe error is 0 on a
+fresh program (the oracle is the same code path); reprogramming under the
+original key is bit-exact; recalibration charges exactly
+`program.reprogram_counts(names)`; MVM-count reconciliation is invariant
+under remap (counts are shape-only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.core import noise as noise_lib
+from repro.core.aimc import AimcConfig, AimcLinearState, aimc_apply, \
+    program_stacked
+from repro.core.program import AimcProgram, MappingPlan, iter_mapped_leaves
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """When to probe and when to repair (hashable; defaults serve smokes)."""
+
+    threshold: float = 0.05     # per-core relative probe error triggering recal
+    probe_batch: int = 2        # probe vectors per matrix
+    probe_interval_s: float = 0.0  # min seconds between probes; 0 = every tick
+    seed: int = 0               # probe vectors + per-core drift-nu variation
+
+
+@dataclasses.dataclass(frozen=True)
+class RecalEvent:
+    """One hot recalibration, as charged to the serve report."""
+
+    t: float                    # serve-clock instant
+    reason: str                 # "drift" | "dead_core" | ...
+    cores: tuple[int, ...]      # failing cores repaired
+    names: tuple[str, ...]      # matrices reprogrammed
+    initialize: int             # CM_INITIALIZE device writes charged
+    wall_s: float               # host+device wall spent repairing
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSample:
+    t: float
+    errors: dict[int, float]    # core -> max relative probe error
+
+
+def _apply_state(st: AimcLinearState, x: jnp.ndarray,
+                 cfg: AimcConfig) -> jnp.ndarray:
+    """Probe MVM through the analog pipeline; stacked instances vmapped."""
+    if not st.stack_shape:
+        return aimc_apply(st, x, cfg)
+    wq = st.w_q.reshape((-1,) + st.w_q.shape[-3:])
+    sw = st.s_w.reshape((-1,) + st.s_w.shape[-2:])
+
+    def one(wq_i, sw_i):
+        return aimc_apply(AimcLinearState(w_q=wq_i, s_w=sw_i,
+                                          k=st.k, n=st.n), x, cfg)
+
+    return jax.vmap(one)(wq, sw)
+
+
+def _rel_err(y: jnp.ndarray, y_ref: jnp.ndarray) -> float:
+    num = float(jnp.linalg.norm((y - y_ref).ravel()))
+    den = float(jnp.linalg.norm(y_ref.ravel()))
+    return num / (den + 1e-12)
+
+
+class Recalibrator:
+    """Reference weights + programming keys for bit-exact hot reprogramming.
+
+    After `install()` the raw float weights leave the parameter tree, so a
+    mid-serve repair needs them captured up front. This replays the exact
+    `program_model` walk (`iter_mapped_leaves` is the shared contract) over
+    the RAW parameter tree: matrix i gets `fold_in(key, i)` — the same key
+    it was originally programmed under — so `fresh_state(name)` reproduces
+    the program's state bit-for-bit, programming noise included."""
+
+    def __init__(self, program: AimcProgram, params_raw,
+                 plan: MappingPlan | None, key: jax.Array | None):
+        self.cfg = program.cfg
+        self.refs: dict[str, tuple[jnp.ndarray, jax.Array | None]] = {}
+        for pkey, w, idx in iter_mapped_leaves(params_raw, plan):
+            if pkey in program:
+                sub = (jax.random.fold_in(key, idx)
+                       if key is not None else None)
+                self.refs[pkey] = (jnp.asarray(w), sub)
+        missing = set(program.names) - set(self.refs)
+        if missing:
+            raise ValueError(
+                f"Recalibrator: raw params/plan do not cover program "
+                f"matrices {sorted(missing)} (was the program built by "
+                f"program_model with this plan?)")
+
+    def fresh_state(self, name: str) -> AimcLinearState:
+        w, key = self.refs[name]
+        return program_stacked(w, self.cfg, key)
+
+    def reference_weight(self, name: str) -> jnp.ndarray:
+        return self.refs[name][0]
+
+
+class HealthMonitor:
+    """Per-core online error tracking + the hot-recalibration authority.
+
+    Owns the CURRENT program (updated on every repair — the engine mirrors
+    it), a `Recalibrator` for bit-exact reprogramming, and the drift model
+    evolving the installed states. Construct via `build_health` when
+    starting from raw params + plan."""
+
+    def __init__(self, program: AimcProgram, recal: Recalibrator,
+                 policy: HealthPolicy | None = None,
+                 noise: noise_lib.NoiseModel | None = None):
+        self.program = program
+        self.recal = recal
+        self.policy = policy or HealthPolicy()
+        self.noise = program.cfg.noise if noise is None else noise
+        self.dead: set[int] = set()
+        self.history: list[ProbeSample] = []
+        self.events: list[RecalEvent] = []
+        self._last_probe_t: float | None = None
+        self._applied_gains: dict[str, float] | None = None
+        # probe kit: fixed vectors, fresh-path references (the digital
+        # oracle through kernels/ref.py), and the quantization floor of
+        # each matrix (analog fresh vs float matmul) for reporting.
+        probe_cfg = dataclasses.replace(program.cfg, impl="ref")
+        self._probe_cfg = probe_cfg
+        key = jax.random.PRNGKey(self.policy.seed)
+        self._probes: dict[str, jnp.ndarray] = {}
+        self._refs: dict[str, jnp.ndarray] = {}
+        self.quant_floor: dict[str, float] = {}
+        for i, (name, st) in enumerate(zip(program.names, program.states)):
+            x = jax.random.normal(jax.random.fold_in(key, i),
+                                  (self.policy.probe_batch, st.k),
+                                  jnp.float32)
+            y_fresh = _apply_state(st, x, probe_cfg)
+            self._probes[name] = x
+            self._refs[name] = y_fresh
+            w = recal.reference_weight(name)
+            y_dig = jnp.einsum("bk,...kn->...bn", x, w.astype(jnp.float32))
+            self.quant_floor[name] = _rel_err(y_fresh, y_dig)
+
+    # -- drift --------------------------------------------------------------
+    @property
+    def drift_active(self) -> bool:
+        return self.noise.enabled and self.noise.drift_nu != 0.0
+
+    def drifted_entries(self, t_now: float) -> dict[str, AimcLinearState]:
+        """Decayed views of the current program at ``t_now`` — {} when the
+        gains have not moved since the last application (avoids re-device-
+        putting identical states every chunk)."""
+        if not self.drift_active:
+            return {}
+        gains = self.program.drift_gains(t_now, self.noise, self.policy.seed)
+        if gains == self._applied_gains:
+            return {}
+        self._applied_gains = gains
+        if all(g == 1.0 for g in gains.values()):
+            return {}
+        return {n: st.with_gain(gains[n])
+                for n, st in zip(self.program.names, self.program.states)}
+
+    # -- probes -------------------------------------------------------------
+    def due(self, t_now: float) -> bool:
+        if self._last_probe_t is None or self.policy.probe_interval_s <= 0.0:
+            return True
+        return t_now - self._last_probe_t >= self.policy.probe_interval_s
+
+    def probe(self, entries: dict[str, AimcLinearState],
+              t_now: float) -> ProbeSample:
+        """Measure per-core output error of the LIVE states against the
+        fresh-program oracle. ``entries`` are the states actually installed
+        in the engine's parameter tree (drifted, corrupted, or repaired —
+        whatever serving traffic sees)."""
+        self._last_probe_t = t_now
+        errors: dict[int, float] = {}
+        for name, ctx in zip(self.program.names, self.program.contexts):
+            st = entries.get(name)
+            if st is None:
+                continue
+            err = _rel_err(_apply_state(st, self._probes[name],
+                                        self._probe_cfg), self._refs[name])
+            errors[ctx] = max(errors.get(ctx, 0.0), err)
+        sample = ProbeSample(t=t_now, errors=errors)
+        self.history.append(sample)
+        return sample
+
+    def failing_cores(self, sample: ProbeSample) -> tuple[int, ...]:
+        over = {c for c, e in sample.errors.items()
+                if e > self.policy.threshold}
+        return tuple(sorted(over | self.dead))
+
+    # -- failure marking (the chaos harness's entry point) -------------------
+    def mark_dead(self, core: int):
+        self.dead.add(core)
+
+    # -- repair --------------------------------------------------------------
+    def recalibrate(self, cores, t_now: float):
+        """Hot-reprogram every matrix on ``cores``; dead cores drain first.
+
+        Returns ``(entries, names, cm)``: the freshly-programmed states to
+        `install_updates`, the matrices repaired, and the CM_INITIALIZE
+        bill. Updates `self.program` (remapped contexts + reset ages); the
+        caller must mirror it and charge ``cm`` to its books."""
+        cores = set(cores)
+        prog = self.program
+        names = tuple(n for n, c in zip(prog.names, prog.contexts)
+                      if c in cores)
+        if not names:
+            self.dead -= cores
+            return {}, (), isa.CmCounts()
+        for c in sorted(cores & self.dead):
+            prog = prog.remap_context(c)
+        entries = {n: self.recal.fresh_state(n) for n in names}
+        cm = prog.reprogram_counts(names)
+        self.program = prog.reprogrammed(entries, t_now)
+        self.dead -= cores
+        self._applied_gains = None  # reprogrammed ages restart the decay law
+        return entries, names, cm
+
+
+def build_health(program: AimcProgram, params_raw,
+                 plan: MappingPlan | None, key: jax.Array | None,
+                 policy: HealthPolicy | None = None,
+                 noise: noise_lib.NoiseModel | None = None) -> HealthMonitor:
+    """The one-call front door: capture references off the RAW params (the
+    tree BEFORE `install`) and stand up the monitor."""
+    return HealthMonitor(program, Recalibrator(program, params_raw, plan, key),
+                         policy=policy, noise=noise)
+
+
+def reconcile_recal(program: AimcProgram, report) -> bool:
+    """The recal books must close exactly: every event's CM_INITIALIZE bill
+    equals `reprogram_counts` recomputed from the program's shapes, and the
+    report's total charge equals the per-event sum. Shape-only accounting —
+    no instrumentation inside jit — exactly like `mvm_counts`
+    reconciliation. A repair that went unbilled (or double-billed) fails
+    here even though token outputs look fine."""
+    events = getattr(report, "recal_events", [])
+    for ev in events:
+        if ev.initialize != program.reprogram_counts(ev.names).initialize:
+            return False
+    return report.recal_initialize == sum(ev.initialize for ev in events)

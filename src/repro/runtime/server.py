@@ -188,7 +188,7 @@ class ModelServer:
 
     # -- the serving loop ----------------------------------------------------
     def serve(self, trace: Sequence[TenantRequest],
-              max_steps: int = 100_000) -> ServerReport:
+              max_steps: int = 100_000, heartbeat=None) -> ServerReport:
         """Serve a mixed-tenant trace to completion under one shared clock.
 
         The clock starts at 0 and advances by the measured wall time of
@@ -196,7 +196,12 @@ class ModelServer:
         single-host pool); when everything is idle it jumps to the next
         arrival. Admission is tenant-fair per model (`tenancy.pick_tenant`)
         with each tenant's own queue order; decode is round-robin, one
-        dense step per model with busy lanes per pass."""
+        dense step per model with busy lanes per pass.
+
+        ``heartbeat`` (a `fault_tolerance.Heartbeat`) is beaten once per
+        decode pass with slot occupancy per model and the wall timestamp
+        of the last completed chunk — the liveness probe an external
+        supervisor watches to distinguish a wedged loop from a slow one."""
         for tr in trace:
             if tr.tenant not in self.policies:
                 raise ValueError(f"request {tr.request.rid}: unknown tenant "
@@ -214,6 +219,7 @@ class ModelServer:
         in_flight = {name: 0 for name in self.policies}   # decode slots held
         capped: set[str] = set()                          # hit max_steps
         now = 0.0
+        n_pass = 0
 
         def queued(m: str) -> int:
             return sum(len(queues[t]) for t in self._tenants_of[m])
@@ -256,6 +262,20 @@ class ModelServer:
                 stepped = True
 
             if stepped:
+                n_pass += 1
+                if heartbeat is not None:
+                    import time
+                    heartbeat.beat(
+                        n_pass,
+                        last_chunk_s=time.time(),
+                        engine_clock_s=now,
+                        slots={m: {"busy": sessions[m].slots.n_busy,
+                                   "free": sessions[m].slots.n_free}
+                               for m in self.engines},
+                        n_steps={m: sessions[m].report.n_steps
+                                 for m in self.engines},
+                        n_recals={m: sessions[m].report.n_recals
+                                  for m in self.engines})
                 continue
             # ---- idle: jump to the next arrival, or done -------------------
             arrivals = [queues[t].next_arrival()

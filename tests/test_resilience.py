@@ -1,0 +1,483 @@
+"""Drift, health, and chaos contract suite (DESIGN.md §14).
+
+The ISSUE-8 acceptance criteria pinned here:
+  * time-dependent degradation: the power-law `drift_gain_at` law, the
+    per-core nu variation hooks, and the program-age clock
+    (`AimcProgram.t_programmed` / `reprogrammed`) are deterministic and
+    restart correctly on reprogramming;
+  * capped-exponential backoff with DETERMINISTIC jitter: the schedule is
+    pinned by value, `resilient_step` sleeps exactly it (injected sleep);
+  * the straggler monitor exempts flagged recalibration windows from the
+    EWMA — recovery never trips the straggler callback and never poisons
+    the baseline;
+  * hot reprogramming is BIT-EXACT: `Recalibrator.fresh_state` reproduces
+    the original program state bit-for-bit under the original key;
+  * dead-core drain (`remap_context`) never overlaps tiles and leaves the
+    shape-only CM_* books invariant;
+  * mid-trace recovery: a core killed at a chunk boundary drops ZERO
+    in-flight requests, the CM_* ledgers (including the extra
+    CM_INITIALIZE of the hot reprogram) reconcile exactly, and the
+    remapped run's output is BIT-EQUAL to an unfaulted run.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core import noise as noise_lib
+from repro.core.aimc import AimcConfig
+from repro.core.program import (CapacityError, MappingPlan,
+                                installed_entries, program_model)
+from repro.core.schedule import CoreSchedule
+from repro.core.tile import overlapping_placements
+from repro.models.layers import Execution
+from repro.runtime.batcher import poisson_trace, reconcile
+from repro.runtime.chaos import FaultEvent, FaultInjector, parse_chaos
+from repro.runtime.engine import ServeEngine
+from repro.runtime.fault_tolerance import (StragglerMonitor, backoff_schedule,
+                                           resilient_step)
+from repro.runtime.health import build_health, reconcile_recal
+
+EXE = Execution(compute_dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# drift model (core/noise.py)
+# ---------------------------------------------------------------------------
+
+def test_drift_gain_power_law():
+    nm = noise_lib.drift_only(nu=0.1, t0=1.0)
+    # G(t)/G(t0) = (t/t0)^-nu once t > t0
+    assert nm.drift_gain_at(10.0) == pytest.approx(10.0 ** -0.1)
+    assert nm.drift_gain_at(100.0) == pytest.approx(100.0 ** -0.1)
+    # before the reference time there is no decay
+    assert nm.drift_gain_at(0.5) == 1.0
+    assert nm.drift_gain_at(0.0) == 1.0
+    # explicit nu override (the per-core path)
+    assert nm.drift_gain_at(10.0, nu=0.2) == pytest.approx(10.0 ** -0.2)
+    # disabled model / zero exponent: no drift
+    assert noise_lib.NoiseModel(enabled=False).drift_gain_at(1e6) == 1.0
+    assert noise_lib.drift_only(nu=0.0).drift_gain_at(1e6) == 1.0
+
+
+def test_per_core_nu_variation_deterministic():
+    nm = noise_lib.drift_only(nu=0.1, core_spread=0.2)
+    nus = [nm.per_core_nu(c) for c in range(8)]
+    # bounded: nu * (1 +- spread)
+    assert all(0.08 <= v <= 0.12 for v in nus)
+    # cores differ, repeats agree (hash, not RNG state)
+    assert len(set(nus)) > 1
+    assert nus == [nm.per_core_nu(c) for c in range(8)]
+    # no spread -> exact nu everywhere
+    flat = noise_lib.drift_only(nu=0.1)
+    assert all(flat.per_core_nu(c) == 0.1 for c in range(4))
+
+
+# ---------------------------------------------------------------------------
+# backoff (fault_tolerance.py)
+# ---------------------------------------------------------------------------
+
+def test_backoff_schedule_pinned():
+    # the exact schedule (seed 0): capped exponential with splitmix jitter
+    sched = backoff_schedule(4, base=0.05, cap=0.4, jitter=0.5, seed=0)
+    assert sched == pytest.approx(
+        (0.0388116791, 0.0864757143, 0.2067804045, 0.3341647346), rel=1e-8)
+    # deterministic across calls; different seed, different jitter
+    assert sched == backoff_schedule(4, base=0.05, cap=0.4, jitter=0.5,
+                                     seed=0)
+    assert sched != backoff_schedule(4, base=0.05, cap=0.4, jitter=0.5,
+                                     seed=1)
+    # jitter=0 is the pure capped exponential
+    assert backoff_schedule(4, base=0.05, cap=0.4, jitter=0.0) == \
+        (0.05, 0.1, 0.2, 0.4)
+    # the cap bounds every jittered delay: delay <= cap * (1 + jitter)
+    long = backoff_schedule(20, base=0.05, cap=0.4, jitter=0.5, seed=3)
+    assert all(d <= 0.4 * 1.5 for d in long)
+
+
+def test_resilient_step_sleeps_the_pinned_schedule():
+    slept = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise OSError("connection reset")
+        return "ok"
+
+    fn = resilient_step(flaky, max_retries=3, base_delay=0.05,
+                        max_delay=0.4, jitter=0.5, seed=0,
+                        sleep=slept.append)
+    assert fn() == "ok"
+    assert tuple(slept) == pytest.approx(
+        backoff_schedule(3, base=0.05, cap=0.4, jitter=0.5, seed=0))
+
+
+def test_resilient_step_terminal_error_does_not_sleep():
+    slept = []
+
+    def oom():
+        raise RuntimeError("RESOURCE_EXHAUSTED: out of memory")
+
+    fn = resilient_step(oom, max_retries=3, sleep=slept.append)
+    with pytest.raises(RuntimeError):
+        fn()
+    assert slept == []
+
+
+# ---------------------------------------------------------------------------
+# straggler exemption (fault_tolerance.py)
+# ---------------------------------------------------------------------------
+
+def test_straggler_monitor_exempts_recal_windows():
+    flagged = []
+    mon = StragglerMonitor(threshold=2.0, warmup=3,
+                           on_straggler=lambda *a: flagged.append(a))
+    for i in range(3):
+        mon.record(i, 0.1)
+    ewma0 = mon.ewma
+    # a recal chunk is 100x slower — exempt: not flagged, EWMA untouched
+    assert mon.record(3, 10.0, exempt=True) is False
+    assert flagged == []
+    assert mon.ewma == ewma0
+    assert mon.exempted == [(3, 10.0)]
+    # the same sample NOT exempted is flagged
+    assert mon.record(4, 10.0) is True
+    assert len(flagged) == 1
+    # exempt samples during warmup never enter the seed buffer
+    mon2 = StragglerMonitor(threshold=2.0, warmup=2)
+    mon2.record(0, 5.0, exempt=True)
+    mon2.record(1, 0.1)
+    mon2.record(2, 0.1)
+    assert mon2.ewma == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# chaos spec parsing (runtime/chaos.py)
+# ---------------------------------------------------------------------------
+
+def test_parse_chaos_specs():
+    inj = parse_chaos("corrupt:0@2:0.5,kill:1@4")
+    assert [e.describe() for e in inj.events] == [
+        "corrupt core 0 @ chunk 2 (magnitude 0.5)",
+        "kill core 1 @ chunk 4"]
+    # events fire one-shot, in chunk order, once the counter passes them
+    assert inj.due(1) == []
+    assert [e.kind for e in inj.due(4)] == ["corrupt", "kill"]
+    assert inj.due(9) == []
+    assert inj.exhausted and len(inj.fired) == 2
+    for bad in ("", "explode:0@1", "kill:0", "corrupt:0@1:1.5"):
+        with pytest.raises(ValueError):
+            parse_chaos(bad)
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(at_chunk=0, kind="meteor", core=0)
+    with pytest.raises(ValueError):
+        FaultEvent(at_chunk=0, kind="corrupt", core=0, magnitude=0.0)
+    # out-of-order schedules sort by chunk
+    inj = FaultInjector([FaultEvent(5, "kill", 1), FaultEvent(2, "kill", 0)])
+    assert [e.at_chunk for e in inj.events] == [2, 5]
+
+
+# ---------------------------------------------------------------------------
+# program-age clock + drain/repair (core/program.py) and health
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tfm():
+    spec = get_arch("granite-8b")
+    cfg = spec.smoke_cfg
+    model = spec.model_module()
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return spec, cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def programmed(tfm):
+    """(program, plan, key, params_raw, aimc) on 2 virtual cores."""
+    spec, cfg, model, params = tfm
+    aimc = AimcConfig(impl="ref", input_scale=0.1)
+    plan = MappingPlan(n_contexts=2)
+    key = jax.random.PRNGKey(3)
+    program = program_model(params, plan, aimc, key)
+    return program, plan, key, params, aimc
+
+
+def test_program_age_clock(programmed):
+    program, _, _, _, _ = programmed
+    assert program.t_programmed == (0.0,) * len(program.names)
+    assert program.ages(5.0) == {n: 5.0 for n in program.names}
+    # reprogramming ONE matrix restarts only that matrix's clock
+    name = program.names[0]
+    prog2 = program.reprogrammed({name: program.states[0]}, 5.0)
+    assert prog2.t_programmed[0] == 5.0
+    assert prog2.t_programmed[1:] == program.t_programmed[1:]
+    assert prog2.ages(7.0)[name] == 2.0
+    with pytest.raises(KeyError):
+        program.reprogrammed({"nope": program.states[0]}, 1.0)
+
+
+def test_drift_gains_and_aged_entries(programmed):
+    program, _, _, _, _ = programmed
+    nm = noise_lib.drift_only(nu=0.1, t0=1.0)
+    gains = program.drift_gains(10.0, nm)
+    assert set(gains) == set(program.names)
+    assert all(g == pytest.approx(10.0 ** -0.1) for g in gains.values())
+    # aged entries scale s_w by exactly the gain; codes untouched
+    entries = program.aged_entries(10.0, nm)
+    st0, aged0 = program.states[0], entries[program.names[0]]
+    assert jnp.array_equal(aged0.w_q, st0.w_q)
+    assert jnp.allclose(aged0.s_w, st0.s_w * (10.0 ** -0.1))
+    # inside t0 nothing ages -> no entries at all
+    assert program.aged_entries(0.5, nm) == {}
+
+
+def test_install_updates_swaps_only_named_states(programmed, tfm):
+    program, _, _, params, _ = programmed
+    installed = program.install(params)
+    name = program.names[0]
+    aged = program.states[0].with_gain(0.5)
+    updated = program.install_updates(installed, {name: aged})
+    live = installed_entries(updated)
+    assert jnp.allclose(live[name].s_w, program.states[0].s_w * 0.5)
+    other = program.names[1]
+    assert jnp.array_equal(live[other].s_w,
+                           installed_entries(installed)[other].s_w)
+    with pytest.raises(KeyError):
+        program.install_updates(installed, {"nope": aged})
+
+
+def test_remap_context_drains_without_overlap(programmed):
+    program, _, _, _, _ = programmed
+    dead = 1
+    moved = [n for n, c in zip(program.names, program.contexts) if c == dead]
+    assert moved, "fixture must place something on core 1"
+    prog2 = program.remap_context(dead)
+    # every matrix survives, none on the dead core, books are invariant
+    assert prog2.names == program.names
+    assert dead not in prog2.contexts
+    assert prog2.mvm_counts() == program.mvm_counts()
+    assert prog2.initialize_counts() == program.initialize_counts()
+    # the re-packed placements never overlap resident tiles
+    for ctx, tm in enumerate(prog2.tile_maps):
+        assert overlapping_placements(tm.placements) == [], ctx
+    with pytest.raises(ValueError):
+        program.remap_context(99)
+
+
+def test_remap_single_context_has_nowhere_to_drain(tfm):
+    spec, cfg, model, params = tfm
+    single = program_model(params, MappingPlan(),
+                           AimcConfig(impl="ref", input_scale=0.1),
+                           jax.random.PRNGKey(3))
+    with pytest.raises(CapacityError):
+        single.remap_context(0)
+
+
+def test_reprogram_counts_match_initialize(programmed):
+    program, _, _, _, _ = programmed
+    # reprogramming EVERY matrix costs exactly the session's program bill
+    assert (program.reprogram_counts(program.names).initialize
+            == program.initialize_counts().initialize)
+    some = program.names[:2]
+    assert (program.reprogram_counts(some).initialize
+            < program.initialize_counts().initialize)
+
+
+def test_mesh_placement_folds_over_survivors():
+    class _Mesh:
+        axis_names = ("model",)
+        shape = {"model": 3}
+
+    spec = get_arch("granite-8b")
+    model = spec.model_module()
+    params = model.init(jax.random.PRNGKey(0), spec.smoke_cfg)
+    program = program_model(params, MappingPlan(n_contexts=2),
+                            AimcConfig(impl="ref", input_scale=0.1),
+                            jax.random.PRNGKey(3))
+    sched = CoreSchedule.from_program(program)
+    assert sched.mesh_placement(_Mesh()) == {0: 0, 1: 1}
+    # device 0 lost: cores fold round-robin over the survivors
+    assert sched.mesh_placement(_Mesh(), dead=(0,)) == {0: 1, 1: 2}
+    assert sched.mesh_placement(_Mesh(), dead=(0, 2)) == {0: 1, 1: 1}
+    with pytest.raises(ValueError):
+        sched.mesh_placement(_Mesh(), dead=(0, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# health monitor + bit-exact recalibration (runtime/health.py)
+# ---------------------------------------------------------------------------
+
+def test_recalibrator_reprogram_is_bit_exact(programmed):
+    program, plan, key, params_raw, _ = programmed
+    health = build_health(program, params_raw, plan, key)
+    for name, st in zip(program.names, program.states):
+        fresh = health.recal.fresh_state(name)
+        assert jnp.array_equal(fresh.w_q, st.w_q), name
+        assert jnp.array_equal(fresh.s_w, st.s_w), name
+
+
+def test_health_probe_fresh_drifted_corrupted(programmed):
+    program, plan, key, params_raw, _ = programmed
+    health = build_health(program, params_raw, plan, key)
+    fresh = dict(zip(program.names, program.states))
+    # fresh states ARE the oracle reference: error identically 0
+    s0 = health.probe(fresh, 0.0)
+    assert set(s0.errors) == set(program.contexts)
+    assert all(e == 0.0 for e in s0.errors.values())
+    assert health.failing_cores(s0) == ()
+    # a pure gain g reads back as relative error exactly 1-g
+    g = 0.9
+    s1 = health.probe({n: st.with_gain(g) for n, st in fresh.items()}, 1.0)
+    assert all(e == pytest.approx(1.0 - g, abs=1e-5)
+               for e in s1.errors.values())
+    assert health.failing_cores(s1) == tuple(sorted(set(program.contexts)))
+    # a dead crossbar reads as error 1.0 on ITS core only
+    from repro.runtime.chaos import corrupt_entries
+    s2 = health.probe({**fresh, **corrupt_entries(program, 1, 1.0)}, 2.0)
+    assert s2.errors[1] == pytest.approx(1.0)
+    assert s2.errors[0] == 0.0
+    assert health.failing_cores(s2) == (1,)
+
+
+def test_recalibrate_dead_core_drains_and_bills(programmed):
+    program, plan, key, params_raw, _ = programmed
+    health = build_health(program, params_raw, plan, key)
+    health.mark_dead(1)
+    entries, names, cm = health.recalibrate({1}, t_now=3.0)
+    assert set(names) == {n for n, c in zip(program.names, program.contexts)
+                          if c == 1}
+    assert cm.initialize == program.reprogram_counts(names).initialize > 0
+    # the repaired program has drained core 1 and restamped the clocks
+    prog2 = health.program
+    assert 1 not in prog2.contexts
+    for n, t in zip(prog2.names, prog2.t_programmed):
+        assert t == (3.0 if n in names else 0.0), n
+    assert health.dead == set()
+    # repaired states are bit-equal to the original program (same keys)
+    for n in names:
+        i = program.names.index(n)
+        assert jnp.array_equal(entries[n].w_q, program.states[i].w_q)
+        assert jnp.array_equal(entries[n].s_w, program.states[i].s_w)
+
+
+# ---------------------------------------------------------------------------
+# mid-trace recovery through the engine (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+def _make_engine(tfm, program, params, **kw):
+    spec, cfg, model, _ = tfm
+    aimc = program.cfg
+    exe = Execution(mode="aimc", aimc=aimc, compute_dtype="float32",
+                    programmed=True)
+    sched = CoreSchedule.from_program(program)
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("prompt_pad", 8)
+    kw.setdefault("max_seq", 24)
+    kw.setdefault("decode_chunk", 4)
+    return ServeEngine(model, cfg, exe, program.install(params),
+                       family=spec.family, module=spec.module,
+                       program=program, schedule=sched, **kw)
+
+
+def test_mid_trace_kill_recovers_bit_equal_with_exact_books(tfm, programmed):
+    program, plan, key, params_raw, _ = programmed
+    reqs = poisson_trace(8, rate=300.0, seed=9, prompt_len=(3, 8),
+                         max_new=(1, 9), vocab=tfm[1].vocab)
+    # the unfaulted oracle
+    ref_eng = _make_engine(tfm, program, params_raw)
+    ref_eng.warmup()
+    ref = ref_eng.serve(list(reqs))
+
+    health = build_health(program, params_raw, plan, key)
+    chaos = parse_chaos("kill:1@2")
+    eng = _make_engine(tfm, program, params_raw, health=health, chaos=chaos)
+    eng.warmup()
+    rep = eng.serve(list(reqs))
+
+    # (a) the fault fired mid-trace and NO in-flight request was dropped
+    assert chaos.exhausted
+    assert [e.describe() for e in rep.fault_events] == ["kill core 1 @ chunk 2"]
+    assert set(rep.records) == {r.rid for r in reqs}
+    assert all(rec.finish_reason in ("eos", "length")
+               for rec in rep.records.values())
+    # (b) recovery happened: core 1 drained onto a peer, states reprogrammed
+    assert rep.n_recals >= 1
+    assert rep.recal_events[0].reason == "dead_core"
+    assert 1 not in eng.program.contexts
+    assert eng.health.dead == set()
+    # the engine's schedule follows the remapped program
+    assert set(s.core for s in eng.schedule.shards) == {0}
+    # (c) CM_* books reconcile EXACTLY against the recovered program,
+    # including the extra CM_INITIALIZE of the hot reprogram
+    led_sum, static_sum = reconcile(eng.program, rep.records,
+                                    rep.observed_vectors)
+    assert led_sum == static_sum
+    assert rep.recal_initialize == \
+        program.reprogram_counts(rep.recal_events[0].names).initialize > 0
+    assert reconcile_recal(eng.program, rep)
+    # (d) recovery is invisible in the tokens: bit-equal to the unfaulted run
+    for r in reqs:
+        assert rep.tokens(r.rid) == ref.tokens(r.rid), r.rid
+        assert (rep.records[r.rid].finish_reason
+                == ref.records[r.rid].finish_reason), r.rid
+    # (e) the recal chunk was exempted from the straggler EWMA
+    assert len(eng.monitor.exempted) >= 1
+    assert eng.monitor.flagged == []
+
+
+def test_mid_trace_corruption_repaired_in_place(tfm, programmed):
+    program, plan, key, params_raw, _ = programmed
+    reqs = poisson_trace(6, rate=300.0, seed=4, prompt_len=(3, 8),
+                         max_new=(2, 8), vocab=tfm[1].vocab)
+    ref_eng = _make_engine(tfm, program, params_raw)
+    ref_eng.warmup()
+    ref = ref_eng.serve(list(reqs))
+
+    health = build_health(program, params_raw, plan, key)
+    chaos = parse_chaos("corrupt:0@1:0.5")
+    eng = _make_engine(tfm, program, params_raw, health=health, chaos=chaos)
+    eng.warmup()
+    rep = eng.serve(list(reqs))
+    assert chaos.exhausted and rep.n_recals >= 1
+    assert rep.recal_events[0].reason == "fault"
+    # corruption is repaired IN PLACE: no remap, contexts unchanged
+    assert eng.program.contexts == program.contexts
+    assert set(rep.records) == {r.rid for r in reqs}
+    for r in reqs:
+        assert rep.tokens(r.rid) == ref.tokens(r.rid), r.rid
+    assert reconcile_recal(eng.program, rep)
+
+
+def test_engine_heartbeat_beats_per_chunk(tfm, programmed, tmp_path):
+    from repro.runtime.fault_tolerance import Heartbeat
+    program, plan, key, params_raw, _ = programmed
+    hb = Heartbeat(str(tmp_path / "hb.json"))
+    eng = _make_engine(tfm, program, params_raw, heartbeat=hb)
+    eng.warmup()
+    reqs = poisson_trace(4, rate=300.0, seed=2, prompt_len=(3, 8),
+                         max_new=(2, 6), vocab=tfm[1].vocab)
+    rep = eng.serve(list(reqs))
+    beat = hb.read()
+    assert beat is not None and rep.n_steps > 0
+    # slot occupancy + last-chunk wall timestamp, as the supervisor sees it
+    for field in ("step", "time", "slots_busy", "slots_free", "chunk_len",
+                  "last_chunk_s", "wall_decode_s", "n_recals"):
+        assert field in beat, field
+    assert beat["slots_busy"] + beat["slots_free"] == eng.n_slots
+    assert beat["n_recals"] == 0
+
+
+def test_engine_validates_health_and_chaos_wiring(tfm, programmed):
+    program, plan, key, params_raw, _ = programmed
+    health = build_health(program, params_raw, plan, key)
+    with pytest.raises(ValueError, match="requires an AimcProgram"):
+        spec, cfg, model, params = tfm
+        ServeEngine(model, cfg, EXE, params, family=spec.family,
+                    module=spec.module, health=health)
+    with pytest.raises(ValueError, match="requires a HealthMonitor"):
+        _make_engine(tfm, program, params_raw,
+                     chaos=parse_chaos("kill:1@2"))
