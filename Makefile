@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: tier1 test test-fast test-all bench bench-pipeline bench-json \
         bench-serving bench-server serve-aimc serve-aimc-reprogram \
         serve-aimc-multicore serve-smoke serve-sharded serve-multi \
-        serve-chaos serve-drift docs-check
+        serve-chaos serve-drift serve-paged docs-check
 
 # Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
@@ -103,6 +103,16 @@ serve-drift:
 	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 6 \
 	    --prompt-len 8 --gen 8 --slots 3 --trace poisson:300 --exec aimc \
 	    --cores 2 --decode-chunk 2 --drift 0.3 --drift-t0 0.01
+
+# Paged-engine smoke: fixed-size KV pages + content-hashed prefix cache on
+# a shared-system-prompt trace (DESIGN.md §15). --paged-verify exits
+# nonzero unless the shared span is prefilled exactly once, the page
+# ledger reconciles exactly, and nothing recompiles after warmup. Same
+# invocation as the ci.sh --fast paged smoke.
+serve-paged:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 8 \
+	    --prompt-len 12 --gen 6 --slots 4 --exec aimc \
+	    --page-size 4 --prefix-cache --shared-prefix 8 --paged-verify
 
 # Multi-tenant serving smoke: two models resident in one process (granite
 # co-programmed on the shared TilePool, xlstm digital), interleaved

@@ -53,6 +53,15 @@ ledgers must reconcile exactly (EXPERIMENTS.md §Sharded serving). The flag
 forces ``--xla_force_host_platform_device_count`` as needed when run as a
 module.
 
+The paged case (DESIGN.md §15) benches the paged KV cache on a
+shared-system-prompt trace: dense vs paged+chunked-prefill with the
+content-hashed prefix cache off and on. Gated: bit-equality across all
+three arms, prefix-on >= ``PREFIX_GAIN_MIN``x tok/s over prefix-off with
+the shared span prefilled exactly once, chunked legs cutting the dense
+path's prompt-pad waste (``prefill_pad_vectors`` before/after), and exact
+CM_* + page-ledger reconciliation; the dense-vs-paged KV footprint and the
+deduplicated shared-span bytes are recorded.
+
 ``--json BENCH_serving.json`` is the machine-readable artifact
 (``benchmarks.run --json`` includes this module; ``make bench-json``).
 """
@@ -84,6 +93,14 @@ CHUNKS = (1, 4, 8)           # decode_chunk sweep for the sharded engine
 ROOFLINE_RTOL = 0.35         # fit residual / predicted-vs-measured gate
 CHUNK_GAIN_MIN = 1.25        # k-sweep step gain where the round dominates
 ROUND_SHARE_MAX = 0.20       # residual host-round share of the step at k=max
+
+# paged-engine case (DESIGN.md §15): shared-system-prompt trace
+P_PAD = 48                   # prompt pad — the system prompt dominates
+P_SHARED = 40                # shared system-prompt span (5 full pages)
+P_PAGE = 8                   # KV page size
+P_CHUNK = 8                  # prefill-chunk leg width (both prefix arms)
+P_REQ = 8                    # requests sharing the system prompt
+PREFIX_GAIN_MIN = 1.3        # prefix-cache on/off tok/s gate
 
 
 def _setup(arch: str, programmed: bool, n_contexts: int = 1):
@@ -397,6 +414,172 @@ def _bench_sharded_case(arch: str, programmed: bool, mesh, mesh_arg: str,
     return case
 
 
+def _shared_prompt_trace(n: int, vocab: int, seed: int = 7):
+    """``n`` synchronized requests sharing one ``P_SHARED``-token system
+    prompt, each with a unique 4..(P_PAD - P_SHARED)-token suffix — the
+    deployment shape the content-hashed prefix cache exists for."""
+    import random
+
+    from repro.runtime.batcher import Request
+    rng = random.Random(seed)
+    shared = tuple(rng.randint(1, vocab - 1) for _ in range(P_SHARED))
+    out = []
+    for i in range(n):
+        sfx = tuple(rng.randint(1, vocab - 1)
+                    for _ in range(rng.randint(4, P_PAD - P_SHARED)))
+        out.append(Request(rid=i, prompt=shared + sfx, max_new=3,
+                           arrival=0.0))
+    return out
+
+
+def _cache_bytes(engine) -> int:
+    """Total bytes of the engine's session KV storage (dense slot cache or
+    paged pools + page table)."""
+    return sum(x.nbytes for x in
+               jax.tree_util.tree_leaves(engine._empty_cache()))
+
+
+def _bench_paged_case(verbose: bool) -> dict:
+    """Paged KV cache + content-hashed prefix cache + chunked prefill
+    (DESIGN.md §15) on a shared-system-prompt trace.
+
+    Three engines over the SAME trace — dense (the before: every prefill
+    pays the full ``P_PAD`` pad width and every request re-prefills the
+    shared span), paged+chunked with the prefix cache OFF, and the same
+    with it ON. Single decode slot so admission order is deterministic and
+    the exactly-once contract is checkable under chunking: request 0
+    produces the shared pages, every later admission hits them and prefills
+    only its unique suffix. Gates: bit-equality across all three engines,
+    prefix-on >= ``PREFIX_GAIN_MIN``x tok/s over prefix-off (same chunking,
+    the ONLY toggle is the prefix cache), shared span prefilled exactly
+    once, chunked legs cut the dense path's prompt-pad waste, and CM_* +
+    page ledgers reconcile exactly."""
+    spec, cfg, model, params, exe, program = _setup("granite-8b", True)
+    max_seq = P_PAD + 8
+    n_pages = 16            # one max-length request + the held prefix + slack
+    kw = dict(n_slots=1, prompt_pad=P_PAD, max_seq=max_seq,
+              cache_dtype=jnp.float32, family=spec.family,
+              module=spec.module, program=program)
+    trace = _shared_prompt_trace(P_REQ, cfg.vocab)
+    plens = [len(r.prompt) for r in trace]
+
+    arms = {}
+    reports = {}
+    counts = {}
+    bytes_of = {}
+    engines = {}
+    for name, extra in (
+            ("dense", {}),
+            ("paged_off", dict(page_size=P_PAGE, n_pages=n_pages,
+                               prefill_chunk=P_CHUNK)),
+            ("paged_on", dict(page_size=P_PAGE, n_pages=n_pages,
+                              prefill_chunk=P_CHUNK, prefix_cache=True))):
+        eng = ServeEngine(model, cfg, exe, params, **kw, **extra)
+        counts0 = eng.warmup()
+        bytes_of[name] = _cache_bytes(eng)
+        stats, rep = _serve_continuous(eng, list(trace))
+        ok = rep.observed_vectors == rep.useful_vectors
+        led_sum, static_sum = reconcile(program, rep.records,
+                                        rep.observed_vectors)
+        ok = ok and led_sum == static_sum and rep.page_ledger_exact
+        stats["ledger_exact"] = ok
+        stats["stable_shapes"] = eng.compile_counts() == counts0
+        stats["prefill_pad_vectors"] = rep.prefill_pad_vectors
+        arms[name] = stats
+        reports[name] = rep
+        counts[name] = eng.compile_counts()
+        engines[name] = eng
+
+    bit_equal = all(
+        reports["dense"].tokens(r.rid) == reports[name].tokens(r.rid)
+        for r in trace for name in ("paged_off", "paged_on"))
+
+    on = reports["paged_on"]
+    # exactly-once: request 0 pays its full prompt, every other request
+    # pays ONLY its continuation past the page-aligned shared span
+    span = (P_SHARED // P_PAGE) * P_PAGE
+    paid = [on.records[r.rid].prefill_vectors for r in trace]
+    exactly_once = (
+        on.prefix_hits == P_REQ - 1
+        and on.prefix_hit_vectors == span * (P_REQ - 1)
+        and paid == [plens[0]] + [p - span for p in plens[1:]])
+
+    gain = arms["paged_on"]["tok_s"] / max(arms["paged_off"]["tok_s"], 1e-9)
+
+    # pad-waste before/after on a RAGGED short-prompt trace: the dense
+    # path pads every prompt to P_PAD rows, so prompts far below the pad
+    # burn (P_PAD - plen) lanes each; chunked legs only round up to the
+    # leg width. (The shared-prompt trace above sits near the pad on
+    # purpose, so it can't show this.) Engines are reusable across serves.
+    ragged = poisson_trace(P_REQ, RATE, seed=13, prompt_len=(4, 12),
+                           max_new=(2, 4), vocab=cfg.vocab)
+    pad_waste = {}
+    for name in ("dense", "paged_on"):
+        eng = engines[name]
+        rep = eng.serve(list(ragged))
+        pad_waste[name] = rep.prefill_pad_vectors
+    pad_cut = pad_waste["paged_on"] < pad_waste["dense"]
+
+    # footprint: dense stores the shared span once PER SLOT CONTEXT; the
+    # paged pool stores it once, refcounted. Bytes per token row derived
+    # from the dense cache (covers K+V across all layers).
+    row_bytes = bytes_of["dense"] // max_seq        # n_slots=1
+    case = {
+        "arch": spec.arch_id,
+        "exec": "aimc-programmed",
+        "trace": f"sync n={P_REQ} shared_prefix={P_SHARED} "
+                 f"prompt<=P_PAD={P_PAD} max_new=3",
+        "page_size": P_PAGE, "n_pages": n_pages, "prefill_chunk": P_CHUNK,
+        "arms": arms,
+        "prefix_tok_s_gain": gain,
+        "prefix_hits": on.prefix_hits,
+        "prefix_hit_vectors": on.prefix_hit_vectors,
+        "prefill_vectors_paid": paid,
+        "exactly_once": exactly_once,
+        "pad_trace": f"poisson:{RATE:.0f} n={P_REQ} prompt=(4, 12) "
+                     f"max_new=(2, 4)",
+        "pad_waste_before": pad_waste["dense"],
+        "pad_waste_after": pad_waste["paged_on"],
+        "pad_waste_cut": pad_cut,
+        "footprint": {
+            "dense_cache_bytes": bytes_of["dense"],
+            "paged_cache_bytes": bytes_of["paged_on"],
+            "row_bytes": row_bytes,
+            # KV bytes the prefix cache avoids duplicating across the trace
+            "shared_span_bytes_saved": (P_REQ - 1) * span * row_bytes,
+        },
+        "compile_counts": counts["paged_on"],
+        "sync_bit_equal": bit_equal,
+        "stable_shapes": all(a["stable_shapes"] for a in arms.values()),
+        "ledger_exact": all(a["ledger_exact"] for a in arms.values()),
+    }
+    if verbose:
+        rows = [[name, f"{a['tok_s']:.1f}",
+                 f"{a['makespan_s'] * 1e3:.0f}",
+                 f"{a['prefill_pad_vectors']}",
+                 f"{a['p50_ttft_s'] * 1e3:.0f}"]
+                for name, a in arms.items()]
+        print(table(
+            f"{spec.arch_id} [aimc-programmed] paged engine — "
+            f"{case['trace']}",
+            ["arm", "tok/s", "makespan ms", "pad waste", "p50 ttft ms"],
+            rows))
+        fp = case["footprint"]
+        print(f"  prefix cache on/off tok/s gain: {gain:.2f}x "
+              f"(gate >= {PREFIX_GAIN_MIN}x); hits {on.prefix_hits}/"
+              f"{P_REQ - 1}, {on.prefix_hit_vectors} prompt vectors never "
+              f"re-prefilled; exactly-once: {exactly_once}")
+        print(f"  ragged-trace pad waste {case['pad_waste_before']} -> "
+              f"{case['pad_waste_after']} vectors (full-pad prefill vs "
+              f"chunk={P_CHUNK} legs); shared-span KV deduplicated: "
+              f"{fp['shared_span_bytes_saved'] / 1e6:.2f} MB across "
+              f"{P_REQ} requests")
+        print(f"  bit-equal: {bit_equal}  shape-stable: "
+              f"{case['stable_shapes']}  ledger exact: "
+              f"{case['ledger_exact']}")
+    return case
+
+
 def _bench_drift_case(arch: str, verbose: bool) -> dict:
     """Drift-aware serving (DESIGN.md §14): accuracy vs program age, the
     hot-recalibration cost, and a chaos-grade mid-trace kill.
@@ -529,6 +712,7 @@ def run(verbose: bool = True, mesh_arg: str | None = None) -> dict:
         _bench_case("xlstm-350m", programmed=False, verbose=verbose),
     ]
     out = {"cases": cases,
+           "paged_case": _bench_paged_case(verbose=verbose),
            "drift_case": _bench_drift_case("granite-8b", verbose=verbose)}
     if mesh_arg:
         from repro.launch.mesh import make_mesh
@@ -561,6 +745,27 @@ def checks(results=None) -> list[Check]:
               1.0 if all(c["ledger_exact"] for c in cases) else 0.0,
               1.0, rtol=0.01),
     ]
+    paged = results.get("paged_case")
+    if paged:
+        out += [
+            Check("paged engine bit-equal to dense on the shared-prompt "
+                  "trace (prefix on and off)",
+                  1.0 if paged["sync_bit_equal"] else 0.0, 1.0, rtol=0.01),
+            Check("prefix cache beats prefix-off tok/s on the shared-"
+                  f"system-prompt trace (>= {PREFIX_GAIN_MIN}x)",
+                  1.0 if paged["prefix_tok_s_gain"] >= PREFIX_GAIN_MIN
+                  else 0.0, 1.0, rtol=0.01),
+            Check("shared system-prompt span prefilled exactly once "
+                  "(every later request pays only its suffix)",
+                  1.0 if paged["exactly_once"] else 0.0, 1.0, rtol=0.01),
+            Check("chunked prefill cuts prompt-pad waste vs the dense "
+                  "full-pad prefill",
+                  1.0 if paged["pad_waste_cut"] else 0.0, 1.0, rtol=0.01),
+            Check("paged arms: CM_* + page ledgers reconcile, shapes "
+                  "jit-stable",
+                  1.0 if paged["ledger_exact"] and paged["stable_shapes"]
+                  else 0.0, 1.0, rtol=0.01),
+        ]
     drift_case = results.get("drift_case")
     if drift_case:
         ch = drift_case["chaos"]

@@ -11,7 +11,9 @@
 #                      2-device host-platform mesh, per-step and with the
 #                      k=8 scanned decode chunk), the chaos smoke (mid-trace
 #                      corrupt+kill with drain + hot reprogram; fails on a
-#                      lost request or ledger drift), and the kernel
+#                      lost request or ledger drift), the paged-engine smokes
+#                      (prefix-cache exactly-once + chunked prefill, verified
+#                      via --paged-verify), and the kernel
 #                      perf-smoke (bench_kernels in interpret mode, writes
 #                      BENCH_kernels.json, fails on check regression)
 #   ./ci.sh --install  pip-install pinned deps first (no-op in the baked image)
@@ -24,6 +26,15 @@ if [[ "${1:-}" == "--install" ]]; then
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+# Hygiene gate: compiled artifacts must never be tracked. A stray .pyc in
+# the index silently shadows source edits for anyone importing the package.
+if git ls-files -- '*.pyc' '*__pycache__*' | grep -q .; then
+    echo "CI FAILURE: compiled python artifacts are tracked in git:" >&2
+    git ls-files -- '*.pyc' '*__pycache__*' >&2
+    exit 1
+fi
+
 if [[ "${1:-}" == "--fast" ]]; then
     python -m pytest -x -q -m "not pallas and not slow"
     echo "== docs-smoke: file references + README quickstart =="
@@ -49,6 +60,18 @@ if [[ "${1:-}" == "--fast" ]]; then
     python -m repro.launch.serve --arch granite-8b --smoke --requests 6 \
         --prompt-len 8 --gen 6 --slots 3 --trace poisson:300 --exec aimc \
         --cores 2 --decode-chunk 2 --chaos "corrupt:0@1:0.5,kill:1@3"
+    echo "== paged smoke: prefix cache, shared span prefilled exactly once =="
+    # 8 requests share one 8-token system prompt on the paged engine with
+    # the content-hashed prefix cache; --paged-verify exits nonzero unless
+    # the shared span was prefilled exactly once, the page ledger
+    # reconciles, and nothing recompiled after warmup (DESIGN.md §15)
+    python -m repro.launch.serve --arch granite-8b --smoke --requests 8 \
+        --prompt-len 12 --gen 6 --slots 4 --exec aimc \
+        --page-size 4 --prefix-cache --shared-prefix 8 --paged-verify
+    echo "== paged smoke: chunked prefill interleaved with decode =="
+    python -m repro.launch.serve --arch granite-8b --smoke --requests 6 \
+        --prompt-len 12 --gen 4 --slots 3 --trace poisson:300 --exec aimc \
+        --page-size 4 --prefix-cache --prefill-chunk 4 --paged-verify
     echo "== server smoke: two models co-programmed, mixed-tenant trace =="
     # exits nonzero if per-tenant ledgers fail to reconcile or any tenant
     # with requests is starved of all tokens (runtime.server front door)

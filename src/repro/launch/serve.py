@@ -56,6 +56,18 @@ prints per-tenant tok/s, p50/p99 TTFT/TPOT, Jain's quota-fairness index
 and the pool utilization, and exits nonzero if any per-tenant CM_* ledger
 fails to reconcile or a tenant with requests was starved of all tokens.
 
+``--page-size P`` swaps the dense per-slot KV cache for a paged one
+(DESIGN.md §15): fixed P-row pages in one pool, addressed through a traced
+page table, bit-equal to the dense engine. On top of it ``--prefix-cache``
+shares content-hashed prompt-prefix pages across requests (a hit admits
+without re-running the shared span's prefill — shape the trace with
+``--shared-prefix K``) and ``--prefill-chunk C`` runs long prefills as
+bounded legs interleaved with decode. ``--paged-verify`` makes the run exit
+nonzero unless the page ledger reconciles exactly, nothing recompiled after
+warmup, and the exactly-once prefill contract held. All of it passes
+through to the multi-tenant server (``--models``), where
+`tenancy.TenantPolicy.max_pages` additionally caps each tenant's page take.
+
 ``--drift NU`` ages the programmed conductances along the power law on the
 serve clock and ``--chaos kill:CORE@CHUNK,corrupt:CORE@CHUNK[:MAG]``
 injects deterministic faults on the chunk-dispatch clock (DESIGN.md §14):
@@ -101,6 +113,40 @@ def parse_args(argv=None):
                          " runs on-device and the host syncs once per k "
                          "steps, double-buffered (DESIGN.md §13); 1 = the "
                          "per-step loop")
+    ap.add_argument("--page-size", dest="page_size", type=int, default=0,
+                    help="paged slot cache (DESIGN.md §15): KV pages of "
+                         "this many token rows behind a traced page table "
+                         "(transformer archs; recurrent archs page state "
+                         "snapshots). Decode stays bit-equal to the dense "
+                         "cache. 0 = dense")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool size including the scratch page "
+                         "(0: sized so every slot can hold a max-length "
+                         "request)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true",
+                    help="content-hashed prefix cache over full pages: a "
+                         "request whose prompt prefix is resident admits "
+                         "WITHOUT re-running the shared span's prefill "
+                         "(needs --page-size)")
+    ap.add_argument("--prefill-chunk", dest="prefill_chunk", type=int,
+                    default=0,
+                    help="run prefills as bounded legs of this many tokens, "
+                         "interleaved with decode chunks (needs "
+                         "--page-size; 0 = one full-width prefill)")
+    ap.add_argument("--shared-prefix", dest="shared_prefix", type=int,
+                    default=0,
+                    help="make the first K prompt tokens identical across "
+                         "every request (the shared-system-prompt shape "
+                         "the prefix cache exists for)")
+    ap.add_argument("--paged-verify", dest="paged_verify",
+                    action="store_true",
+                    help="hard acceptance for a paged run: exit nonzero "
+                         "unless the page ledger reconciles exactly, no "
+                         "closure recompiled after warmup, and (with "
+                         "--shared-prefix + --prefix-cache, synchronized, "
+                         "unchunked) the shared span was prefilled exactly "
+                         "once")
     ap.add_argument("--mesh", default="1x1",
                     help="device mesh: 'data:D,model:M' serves through the "
                          "sharded engine (slots over data, crossbar bit "
@@ -187,7 +233,9 @@ def parse_args(argv=None):
                          (args.reprogram, "--reprogram"),
                          (args.cores > 1, "--cores"),
                          (args.pipeline, "--pipeline"),
-                         (args.arrivals, "--arrivals")]:
+                         (args.arrivals, "--arrivals"),
+                         (args.paged_verify, "--paged-verify"),
+                         (args.shared_prefix, "--shared-prefix")]:
             if on:
                 ap.error(f"{name} is a single-model option; --models serves "
                          "through the multi-tenant ModelServer")
@@ -208,6 +256,21 @@ def parse_args(argv=None):
     if args.static and args.decode_chunk > 1:
         ap.error("--decode-chunk applies to the engine's scanned decode "
                  "loop; --static is the legacy lockstep baseline")
+    if args.page_size < 0 or args.pages < 0 or args.prefill_chunk < 0 \
+            or args.shared_prefix < 0:
+        ap.error("--page-size/--pages/--prefill-chunk/--shared-prefix "
+                 "must be >= 0")
+    if args.page_size == 0 and (args.prefix_cache or args.prefill_chunk
+                                or args.pages or args.paged_verify):
+        ap.error("--prefix-cache/--prefill-chunk/--pages/--paged-verify "
+                 "require --page-size")
+    if args.page_size and args.static:
+        ap.error("--page-size serves through the slot engine; --static is "
+                 "the legacy dense-batch baseline")
+    if args.shared_prefix and args.shared_prefix >= args.prompt_len:
+        ap.error(f"--shared-prefix {args.shared_prefix} must leave every "
+                 f"request a unique continuation (< --prompt-len "
+                 f"{args.prompt_len})")
     return args
 
 
@@ -314,6 +377,19 @@ def build_requests(args, vocab: int, min_prompt: int = 1):
     return base
 
 
+def apply_shared_prefix(requests, k: int):
+    """Overwrite the first ``k`` tokens of every prompt with request 0's —
+    the shared-system-prompt shape the prefix cache exists for. Prompts
+    shorter than ``k`` become a prefix of the shared span."""
+    if not k:
+        return requests
+    shared = requests[0].prompt[:k]
+    return [dataclasses.replace(
+        r, prompt=(shared + r.prompt[k:] if len(r.prompt) > k
+                   else shared[:len(r.prompt)]))
+        for r in requests]
+
+
 def parse_models(arg: str):
     """``NAME:EXEC[,NAME:EXEC...]`` -> list of `runtime.server.ModelSpec`.
     NAME is an arch-registry id (aliases fine) and doubles as the model id
@@ -385,7 +461,10 @@ def _run_server(args):
             specs, tenants, smoke=args.smoke, n_slots=n_slots,
             prompt_pad=p, max_seq=p + g, seed=args.seed,
             tiles_per_context=args.tile_budget or None,
-            eos_id=None if args.eos < 0 else args.eos, mesh=mesh)
+            eos_id=None if args.eos < 0 else args.eos, mesh=mesh,
+            page_size=args.page_size, n_pages=args.pages,
+            prefix_cache=args.prefix_cache,
+            prefill_chunk=args.prefill_chunk)
         server.warmup()
         print(f"[serve] {len(specs)} model(s) resident, "
               f"{len(server.policies)} tenant(s), {n_slots} slots each; "
@@ -476,6 +555,7 @@ def main(argv=None):
     requests = build_requests(
         args, cfg.vocab,
         min_prompt=cfg.n_patches if spec.family == "vlm" else 1)
+    requests = apply_shared_prefix(requests, args.shared_prefix)
 
     with use_mesh(mesh):
         params = model.init(jax.random.PRNGKey(args.seed), cfg)
@@ -555,6 +635,9 @@ def main(argv=None):
                       eos_id=None if args.eos < 0 else args.eos,
                       admission=args.admission,
                       decode_chunk=args.decode_chunk,
+                      page_size=args.page_size, n_pages=args.pages,
+                      prefix_cache=args.prefix_cache,
+                      prefill_chunk=args.prefill_chunk,
                       health=health, chaos=chaos, heartbeat=heartbeat)
         if sharded:
             engine = ShardedServeEngine(model, cfg, exe, params, mesh=mesh,
@@ -562,13 +645,20 @@ def main(argv=None):
         else:
             engine = ServeEngine(model, cfg, exe, params, **common)
         t0 = time.time()
-        engine.warmup()
+        counts0 = engine.warmup()
         print(f"[serve] engine warmed up in {time.time() - t0:.2f}s "
               f"({n_slots} slots, prompt_pad={p}, max_seq={max_seq}, "
               f"decode_chunk={args.decode_chunk}"
               + (f"; sharded over {dict(zip(axes, shape))}" if sharded
                  else "")
-              + f"; compiled {engine.compile_counts()})")
+              + f"; compiled {counts0})")
+        if args.page_size and engine.pages is not None:
+            print(f"[serve] paged cache: {engine.pages.n_pages} pages x "
+                  f"{args.page_size} rows (+1 scratch in the count), "
+                  f"prefix_cache={args.prefix_cache}, "
+                  f"prefill_chunk={args.prefill_chunk or 'off'}"
+                  + (f", shared_prefix={args.shared_prefix}"
+                     if args.shared_prefix else ""))
 
         report = engine.serve(requests)
         print(f"[serve] {report.summary()}")
@@ -615,6 +705,19 @@ def main(argv=None):
                           f"dequeue={cm.dequeue}")
         if health is not None:
             _verify_resilience(engine, report, requests, chaos)
+        if args.page_size and engine.pages is not None:
+            led = report.page_ledger
+            print(f"  pages: {led.get('free', 0)} free / "
+                  f"{led.get('held', 0)} held of "
+                  f"{led.get('total', 0)} (ledger exact: "
+                  f"{report.page_ledger_exact}); "
+                  f"prefix hits {report.prefix_hits} "
+                  f"({report.prefix_hit_vectors} prompt vectors never "
+                  f"re-prefilled), evictions {report.page_evictions}; "
+                  f"prefill legs {report.prefill_chunks}, "
+                  f"prompt-pad waste {report.prefill_pad_vectors} vectors")
+            if args.paged_verify:
+                _verify_paged(engine, report, requests, args, counts0)
         _print_schedule(args, schedule)
         for rid in sorted(report.records)[:3]:
             rec = report.records[rid]
@@ -704,6 +807,61 @@ def _verify_resilience(engine, report, requests, chaos):
         raise SystemExit(1)
     print("  resilience books close exactly: no lost requests, every "
           "fault fired, CM_* + recal ledgers reconcile")
+
+
+def _verify_paged(engine, report, requests, args, counts0):
+    """Hard acceptance for a paged run — the CI paged smokes ride on this:
+    exit nonzero unless every request retired, the page ledger reconciles
+    exactly, no closure recompiled after warmup, the vector books close,
+    and (shared-prefix + prefix-cache, synchronized, unchunked) the shared
+    span was prefilled exactly once across the whole trace."""
+    failures = []
+    if len(report.records) != len(requests):
+        lost = {r.rid for r in requests} - set(report.records)
+        failures.append(f"{len(lost)} request(s) never served: "
+                        f"{sorted(lost)}")
+    if not report.page_ledger_exact:
+        failures.append(f"page ledger does not reconcile: "
+                        f"{report.page_ledger}")
+    held = report.page_ledger.get("held", 0)
+    cached = len(engine.prefix) if engine.prefix is not None else 0
+    if held != cached:
+        failures.append(f"{held} pages held at finish but {cached} prefix "
+                        f"entries resident — a request leaked pages")
+    if report.observed_vectors != report.useful_vectors:
+        failures.append(f"device-loop vector count "
+                        f"{report.observed_vectors} != per-request books "
+                        f"{report.useful_vectors}")
+    counts = engine.compile_counts()
+    if counts != counts0:
+        failures.append(f"closures recompiled after warmup: {counts0} -> "
+                        f"{counts}")
+    if (args.shared_prefix and args.prefix_cache and not args.prefill_chunk
+            and not args.trace and not engine.recurrent):
+        # synchronized + unchunked: admission is synchronous, so the
+        # exactly-once contract is exact, not statistical
+        span = (args.shared_prefix // args.page_size) * args.page_size
+        plen = args.prompt_len
+        paid = sorted(r.prefill_vectors for r in report.records.values())
+        want = sorted([plen] + [plen - span] * (len(requests) - 1))
+        if paid != want:
+            failures.append(
+                f"shared span not prefilled exactly once: per-request "
+                f"prefill vectors {paid}, want one producer at {plen} and "
+                f"{len(requests) - 1} sharers at {plen - span}")
+        if report.prefix_hits != len(requests) - 1:
+            failures.append(f"prefix hits {report.prefix_hits}, want "
+                            f"{len(requests) - 1}")
+    if failures:
+        for f in failures:
+            print(f"  PAGED FAILURE: {f}")
+        raise SystemExit(1)
+    print("  paged books close exactly: all requests served, page ledger "
+          "reconciles, no recompiles"
+          + (", shared span prefilled exactly once"
+             if args.shared_prefix and args.prefix_cache
+             and not args.prefill_chunk and not args.trace
+             and not engine.recurrent else ""))
 
 
 def _print_schedule(args, schedule):

@@ -284,3 +284,33 @@ def decode_step(params, cache, tokens, cfg: EncDecConfig,
     new_cache = dict(cache, k=ks, v=vs)
     new_cache["len"] = cache["len"] + 1
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decoder self-attention K/V (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: EncDecConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Decoder self-attention K/V page pools [N_dec, n_pages, P, Hkv, hd].
+
+    Only the GROWING part of the cache pages: cross-attention K/V (ck/cv)
+    are computed once from the encoder output and read-only for the whole
+    decode, so they stay dense per slot. Page 0 is the reserved scratch
+    page (`runtime.pages.SCRATCH`). The serving engine rejects the audio
+    family today; these helpers carry the §15 layout so the whisper-style
+    decode can adopt paging without a model-code change."""
+    shape = (cfg.n_dec_layers, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    return {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+
+
+def paged_view(kp, vp, pt, max_seq: int):
+    """Gather dense per-slot decoder K/V [N, S, max_seq, H, hd] out of the
+    page pools via the [S, M] page table (same contract as
+    transformer.paged_view: rows at or past a slot's length are masked to
+    exact 0.0 by `decode_attention` before the softmax)."""
+    n, _, p, h, hd = kp.shape
+    s, m = pt.shape
+    k = kp[:, pt].reshape(n, s, m * p, h, hd)[:, :, :max_seq]
+    v = vp[:, pt].reshape(n, s, m * p, h, hd)[:, :, :max_seq]
+    return k, v

@@ -370,3 +370,18 @@ def decode_step(params, cache, tokens, cfg: RglruConfig, exe: Execution = None):
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = h.astype(jnp.float32) @ as_weight(params["unembed"], jnp.float32)
     return logits, new_cache
+
+
+def prefill_chunk(params, cache, tokens, cfg: RglruConfig,
+                  exe: Execution = None, span=None):
+    """One bounded prefill leg from an ARBITRARY carried state (the
+    recurrent-counterpart of transformer.prefill_chunk; see xlstm's
+    docstring — same contract, here over the conv/RG-LRU/ring-buffer
+    cache). Returns (last-valid logits [B,1,V], carried cache)."""
+    exe = exe or Execution()
+    b = tokens.shape[0]
+    vl = (None if span is None
+          else jnp.broadcast_to(jnp.asarray(span, jnp.int32), (b,)))
+    return recurrent_prefill(
+        lambda c, t: decode_step(params, c, t, cfg, exe),
+        cache, tokens, cfg.vocab, vl)

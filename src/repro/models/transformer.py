@@ -390,3 +390,98 @@ def _scatter_kv(cache_l, new, idx):
     reads + rewrites the entire cache every layer."""
     b = cache_l.shape[0]
     return cache_l.at[jnp.arange(b), idx].set(new[:, 0].astype(cache_l.dtype))
+
+
+# ---------------------------------------------------------------------------
+# serving: paged KV cache (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: TransformerConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32, shardings=None) -> dict:
+    """Physical K/V page pools [L, n_pages, P, Hkv, hd].
+
+    Page 0 is the engine's scratch page (`runtime.pages.SCRATCH`): traced
+    writes for inactive lanes land there and are never read unmasked. A
+    slot's logical cache is the gather of its page-table row (`paged_view`);
+    memory scales with pages actually allocated, not slots x max_seq."""
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.hd)
+    pools = {"kp": jnp.zeros(shape, dtype), "vp": jnp.zeros(shape, dtype)}
+    if shardings is not None:
+        pools = jax.tree.map(jax.device_put, pools, shardings)
+    return pools
+
+
+def paged_view(kp, vp, pt, max_seq: int):
+    """Gather the dense per-slot K/V view out of the page pools.
+
+    kp/vp: [L, n_pages, P, H, hd]; pt: [S, M] page table -> k/v
+    [L, S, max_seq, H, hd]. Rows past a slot's length map through whatever
+    page the (possibly stale) table names — `decode_attention` masks
+    everything at or beyond ``kv_len`` to exact 0.0 before the softmax, so
+    garbage rows never contribute a bit (the §15 equality argument)."""
+    l, _, p, h, hd = kp.shape
+    s, m = pt.shape
+    k = kp[:, pt].reshape(l, s, m * p, h, hd)[:, :, :max_seq]
+    v = vp[:, pt].reshape(l, s, m * p, h, hd)[:, :, :max_seq]
+    return k, v
+
+
+def prefill_chunk(params, tokens, cfg: TransformerConfig, exe: Execution,
+                  kp, vp, pt_row, pos0, span, *, page_size: int,
+                  context_len: int):
+    """One bounded prefill leg writing straight into the page pools.
+
+    tokens: [1, C] — the leg's token window (rows past ``span`` are junk
+    padding on the final leg); ``pt_row``: [M] this request's page table
+    row; ``pos0``/``span``: traced absolute start + valid width. Earlier
+    legs' K/V are read back from the pools (cache dtype must be float32 so
+    the readback is bit-identical to the producing leg's activations — the
+    engine enforces this), the leg attends with ``q_offset=pos0`` over
+    exactly ``context_len`` rows (= the dense engine's prompt_pad, so the
+    flash-attention chunk reduction order matches dense prefill bitwise),
+    and touched pages [pos0//P, (pos0+span-1)//P] are scattered back;
+    untouched page indices route to the scratch page 0. Returns
+    ``(tok [1,1], kp, vp)`` — tok is argmax at the leg's last valid row,
+    meaningful on the final leg only."""
+    b, c = tokens.shape
+    m = pt_row.shape[0]
+    hkv, hd = cfg.n_kv_heads, cfg.hd
+    n_rows = m * page_size
+    h = embed_tokens(params, tokens, cfg, exe)
+    positions = pos0 + jnp.broadcast_to(jnp.arange(c), (b, c))
+    j = jnp.arange(m)
+    j0 = pos0 // page_size
+    j1 = (pos0 + span - 1) // page_size
+    pids = jnp.where((j >= j0) & (j <= j1), pt_row, 0)
+
+    def body(h, xs):
+        blk, kpl, vpl = xs
+        keys = [None] * 6
+        q, k, v = _qkv(rmsnorm(h, blk["ln1"], cfg.norm_eps), blk, cfg, exe,
+                       keys, positions)
+        kc = kpl[pt_row].reshape(n_rows, hkv, hd)
+        vc = vpl[pt_row].reshape(n_rows, hkv, hd)
+        # extend by C rows so the slice write never clamps at the pool edge
+        kx = jnp.concatenate([kc, jnp.zeros((c, hkv, hd), kc.dtype)])
+        vx = jnp.concatenate([vc, jnp.zeros((c, hkv, hd), vc.dtype)])
+        kx = jax.lax.dynamic_update_slice_in_dim(
+            kx, k[0].astype(kx.dtype), pos0, axis=0)
+        vx = jax.lax.dynamic_update_slice_in_dim(
+            vx, v[0].astype(vx.dtype), pos0, axis=0)
+        att = flash_attention(q, kx[None, :context_len], vx[None, :context_len],
+                              causal=True, q_offset=pos0,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        h = h + linear(att.reshape(b, c, -1), blk["wo"], exe, keys[3])
+        ff, _ = _ffn(rmsnorm(h, blk["ln2"], cfg.norm_eps), blk, cfg, exe, keys)
+        kpl = kpl.at[pids].set(kx[:n_rows].reshape(m, page_size, hkv, hd))
+        vpl = vpl.at[pids].set(vx[:n_rows].reshape(m, page_size, hkv, hd))
+        return h + ff, (kpl, vpl)
+
+    h, (kp, vp) = jax.lax.scan(body, h, (params["blocks"], kp, vp))
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    idx = jnp.broadcast_to(jnp.clip(span - 1, 0, c - 1), (b,))
+    h_last = h[jnp.arange(b), idx][:, None]
+    logits = h_last.astype(jnp.float32) @ as_weight(unembed, jnp.float32)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    return tok, kp, vp

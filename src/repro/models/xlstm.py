@@ -423,3 +423,22 @@ def decode_step(params, cache, tokens, cfg: XlstmConfig, exe: Execution = None):
     h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
     logits = h.astype(jnp.float32) @ params["unembed"].astype(jnp.float32)
     return logits, new_cache
+
+
+def prefill_chunk(params, cache, tokens, cfg: XlstmConfig,
+                  exe: Execution = None, span=None):
+    """One bounded prefill leg from an ARBITRARY carried state.
+
+    Unlike `prefill` (which always starts from a fresh `init_cache`), the
+    engine's chunked/prefix path threads ``cache`` through — the previous
+    leg's output, or a prefix-cache snapshot restored mid-prompt
+    (DESIGN.md §15). ``span`` (traced scalar or [B]) freezes rows past the
+    leg's valid width, exactly as `recurrent_prefill` freezes padding.
+    Returns (last-valid logits [B,1,V], carried cache)."""
+    exe = exe or Execution()
+    b = tokens.shape[0]
+    vl = (None if span is None
+          else jnp.broadcast_to(jnp.asarray(span, jnp.int32), (b,)))
+    return recurrent_prefill(
+        lambda c, t: decode_step(params, c, t, cfg, exe),
+        cache, tokens, cfg.vocab, vl)

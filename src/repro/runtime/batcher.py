@@ -152,13 +152,21 @@ class Batcher:
         the multi-tenant server asks every tenant queue before picking)."""
         return any(r.arrival <= now for r in self._pending)
 
+    def peek_ready(self, now: float) -> Request | None:
+        """The request `pop_ready` WOULD return, without removing it.
+
+        Paged admission asks the page allocator whether the next request
+        fits BEFORE committing to pop it (runtime.engine.can_admit) — a
+        popped-but-unadmittable request would either be dropped or jump
+        the deterministic admission order."""
+        ready = [r for r in self._pending if r.arrival <= now]
+        return min(ready, key=self._prio) if ready else None
+
     def pop_ready(self, now: float) -> Request | None:
         """Pop the highest-priority request whose arrival has passed."""
-        ready = [r for r in self._pending if r.arrival <= now]
-        if not ready:
-            return None
-        best = min(ready, key=self._prio)
-        self._pending.remove(best)
+        best = self.peek_ready(now)
+        if best is not None:
+            self._pending.remove(best)
         return best
 
 

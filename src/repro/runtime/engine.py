@@ -187,6 +187,18 @@ class ServeReport:
     recal_events: list = dataclasses.field(default_factory=list)
     fault_events: list = dataclasses.field(default_factory=list)
     wall_health_s: float = 0.0
+    # paged serving books (DESIGN.md §15; defaults keep dense runs
+    # untouched): prefix reuse, chunked-prefill legs, and the page-pool
+    # ledger snapshot taken at finish() — every page attributed to exactly
+    # one owner or the free list (`page_ledger_exact` is the allocator's
+    # exact-partition verify()).
+    prefix_hits: int = 0           # admissions that reused >= 1 page/snapshot
+    prefix_hit_vectors: int = 0    # prompt vectors NOT re-prefilled (shared span)
+    prefill_chunks: int = 0        # prefill legs executed
+    page_evictions: int = 0
+    page_ledger: dict = dataclasses.field(default_factory=dict)
+    page_ledger_exact: bool = True
+    prefix_stats: dict = dataclasses.field(default_factory=dict)
 
     @property
     def useful_vectors(self) -> int:
@@ -252,6 +264,15 @@ class EngineSession:
     # depends on the token's value, so the read defers to the next chunk
     # sync instead of stalling the host behind an in-flight chunk.
     lazy: list = dataclasses.field(default_factory=list)
+    # paged serving (DESIGN.md §15): queued chunked-prefill jobs (FIFO, one
+    # leg advanced per serve-loop iteration), the pages each busy slot holds
+    # as (owned pids, shared-hit pids), and the prefix-cache counters at
+    # begin() so the report shows THIS session's hits/evictions only.
+    jobs: list = dataclasses.field(default_factory=list)
+    slot_pages: dict = dataclasses.field(default_factory=dict)
+    evictions0: int = 0
+    hits0: int = 0
+    misses0: int = 0
 
 
 # traced retirement codes emitted by the decode scan (0 = still running);
@@ -270,6 +291,32 @@ class _PendingChunk:
     n: int             # dispatched chunk length (a ladder size)
     health0: float = 0.0   # report.wall_health_s at dispatch (overlap bill)
     recals0: int = 0       # report.n_recals at dispatch (straggler exemption)
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """One admitted request whose (chunked) prefill has not finished.
+
+    The remaining legs either drain synchronously at `admit` (``drain=True``
+    — external drivers need admission to complete before they hand the
+    clock elsewhere) or run one per serve-loop iteration interleaved with
+    decode chunks (`_advance_prefill`). The slot is held for the job's whole
+    life — its decode lane stays inactive on device — until `_finalize_job`
+    registers the page table row / recurrent state and arms the lane."""
+    req: Request
+    rec: RequestRecord
+    slot: int
+    legs: list                # [(pos0, span, tokens [1, C])] in order
+    leg_i: int = 0
+    pt_row: object = None     # transformer: device [M] int32 page-table row
+    keys: list = dataclasses.field(default_factory=list)
+    f_eff: int = 0            # pages reused from the prefix cache
+    carry: object = None      # recurrent: carried state between legs
+    tok1: object = None       # [1,1] first-token handle from the last leg
+
+    @property
+    def done(self) -> bool:
+        return self.leg_i >= len(self.legs)
 
 
 # ---------------------------------------------------------------------------
@@ -295,7 +342,9 @@ class ServeEngine:
                  eos_id: int | None = None, pad_id: int = 0,
                  max_retries: int = 2, straggler_threshold: float = 3.0,
                  admission: str = "fifo", decode_chunk: int = 1,
-                 health=None, chaos=None, heartbeat=None):
+                 health=None, chaos=None, heartbeat=None,
+                 page_size: int = 0, n_pages: int = 0,
+                 prefix_cache: bool = False, prefill_chunk: int = 0):
         if family == "audio":
             raise ValueError("ServeEngine serves decoder-only LMs; the "
                              "enc-dec audio family decodes via launch.steps")
@@ -317,6 +366,76 @@ class ServeEngine:
         self.decode_chunk = decode_chunk
         self._ladder = self._chunk_ladder(decode_chunk)
         self.recurrent = module in RECURRENT_MODULES
+
+        # ---- paged KV / prefix cache / chunked prefill (DESIGN.md §15) ----
+        if page_size < 0 or n_pages < 0 or prefill_chunk < 0:
+            raise ValueError("page_size / n_pages / prefill_chunk >= 0")
+        if (prefix_cache or prefill_chunk) and page_size == 0:
+            raise ValueError("prefix_cache / prefill_chunk require "
+                             "page_size > 0")
+        if page_size > max_seq:
+            raise ValueError(f"page_size {page_size} > max_seq {max_seq}")
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        # _paged_kv: the slot KV cache lives in a page pool behind a traced
+        # page table (transformer families). _use_legs: prefill runs as
+        # `prefill_chunk`-wide legs writing pages directly (needed by both
+        # the prefix cache and chunked prefill). Recurrent archs have O(1)
+        # state, so "paging" means snapshot pages (_snap) + chunked legs
+        # (_legs_rec) instead of a paged decode cache.
+        self._paged_kv = page_size > 0 and not self.recurrent
+        self._legs_rec = (self.recurrent and page_size > 0
+                          and (prefix_cache or prefill_chunk > 0))
+        self._snap = self._legs_rec and prefix_cache
+        self._use_legs = self._paged_kv and (prefix_cache or prefill_chunk > 0)
+        self._chunked = prefill_chunk > 0
+        if self._paged_kv and module != "transformer":
+            raise ValueError(f"paged KV serves the transformer module; "
+                             f"got {module!r}")
+        self._pt_width = -(-max_seq // page_size) if self._paged_kv else 0
+        if self._use_legs:
+            if family == "vlm":
+                raise ValueError(
+                    "prefix_cache / prefill_chunk cannot serve vlm (patch "
+                    "embeds cannot ride a chunked prefill leg)")
+            if getattr(cfg, "is_moe", False):
+                raise ValueError(
+                    "prefix_cache / prefill_chunk cannot serve MoE models: "
+                    "capacity-factor routing mixes positions, so a chunked "
+                    "prefill is not bit-equal to the dense one")
+            if cache_dtype != jnp.float32:
+                raise ValueError(
+                    "prefix_cache / prefill_chunk require cache_dtype "
+                    "float32: a page read back by a sharer must be bit-"
+                    "identical to what the producing leg computed")
+        if self._snap and self._chunked and prefill_chunk % page_size:
+            raise ValueError(
+                "recurrent prefix_cache requires prefill_chunk to be a "
+                "multiple of page_size (snapshots are taken at leg ends, "
+                "which must land on page boundaries)")
+        self.pages = None
+        self.prefix = None
+        self._pool = None        # engine-lifetime (kp, vp) pool handles
+        self._pool_snap = None   # engine-lifetime recurrent snapshot pool
+        if self._paged_kv or self._snap:
+            from repro.runtime.pages import PageAllocator, PrefixCache
+            if n_pages == 0:
+                n_pages = (n_slots * self._pt_width + 1
+                           + (self._pt_width if prefix_cache else 0)
+                           if self._paged_kv
+                           else 1 + n_slots * max(1, prompt_pad // page_size))
+            if self._paged_kv and n_pages < self._pt_width + 1:
+                raise ValueError(
+                    f"n_pages {n_pages} cannot hold one max-length request "
+                    f"({self._pt_width} pages + scratch): admission would "
+                    f"deadlock on an empty engine")
+            self.pages = PageAllocator(n_pages, page_size)
+            self.prefix = PrefixCache(self.pages) if prefix_cache else None
+        # leg width: transformer legs default to one full-prompt leg;
+        # recurrent legs to one page (snapshot boundaries = leg ends)
+        self._leg_c = ((prefill_chunk or prompt_pad) if not self.recurrent
+                       else (prefill_chunk or page_size))
+
         self.monitor = StragglerMonitor(threshold=straggler_threshold)
         self._retries = 0
         self._step_no = 0          # engine-lifetime decode step counter
@@ -367,12 +486,28 @@ class ServeEngine:
         self._jit_prefill = jax.jit(self._prefill_fn)
         self._jit_insert = jax.jit(self._insert_fn,
                                    donate_argnums=(0, 2, 4))
+        decode_fn = self._decode_fn
+        if self._paged_kv:
+            decode_fn = self._decode_paged_fn
+            self._jit_insert_paged = jax.jit(self._insert_paged_fn,
+                                             donate_argnums=(0, 2, 4))
+        if self._use_legs:
+            self._jit_leg = jax.jit(self._leg_fn, donate_argnums=(2, 3))
+            self._jit_register = jax.jit(self._register_fn,
+                                         donate_argnums=(0, 1, 2, 4))
+        if self._legs_rec:
+            self._jit_leg_rec = jax.jit(self._leg_rec_fn,
+                                        donate_argnums=(1,))
+        if self._snap:
+            self._jit_snap_put = jax.jit(self._snap_put_fn,
+                                         donate_argnums=(0,))
+            self._jit_snap_get = jax.jit(self._snap_get_fn)
         # the decode cache is NOT donated: the step runs under
         # resilient_step, and a retry after a transient failure must be able
         # to re-present the same input buffers (donation would have
         # invalidated them on the failed attempt)
         self._decode_jits = {
-            n: jax.jit(functools.partial(self._decode_fn, length=n))
+            n: jax.jit(functools.partial(decode_fn, length=n))
             for n in self._ladder}
         self._safe_decodes = {
             n: resilient_step(f, max_retries=max_retries,
@@ -485,17 +620,205 @@ class ServeEngine:
             one_step, (cache, tok_buf, state), None, length=length)
         return tok_buf, cache, state, ys
 
+    # -- paged closures (DESIGN.md §15) --------------------------------------
+    @staticmethod
+    def _paged_axes():
+        """Per-leaf data axes of the paged cache dict: the pools split at
+        their page axis, the table and lengths at the slot axis."""
+        return {"kp": 1, "vp": 1, "pt": 0, "len": 0}
+
+    def _insert_paged_fn(self, cache, cache1, tok_buf, tok1, state, slot,
+                         pos0, max_new, pt_row, write_mask):
+        """Mode-A paged insert: scatter a DENSE [1, max_seq] prefill cache
+        into this request's pages and point the slot's page-table row at
+        them. ``write_mask`` keeps only the first n_alloc table entries
+        (the pages actually allocated — rows past the request's reach hold
+        prompt padding never read); masked-off writes route to SCRATCH."""
+        p, m = self.page_size, self._pt_width
+        n_rows = m * p
+
+        def to_pages(leaf, pool):
+            x = leaf[:, 0].astype(pool.dtype)      # [L, max_seq, H, hd]
+            if n_rows != self.max_seq:
+                pad = [(0, 0)] * x.ndim
+                pad[1] = (0, n_rows - self.max_seq)
+                x = jnp.pad(x, pad)
+            return x.reshape(x.shape[0], m, p, *x.shape[2:])
+
+        pids = jnp.where(write_mask, pt_row, 0)
+        kp = cache["kp"].at[:, pids].set(to_pages(cache1["k"], cache["kp"]))
+        vp = cache["vp"].at[:, pids].set(to_pages(cache1["v"], cache["vp"]))
+        pt = jax.lax.dynamic_update_slice(cache["pt"], pt_row[None, :],
+                                          (slot, 0))
+        lens = cache["len"].at[slot].set(pos0)
+        tok_buf = jax.lax.dynamic_update_slice(tok_buf, tok1, (slot, 0))
+        state = {"active": state["active"].at[slot].set(True),
+                 "gen": state["gen"].at[slot].set(1),
+                 "pos": state["pos"].at[slot].set(pos0),
+                 "max_new": state["max_new"].at[slot].set(max_new)}
+        return {"kp": kp, "vp": vp, "pt": pt, "len": lens}, tok_buf, state
+
+    def _register_fn(self, pt, lens, tok_buf, tok1, state, slot, pos0,
+                     max_new, pt_row):
+        """Arm a slot whose pages were filled in place by prefill LEGS
+        (`_leg_fn`): only the small per-slot leaves change — the pools are
+        not even passed through, so nothing copies them."""
+        pt = jax.lax.dynamic_update_slice(pt, pt_row[None, :], (slot, 0))
+        lens = lens.at[slot].set(pos0)
+        tok_buf = jax.lax.dynamic_update_slice(tok_buf, tok1, (slot, 0))
+        state = {"active": state["active"].at[slot].set(True),
+                 "gen": state["gen"].at[slot].set(1),
+                 "pos": state["pos"].at[slot].set(pos0),
+                 "max_new": state["max_new"].at[slot].set(max_new)}
+        return pt, lens, tok_buf, state
+
+    def _leg_fn(self, params, tokens, kp, vp, pt_row, pos0, span):
+        """One transformer prefill leg writing straight into pages."""
+        return self.model.prefill_chunk(
+            params, tokens, self.cfg, self.exe, kp, vp, pt_row, pos0, span,
+            page_size=self.page_size, context_len=self.prompt_pad)
+
+    def _leg_rec_fn(self, params, cache, tokens, span):
+        """One recurrent prefill leg advancing a carried [1, ...] state."""
+        logits, cache = self.model.prefill_chunk(
+            params, cache, tokens, self.cfg, self.exe, span)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        return tok, cache
+
+    def _snap_put_fn(self, pool, cache1, pid):
+        """Store a [1, ...] recurrent state into snapshot page ``pid``."""
+        def put(big, one, ax):
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, one.astype(big.dtype), pid, axis=ax)
+        return jax.tree.map(put, pool, cache1, self._axes)
+
+    def _snap_get_fn(self, pool, pid):
+        """Read snapshot page ``pid`` back as a [1, ...] state tree."""
+        return jax.tree.map(
+            lambda big, ax: jax.lax.dynamic_slice_in_dim(big, pid, 1,
+                                                         axis=ax),
+            pool, self._axes)
+
+    def _decode_paged_fn(self, params, cache, tok_buf, state, length):
+        """The paged twin of `_decode_fn`: same scanned retirement machine,
+        but the KV cache is a page pool behind a traced page table.
+
+        Per step: gather the table into a dense [S, max_seq] VIEW (pure
+        indexing — `transformer.paged_view`), run the IDENTICAL ragged
+        `decode_step`, then scatter each lane's one written row back to its
+        page. The view rows a lane actually attends to were produced by the
+        same ops as the dense cache rows (prefill or a previous readback-
+        identical scatter), and `decode_attention` masks pre-softmax, so
+        decode is BIT-EQUAL to the dense engine. Inactive lanes scatter to
+        the reserved SCRATCH page — the paged twin of `mask_batch_select`'s
+        bit-freeze (their table rows may be stale after retirement; scratch
+        absorbs the write and the gathered view is masked by ``len``)."""
+        pt = cache["pt"]
+        p = self.page_size
+        rows = jnp.arange(self.n_slots)
+
+        def one_step(carry, _):
+            kp, vp, lens, tokens, st = carry
+            active = st["active"]
+            k_view, v_view = self.model.paged_view(kp, vp, pt, self.max_seq)
+            dense = {"k": k_view, "v": v_view, "len": lens}
+            logits, new_cache = self.model.decode_step(
+                params, dense, tokens, self.cfg, self.exe, ragged=True)
+            # the one row decode_step wrote, per lane (its pre-step length)
+            row = jnp.clip(lens, 0, self.max_seq - 1)
+            k_row = new_cache["k"][:, rows, row]      # [L, S, H, hd]
+            v_row = new_cache["v"][:, rows, row]
+            pid = jnp.take_along_axis(pt, (row // p)[:, None], axis=1)[:, 0]
+            spid = jnp.where(active, pid, 0)          # inactive -> SCRATCH
+            soff = jnp.where(active, row % p, 0)
+            kp = kp.at[:, spid, soff].set(k_row)
+            vp = vp.at[:, spid, soff].set(v_row)
+            lens = jnp.where(active, new_cache["len"], lens)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            tok = jnp.where(active[:, None], tok, tokens)
+            emitted = tok[:, 0]
+            gen = st["gen"] + active.astype(jnp.int32)
+            pos = st["pos"] + active.astype(jnp.int32)
+            done_len = gen >= st["max_new"]
+            done_eos = (jnp.zeros_like(active) if self.eos_id is None
+                        else emitted == jnp.int32(self.eos_id))
+            done_cap = pos >= jnp.int32(self.max_seq)
+            reason = jnp.where(done_eos, 2, jnp.where(done_len, 1,
+                               jnp.where(done_cap, 3, 0))).astype(jnp.int32)
+            reason = jnp.where(active, reason, 0)
+            new_st = {"active": active & (reason == 0), "gen": gen,
+                      "pos": pos, "max_new": st["max_new"]}
+            return (kp, vp, lens, tok, new_st), (emitted, active, reason)
+
+        (kp, vp, lens, tok_buf, state), ys = jax.lax.scan(
+            one_step, (cache["kp"], cache["vp"], cache["len"], tok_buf,
+                       state), None, length=length)
+        return tok_buf, {"kp": kp, "vp": vp, "pt": pt, "len": lens}, \
+            state, ys
+
     # -- warmup / compile accounting ----------------------------------------
+    @staticmethod
+    def _commit_ambient(tree):
+        """Commit creation-fresh buffers to the replicated placement of the
+        ambient mesh, if one is active. Under `use_mesh`, jit OUTPUTS come
+        back NamedSharding-committed while `jnp.zeros` stays uncommitted —
+        and the executable cache keys on placement, so a closure fed a
+        fresh buffer at session start and a jit output afterwards would
+        compile twice. No ambient mesh: identity (placement is uniform)."""
+        import jax.sharding as shd
+        from jax.interpreters import pxla
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty:
+            return tree
+        sh = shd.NamedSharding(mesh, shd.PartitionSpec())
+        return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+
+    def _fresh_pools(self):
+        """Zero-filled (kp, vp) page pools. Overridden by the sharded
+        engine to create them on the mesh placement."""
+        pools = self.model.init_paged_cache(
+            self.cfg, self.pages.n_pages, self.page_size, self.cache_dtype)
+        return self._commit_ambient((pools["kp"], pools["vp"]))
+
+    def _paged_cache_dict(self, kp, vp):
+        """Assemble the paged slot cache around pool handles. The SINGLE
+        place pt/len are created — warmup's throwaway cache and the session
+        cache must key the insert closure's jit cache identically, so the
+        sharded override commits them to the mesh here."""
+        return {"kp": kp, "vp": vp,
+                "pt": self._commit_ambient(
+                    jnp.zeros((self.n_slots, self._pt_width), jnp.int32)),
+                "len": self._commit_ambient(
+                    jnp.zeros((self.n_slots,), jnp.int32))}
+
     def _empty_cache(self):
-        return self.model.init_cache(self.cfg, self.n_slots, self.max_seq,
-                                     self.cache_dtype)
+        if self._paged_kv:
+            # the pools OUTLIVE sessions (prefix pages stay resident across
+            # `begin()`s); the handles move into the session here and come
+            # back at `finish()` — everything else is per-session zeros
+            if self._pool is None:
+                self._pool = self._fresh_pools()
+            kp, vp = self._pool
+            self._pool = None
+            return self._paged_cache_dict(kp, vp)
+        return self._commit_ambient(self.model.init_cache(
+            self.cfg, self.n_slots, self.max_seq, self.cache_dtype))
+
+    def _snap_pool(self):
+        """The engine-lifetime recurrent snapshot pool, lazily created (its
+        leaves are the slot cache's with n_pages in the batch axis)."""
+        if self._pool_snap is None:
+            self._pool_snap = self._commit_ambient(self.model.init_cache(
+                self.cfg, self.pages.n_pages, self.max_seq,
+                self.cache_dtype))
+        return self._pool_snap
 
     def _empty_tok_buf(self):
         """The [n_slots, 1] next-token buffer. A hook so the sharded engine
         can commit it to its mesh placement — an uncommitted buffer would
         key the insert closure's jit cache differently from the committed
         buffers later steps feed back, costing a recompile."""
-        return jnp.zeros((self.n_slots, 1), jnp.int32)
+        return self._commit_ambient(jnp.zeros((self.n_slots, 1), jnp.int32))
 
     def _empty_state(self):
         """The device-resident per-lane retirement rows, all [n_slots]:
@@ -505,8 +828,9 @@ class ServeEngine:
         rejects donating one buffer twice."""
         def z():
             return jnp.zeros((self.n_slots,), jnp.int32)
-        return {"active": jnp.zeros((self.n_slots,), bool),
-                "gen": z(), "pos": z(), "max_new": z()}
+        return self._commit_ambient(
+            {"active": jnp.zeros((self.n_slots,), bool),
+             "gen": z(), "pos": z(), "max_new": z()})
 
     def warmup(self):
         """Compile every closure (prefill, insert, and one decode
@@ -514,12 +838,58 @@ class ServeEngine:
         tokens = jnp.zeros((1, self.prompt_pad), jnp.int32)
         vl = jnp.ones((1,), jnp.int32)
         tok1, cache1 = self._jit_prefill(self.params, tokens, vl)
-        cache = self._empty_cache()
         tok_buf = self._empty_tok_buf()
         state = self._empty_state()
-        cache, tok_buf, state = self._jit_insert(
-            cache, cache1, tok_buf, tok1, state, jnp.int32(0), jnp.int32(1),
-            jnp.int32(1))
+        if self._paged_kv:
+            # THROWAWAY pools: insert/leg closures DONATE their pool
+            # arguments, so warming them on the engine-lifetime pool would
+            # invalidate it before the first session
+            kp, vp = self._fresh_pools()
+            cache = self._paged_cache_dict(kp, vp)
+            pt_row = jnp.zeros((self._pt_width,), jnp.int32)
+            cache, tok_buf, state = self._jit_insert_paged(
+                cache, cache1, tok_buf, tok1, state, jnp.int32(0),
+                jnp.int32(1), jnp.int32(1), pt_row,
+                jnp.zeros((self._pt_width,), bool))
+            if self._use_legs:
+                leg_toks = jnp.zeros((1, self._leg_c), jnp.int32)
+                tokw, kp2, vp2 = self._jit_leg(
+                    self.params, leg_toks, cache["kp"], cache["vp"],
+                    pt_row, jnp.int32(0), jnp.int32(1))
+                cache["kp"], cache["vp"] = kp2, vp2
+                pt2, len2, tok_buf, state = self._jit_register(
+                    cache["pt"], cache["len"], tok_buf, tokw, state,
+                    jnp.int32(0), jnp.int32(1), jnp.int32(1), pt_row)
+                cache["pt"], cache["len"] = pt2, len2
+        else:
+            cache = self._empty_cache()
+            if self._legs_rec:
+                c1 = self._commit_ambient(self.model.init_cache(
+                    self.cfg, 1, self.max_seq, self.cache_dtype))
+                leg_toks = jnp.zeros((1, self._leg_c), jnp.int32)
+                tokw, c1 = self._jit_leg_rec(self.params, c1, leg_toks,
+                                             jnp.int32(1))
+                if self._snap:
+                    # throwaway snapshot pool, same reason as above; must
+                    # carry the same ambient-mesh placement as _snap_pool()
+                    # or snap_put compiles twice (warmup vs serve)
+                    pool = self._commit_ambient(self.model.init_cache(
+                        self.cfg, self.pages.n_pages, self.max_seq,
+                        self.cache_dtype))
+                    pool = self._jit_snap_put(pool, c1, jnp.int32(1))
+                    jax.block_until_ready(
+                        self._jit_snap_get(pool, jnp.int32(1)))
+                # warm insert on the LEG RUNNER's outputs: serve-time
+                # finalize always inserts a leg_rec-produced carry/token,
+                # whose ambient-mesh placement differs from _jit_prefill's
+                # (committed vs not) and would force a second executable
+                cache, tok_buf, state = self._jit_insert(
+                    cache, c1, tok_buf, tokw, state, jnp.int32(0),
+                    jnp.int32(1), jnp.int32(1))
+            else:
+                cache, tok_buf, state = self._jit_insert(
+                    cache, cache1, tok_buf, tok1, state, jnp.int32(0),
+                    jnp.int32(1), jnp.int32(1))
         for n in self._ladder:
             tok_buf, cache, state, ys = self._decode_jits[n](
                 self.params, cache, tok_buf, state)
@@ -532,10 +902,21 @@ class ServeEngine:
         ``len(self._ladder)`` (one executable per compiled chunk length,
         all warmed up front) — the shape-stability contract (pinned by
         tests/test_engine.py and tests/test_chunked_decode.py)."""
-        return {"prefill": self._jit_prefill._cache_size(),
-                "insert": self._jit_insert._cache_size(),
-                "decode": sum(f._cache_size()
-                              for f in self._decode_jits.values())}
+        insert = (self._jit_insert_paged if self._paged_kv
+                  else self._jit_insert)
+        counts = {"prefill": self._jit_prefill._cache_size(),
+                  "insert": insert._cache_size(),
+                  "decode": sum(f._cache_size()
+                                for f in self._decode_jits.values())}
+        if self._use_legs:
+            counts["prefill_chunk"] = self._jit_leg._cache_size()
+            counts["register"] = self._jit_register._cache_size()
+        if self._legs_rec:
+            counts["prefill_chunk"] = self._jit_leg_rec._cache_size()
+        if self._snap:
+            counts["snapshot"] = self._jit_snap_put._cache_size()
+            counts["restore"] = self._jit_snap_get._cache_size()
+        return counts
 
     def _count_retry(self):
         self._retries += 1
@@ -667,6 +1048,7 @@ class ServeEngine:
         Snapshots lifetime retry/straggler counters so a reused engine
         reports only THIS session's retries/flags (the EWMA baseline itself
         carries over on purpose — it stays warm across traces)."""
+        px = self.prefix
         return EngineSession(
             report=ServeReport(records={}),
             slots=SlotAllocator(self.n_slots),
@@ -675,21 +1057,37 @@ class ServeEngine:
             tok_buf=self._empty_tok_buf(),
             state=self._empty_state(),
             retries0=self._retries,
-            flagged0=len(self.monitor.flagged))
+            flagged0=len(self.monitor.flagged),
+            evictions0=px.evictions if px is not None else 0,
+            hits0=px.hits if px is not None else 0,
+            misses0=px.misses if px is not None else 0)
 
     @staticmethod
     def _retire(rec: RequestRecord, reason: str, at: float):
         rec.finish_reason = reason
         rec.t_done = at
 
-    def admit(self, sess: "EngineSession", req: Request, now: float) -> float:
+    def admit(self, sess: "EngineSession", req: Request, now: float,
+              drain: bool = True) -> float:
         """Admit one request at clock ``now``: prefill, book, and either
         retire at prefill (max_new=1 / instant EOS — the request never
         occupies a decode slot) or insert into a free slot. Returns the
-        advanced clock. Caller guarantees ``sess.slots.n_free > 0``."""
+        advanced clock. Caller guarantees ``sess.slots.n_free > 0`` (and,
+        when paged, `can_admit`).
+
+        Legged admission (prefix cache / chunked prefill) builds a
+        `_PrefillJob`; with ``drain`` (default — external drivers like the
+        multi-tenant server need admission to complete before the clock
+        moves elsewhere) every leg runs before this returns, otherwise the
+        job queues on ``sess.jobs`` and `serve()` advances one leg per loop
+        iteration, interleaved with decode chunks."""
         report = sess.report
         rec = RequestRecord(request=req, t_admit=now)
         report.records[req.rid] = rec
+        if req.max_new > 1 and (self._use_legs or self._legs_rec):
+            return self._admit_legged(sess, req, rec, now, drain)
+        # ---- dense prefill (also paged mode A: dense prefill, paged
+        # insert) --------------------------------------------------------
         # with no EOS configured, NOTHING about admission depends on the
         # first token's value — defer the host read to the next chunk sync
         # so admission overlaps the in-flight chunk instead of waiting
@@ -724,10 +1122,18 @@ class ServeEngine:
             rem = min(rem, self.max_seq - len(req.prompt))
         sess.rem[slot] = rem
         t0 = time.perf_counter()
-        sess.cache, sess.tok_buf, sess.state = self._jit_insert(
-            sess.cache, cache1, sess.tok_buf, tok1, sess.state,
-            jnp.int32(slot), jnp.int32(len(req.prompt)),
-            jnp.int32(req.max_new))
+        if self._paged_kv:
+            pt_row, mask, owned = self._alloc_pt_row(req)
+            sess.slot_pages[slot] = (owned, [])
+            sess.cache, sess.tok_buf, sess.state = self._jit_insert_paged(
+                sess.cache, cache1, sess.tok_buf, tok1, sess.state,
+                jnp.int32(slot), jnp.int32(len(req.prompt)),
+                jnp.int32(req.max_new), pt_row, mask)
+        else:
+            sess.cache, sess.tok_buf, sess.state = self._jit_insert(
+                sess.cache, cache1, sess.tok_buf, tok1, sess.state,
+                jnp.int32(slot), jnp.int32(len(req.prompt)),
+                jnp.int32(req.max_new))
         if not lazy:
             # the blocking (EOS-aware) path bills the full prefill+insert
             # wall here; the lazy path bills dispatch only — the device
@@ -738,6 +1144,297 @@ class ServeEngine:
         now += ins
         report.wall_prefill_s += ins
         return now
+
+    # -- paged admission (DESIGN.md §15) -------------------------------------
+    def _pages_span(self, req: Request) -> tuple[int, int]:
+        """(last row index + 1 this request can ever write, pages that
+        cover it). Decode budget caps growth: rem is clipped at admission,
+        so rows past ``end`` are never written OR read."""
+        plen = len(req.prompt)
+        end = plen + min(req.max_new - 1, self.max_seq - plen)
+        return end, -(-end // self.page_size)
+
+    def _alloc_pages(self, n: int, owner, protect=()):
+        """``n`` pages, evicting sole-sharer prefix entries (LRU) to make
+        room. Raises on a genuine shortage — `can_admit` gates callers."""
+        pids = self.pages.alloc(n, owner=owner)
+        if pids is None and self.prefix is not None:
+            self.prefix.evict(n - self.pages.n_free, protect=protect)
+            pids = self.pages.alloc(n, owner=owner)
+        if pids is None:
+            raise RuntimeError(
+                f"page pool exhausted: {owner} needs {n} pages, "
+                f"{self.pages.n_free} free (gate admission on can_admit)")
+        return pids
+
+    def _alloc_pt_row(self, req: Request):
+        """Mode-A page grab: all pages owned, no sharing."""
+        from repro.runtime.pages import SCRATCH
+        _, n_alloc = self._pages_span(req)
+        owned = self._alloc_pages(n_alloc, req.rid)
+        row = owned + [SCRATCH] * (self._pt_width - n_alloc)
+        mask = [j < n_alloc for j in range(self._pt_width)]
+        return (jnp.asarray(row, jnp.int32), jnp.asarray(mask, bool), owned)
+
+    def _peek_prefix(self, prompt) -> tuple[int, list]:
+        """(f_eff, hit pids) a transformer admission WOULD reuse: the
+        longest consecutive run of resident full pages, capped so the
+        continuation keeps >= 1 token. Non-perturbing (LRU/stats untouched)
+        — `can_admit` probes feasibility without committing."""
+        if self.prefix is None or not self._use_legs:
+            return 0, []
+        from repro.runtime.pages import page_keys
+        got = self.prefix.lookup(page_keys(prompt, self.page_size),
+                                 peek=True)
+        f = 0
+        while f < len(got) and got[f] is not None:
+            f += 1
+        f = min(f, (len(prompt) - 1) // self.page_size)
+        return f, got[:f]
+
+    def pages_needed(self, req: Request) -> int:
+        """Pages an admission would NEWLY allocate — the tenant-quota unit
+        (shared prefix pages are not billed to their sharers)."""
+        if not self._paged_kv or req.max_new <= 1:
+            return 0
+        _, n_alloc = self._pages_span(req)
+        f_eff, _ = self._peek_prefix(req.prompt)
+        return n_alloc - f_eff
+
+    def can_admit(self, sess: "EngineSession", req: Request) -> bool:
+        """Whether the page pool can cover ``req`` right now (free pages
+        plus cache-only entries admission may evict, minus the hit pages
+        about to gain a sharer — those must not count as reclaimable).
+        Unpaged / recurrent engines always admit: snapshot pages are
+        best-effort, never required."""
+        if not self._paged_kv or req.max_new <= 1:
+            return True
+        _, n_alloc = self._pages_span(req)
+        f_eff, hit_pids = self._peek_prefix(req.prompt)
+        have = self.pages.n_free
+        if self.prefix is not None:
+            have += self.prefix.evictable(protect=hit_pids)
+        return have >= n_alloc - f_eff
+
+    def tenant_pages(self, sess: "EngineSession",
+                     tenant_of: dict | None = None) -> dict:
+        """tenant -> pages currently held as owner across busy slots (the
+        quota view `runtime.server` charges against). ``tenant_of`` maps
+        rid -> tenant (the server's view); without it requests fall under
+        one anonymous tenant."""
+        held: dict = {}
+        for slot, (owned, _shared) in sess.slot_pages.items():
+            rec = sess.slot_rec.get(slot)
+            if rec is None:
+                continue
+            t = (tenant_of.get(rec.request.rid) if tenant_of is not None
+                 else None)
+            held[t] = held.get(t, 0) + len(owned)
+        return held
+
+    def _admit_legged(self, sess: "EngineSession", req: Request,
+                      rec: RequestRecord, now: float, drain: bool) -> float:
+        """Admission via prefill legs: look up the shared prefix, allocate
+        the continuation's pages (transformer) or restore the deepest
+        snapshot (recurrent), split the rest of the prompt into legs, and
+        run them (now, or interleaved — see `admit`)."""
+        from repro.runtime.pages import SCRATCH, page_keys
+        report = sess.report
+        p, c = self.page_size, self._leg_c
+        prompt = list(req.prompt)
+        plen = len(prompt)
+        if plen > self.prompt_pad:
+            raise ValueError(f"prompt length {plen} exceeds "
+                             f"prompt_pad {self.prompt_pad}")
+        keys = page_keys(prompt, p) if self.prefix is not None else []
+        start, f_eff, pids_hit, carry, pt_row, owned = 0, 0, [], None, None, []
+        if self._use_legs:
+            if self.prefix is not None:
+                got = self.prefix.lookup(keys)
+                while f_eff < len(got) and got[f_eff] is not None:
+                    f_eff += 1
+                # cap so the continuation keeps >= 1 real token (the legs
+                # must produce the first-token logits)
+                f_eff = min(f_eff, (plen - 1) // p)
+                pids_hit = [got[j] for j in range(f_eff)]
+                for pid in pids_hit:
+                    self.pages.retain(pid)     # sharer refs FIRST: eviction
+                                               # below must not free them
+            start = f_eff * p
+            _, n_alloc = self._pages_span(req)
+            try:
+                owned = self._alloc_pages(n_alloc - f_eff, req.rid,
+                                          protect=pids_hit)
+            except RuntimeError:
+                for pid in pids_hit:
+                    self.pages.release(pid)
+                raise
+            row = pids_hit + owned + [SCRATCH] * (self._pt_width - n_alloc)
+            pt_row = jnp.asarray(row, jnp.int32)
+        else:
+            # recurrent: ONE snapshot page restores the whole state at a
+            # page boundary — take the deepest resident one
+            hit_j = -1
+            if self.prefix is not None:
+                got = self.prefix.lookup(keys)
+                for j in range(min(len(got), (plen - 1) // p)):
+                    if got[j] is not None:
+                        hit_j = j
+            if hit_j >= 0:
+                carry = self._jit_snap_get(self._snap_pool(),
+                                           jnp.int32(got[hit_j]))
+                start = (hit_j + 1) * p
+                f_eff = hit_j + 1
+            else:
+                carry = self._commit_ambient(self.model.init_cache(
+                    self.cfg, 1, self.max_seq, self.cache_dtype))
+        legs, pos = [], start
+        while pos < plen:
+            span = min(c, plen - pos)
+            toks = prompt[pos:pos + span] + [self.pad_id] * (c - span)
+            legs.append((pos, span, jnp.asarray(toks, jnp.int32)[None]))
+            pos += span
+        report.n_prefills += 1
+        if start:
+            report.prefix_hits += 1
+            report.prefix_hit_vectors += start
+        slot = sess.slots.alloc(req.rid)
+        sess.slot_rec[slot] = rec
+        if self._use_legs:
+            sess.slot_pages[slot] = (owned, pids_hit)
+        job = _PrefillJob(req=req, rec=rec, slot=slot, legs=legs,
+                          pt_row=pt_row, keys=keys, f_eff=f_eff, carry=carry)
+        if drain or not self._chunked:
+            while not job.done:
+                now = self._advance_leg(sess, job, now)
+        else:
+            sess.jobs.append(job)
+        return now
+
+    def _advance_leg(self, sess: "EngineSession", job: _PrefillJob,
+                     now: float) -> float:
+        """Run ONE prefill leg; finalize the job after its last. Vector
+        books advance per leg (not at admission) so an aborted job's record
+        matches exactly what the device observed."""
+        report = sess.report
+        pos0, span, toks = job.legs[job.leg_i]
+        t0 = time.perf_counter()
+        if self._use_legs:
+            tok1, kp, vp = self._jit_leg(
+                self.params, toks, sess.cache["kp"], sess.cache["vp"],
+                job.pt_row, jnp.int32(pos0), jnp.int32(span))
+            sess.cache["kp"], sess.cache["vp"] = kp, vp
+        else:
+            tok1, job.carry = self._jit_leg_rec(
+                self.params, job.carry, toks, jnp.int32(span))
+        tok1.block_until_ready()
+        dt = time.perf_counter() - t0
+        now += dt
+        report.wall_prefill_s += dt
+        report.observed_vectors += span
+        report.prefill_chunks += 1
+        rec = job.rec
+        rec.prefill_vectors += span
+        rec.pad_vectors += self._leg_c - span
+        report.prefill_pad_vectors += self._leg_c - span
+        job.tok1 = tok1
+        job.leg_i += 1
+        end = pos0 + span
+        if self._snap and end % self.page_size == 0:
+            self._register_snapshot(job, end)
+        if job.done:
+            now = self._finalize_job(sess, job, now)
+        return now
+
+    def _register_snapshot(self, job: _PrefillJob, end: int):
+        """Store the carried recurrent state at a page-aligned leg end.
+        Best effort: an exhausted pool skips the snapshot, never the
+        request — restores stay instantaneous (no retain on hit needed;
+        fresh entries are LRU-protected by their put tick)."""
+        key = job.keys[end // self.page_size - 1]
+        if key in self.prefix:
+            return
+        pids = self.pages.alloc(1, owner=("snap", job.req.rid))
+        if pids is None and self.prefix.evict(1):
+            pids = self.pages.alloc(1, owner=("snap", job.req.rid))
+        if pids is None:
+            return
+        self._pool_snap = self._jit_snap_put(self._snap_pool(), job.carry,
+                                             jnp.int32(pids[0]))
+        self.prefix.put(key, pids[0], adopt=True)
+
+    def _finalize_job(self, sess: "EngineSession", job: _PrefillJob,
+                      now: float) -> float:
+        """Last leg done: register produced prefix pages, deliver/inspect
+        the first token, and arm the decode lane."""
+        report = sess.report
+        req, rec, tok1 = job.req, job.rec, job.tok1
+        plen = len(req.prompt)
+        if self._use_legs and self.prefix is not None:
+            # register this prompt's produced FULL pages: the cache takes
+            # one ref ON TOP of the producer's (released at retire), so the
+            # pages outlive the request. First producer wins; a racing
+            # duplicate's page stays request-owned and frees at retire.
+            pids_all = list(sess.slot_pages[job.slot][1]) + \
+                list(sess.slot_pages[job.slot][0])
+            for j in range(job.f_eff, plen // self.page_size):
+                self.prefix.put(job.keys[j], pids_all[j])
+        rec.t_first = now
+        if self.eos_id is None:
+            sess.lazy.append((rec, tok1))
+        else:
+            first = int(tok1[0, 0])
+            if first == self.eos_id:
+                self._retire(rec, "eos", now)
+                self._free_slot(sess, job.slot)
+                return now
+            rec.tokens.append(first)
+        t0 = time.perf_counter()
+        if self._use_legs:
+            (sess.cache["pt"], sess.cache["len"], sess.tok_buf,
+             sess.state) = self._jit_register(
+                sess.cache["pt"], sess.cache["len"], sess.tok_buf, tok1,
+                sess.state, jnp.int32(job.slot), jnp.int32(plen),
+                jnp.int32(req.max_new), job.pt_row)
+        else:
+            sess.cache, sess.tok_buf, sess.state = self._jit_insert(
+                sess.cache, job.carry, sess.tok_buf, tok1, sess.state,
+                jnp.int32(job.slot), jnp.int32(plen),
+                jnp.int32(req.max_new))
+        dt = time.perf_counter() - t0
+        now += dt
+        report.wall_prefill_s += dt
+        rem = req.max_new - 1
+        if not self.recurrent:
+            rem = min(rem, self.max_seq - plen)
+        sess.rem[job.slot] = rem
+        return now
+
+    def _advance_prefill(self, sess: "EngineSession", now: float) -> float:
+        """Advance ONE leg of the oldest queued prefill job — the loop-
+        cadence unit that interleaves long prefills with decode chunks."""
+        job = sess.jobs[0]
+        now = self._advance_leg(sess, job, now)
+        if job.done:
+            sess.jobs.pop(0)
+        return now
+
+    def _release_slot_pages(self, sess: "EngineSession", slot: int):
+        """Drop the retiring slot's page refs (owned allocations AND the
+        sharer refs its prefix hits took). Cache-registered pages survive
+        through the cache's own reference."""
+        held = sess.slot_pages.pop(slot, None)
+        if held is None:
+            return
+        owned, shared = held
+        for pid in list(owned) + list(shared):
+            self.pages.release(pid)
+
+    def _free_slot(self, sess: "EngineSession", slot: int):
+        sess.slot_rec.pop(slot, None)
+        sess.slots.release(slot)
+        sess.rem.pop(slot, None)
+        self._release_slot_pages(sess, slot)
 
     def _pick_chunk(self, sess: "EngineSession",
                     responsive: bool = False) -> int:
@@ -840,6 +1537,7 @@ class ServeEngine:
                     sess.slot_rec.pop(slot)
                     sess.slots.release(slot)
                     sess.rem.pop(slot, None)
+                    self._release_slot_pages(sess, slot)
         return now
 
     @staticmethod
@@ -867,18 +1565,38 @@ class ServeEngine:
         The device-side active rows are left stale on purpose — a canceled
         session is never stepped again."""
         self._resolve_firsts(sess)
+        for job in sess.jobs:    # half-prefilled requests lose their slot
+            self._retire(job.rec, "cap", now)
+            self._free_slot(sess, job.slot)
+        sess.jobs.clear()
         for slot in list(sess.slot_rec):
             self._retire(sess.slot_rec.pop(slot), "cap", now)
             sess.slots.release(slot)
             sess.rem.pop(slot, None)
+            self._release_slot_pages(sess, slot)
 
     def finish(self, sess: "EngineSession", now: float) -> ServeReport:
-        """Close the session and return its report."""
+        """Close the session and return its report. Paged engines hand the
+        pool buffers back to the engine (prefix pages stay resident for the
+        next session) and snapshot the allocator's exact-partition ledger."""
         self._resolve_firsts(sess)
-        sess.report.makespan_s = now
-        sess.report.retries = self._retries - sess.retries0
-        sess.report.stragglers = list(self.monitor.flagged[sess.flagged0:])
-        return sess.report
+        report = sess.report
+        for job in list(sess.jobs):   # a closed session holds nothing
+            self._retire(job.rec, "cap", now)
+            self._free_slot(sess, job.slot)
+        sess.jobs.clear()
+        if self._paged_kv:
+            self._pool = (sess.cache["kp"], sess.cache["vp"])
+        if self.pages is not None:
+            report.page_ledger = self.pages.ledger()
+            report.page_ledger_exact = self.pages.verify()
+        if self.prefix is not None:
+            report.page_evictions = self.prefix.evictions - sess.evictions0
+            report.prefix_stats = self.prefix.stats()
+        report.makespan_s = now
+        report.retries = self._retries - sess.retries0
+        report.stragglers = list(self.monitor.flagged[sess.flagged0:])
+        return report
 
     # -- the serving loop ----------------------------------------------------
     def serve(self, requests, max_steps: int = 100_000) -> ServeReport:
@@ -901,10 +1619,24 @@ class ServeEngine:
         while len(queue) or sess.slots.n_busy or pending is not None:
             # ---- admission + slot refill (continuous batching) ------------
             while sess.slots.n_free:
-                req = queue.pop_ready(now)
-                if req is None:
-                    break
-                now = self.admit(sess, req, now)
+                if self._paged_kv:
+                    # ask the allocator BEFORE popping: a request that does
+                    # not fit waits at the head (order-preserving HOL block;
+                    # never deadlocks — an all-free engine can always cover
+                    # one max-length request, ctor-checked)
+                    req = queue.peek_ready(now)
+                    if req is None or not self.can_admit(sess, req):
+                        break
+                    queue.pop_ready(now)
+                else:
+                    req = queue.pop_ready(now)
+                    if req is None:
+                        break
+                now = self.admit(sess, req, now, drain=not self._chunked)
+
+            # ---- chunked-prefill legs ride the loop cadence ---------------
+            if sess.jobs:
+                now = self._advance_prefill(sess, now)
 
             # ---- chunk-boundary resilience (drift / chaos / recal) ---------
             now = self._resilience_tick(sess, now)
@@ -1009,10 +1741,26 @@ class ShardedServeEngine(ServeEngine):
         # place the (installed) tree once, outside the serving clock
         self.params = jax.device_put(self.params, self._param_sh)
 
-        cache_shape = jax.eval_shape(lambda: self.model.init_cache(
-            self.cfg, self.n_slots, self.max_seq, self.cache_dtype))
-        self._cache_sh = to_named(
-            slot_cache_specs(cache_shape, self._axes, mesh), mesh)
+        if self._paged_kv:
+            # paged cache dict: pools split at the PAGE axis over data (a
+            # page never splits across the reduction dim — heads/rows stay
+            # whole), table + lengths at the slot axis like the dense state
+            pool_shape = jax.eval_shape(lambda: self.model.init_paged_cache(
+                self.cfg, self.pages.n_pages, self.page_size,
+                self.cache_dtype))
+            cache_shape = {
+                "kp": pool_shape["kp"], "vp": pool_shape["vp"],
+                "pt": jax.ShapeDtypeStruct(
+                    (self.n_slots, self._pt_width), jnp.int32),
+                "len": jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)}
+            self._cache_sh = to_named(
+                slot_cache_specs(cache_shape, self._paged_axes(), mesh),
+                mesh)
+        else:
+            cache_shape = jax.eval_shape(lambda: self.model.init_cache(
+                self.cfg, self.n_slots, self.max_seq, self.cache_dtype))
+            self._cache_sh = to_named(
+                slot_cache_specs(cache_shape, self._axes, mesh), mesh)
         dp = dp_axes(mesh)
         tok_sh = NamedSharding(
             mesh, fit_spec(P(dp, None), (self.n_slots, 1), mesh))
@@ -1037,14 +1785,64 @@ class ShardedServeEngine(ServeEngine):
             self._prefill_fn,
             in_shardings=(self._param_sh, repl, repl),
             out_shardings=(repl, cache1_sh))
+        if self._paged_kv:
+            # dense insert is unused when paged, but keep it compiled
+            # against the DENSE cache layout for API parity
+            dense_shape = jax.eval_shape(lambda: self.model.init_cache(
+                self.cfg, self.n_slots, self.max_seq, self.cache_dtype))
+            dense_sh = to_named(
+                slot_cache_specs(dense_shape, self._axes, mesh), mesh)
+        else:
+            dense_sh = self._cache_sh
         self._jit_insert = jax.jit(
             self._insert_fn, donate_argnums=(0, 2, 4),
-            in_shardings=(self._cache_sh, cache1_sh, tok_sh, repl,
+            in_shardings=(dense_sh, cache1_sh, tok_sh, repl,
                           self._state_sh, repl, repl, repl),
-            out_shardings=(self._cache_sh, tok_sh, self._state_sh))
+            out_shardings=(dense_sh, tok_sh, self._state_sh))
+        decode_fn = self._decode_fn
+        if self._paged_kv:
+            decode_fn = self._decode_paged_fn
+            self._jit_insert_paged = jax.jit(
+                self._insert_paged_fn, donate_argnums=(0, 2, 4),
+                in_shardings=(self._cache_sh, cache1_sh, tok_sh, repl,
+                              self._state_sh, repl, repl, repl, repl, repl),
+                out_shardings=(self._cache_sh, tok_sh, self._state_sh))
+        if self._use_legs:
+            kp_sh, vp_sh = self._cache_sh["kp"], self._cache_sh["vp"]
+            self._jit_leg = jax.jit(
+                self._leg_fn, donate_argnums=(2, 3),
+                in_shardings=(self._param_sh, repl, kp_sh, vp_sh, repl,
+                              repl, repl),
+                out_shardings=(repl, kp_sh, vp_sh))
+            self._jit_register = jax.jit(
+                self._register_fn, donate_argnums=(0, 1, 2, 4),
+                in_shardings=(self._cache_sh["pt"], self._cache_sh["len"],
+                              tok_sh, repl, self._state_sh, repl, repl,
+                              repl, repl),
+                out_shardings=(self._cache_sh["pt"], self._cache_sh["len"],
+                               tok_sh, self._state_sh))
+        if self._legs_rec:
+            # pin the carried [1, ...] state replicated: snap_get outputs
+            # and fresh init_cache trees must key ONE executable each
+            self._jit_leg_rec = jax.jit(
+                self._leg_rec_fn, donate_argnums=(1,),
+                in_shardings=(self._param_sh, cache1_sh, repl, repl),
+                out_shardings=(repl, cache1_sh))
+        if self._snap:
+            pool_shape = jax.eval_shape(lambda: self.model.init_cache(
+                self.cfg, self.pages.n_pages, self.max_seq,
+                self.cache_dtype))
+            pool_sh = named_replicated(pool_shape)
+            self._jit_snap_put = jax.jit(
+                self._snap_put_fn, donate_argnums=(0,),
+                in_shardings=(pool_sh, cache1_sh, repl),
+                out_shardings=pool_sh)
+            self._jit_snap_get = jax.jit(
+                self._snap_get_fn, in_shardings=(pool_sh, repl),
+                out_shardings=cache1_sh)
         self._decode_jits = {
             n: jax.jit(
-                functools.partial(self._decode_fn, length=n),
+                functools.partial(decode_fn, length=n),
                 in_shardings=(self._param_sh, self._cache_sh, tok_sh,
                               self._state_sh),
                 out_shardings=(tok_sh, self._cache_sh, self._state_sh,
@@ -1060,7 +1858,23 @@ class ShardedServeEngine(ServeEngine):
         # compiled against (identical treedef/shapes -> no recompile)
         self.params = jax.device_put(params, self._param_sh)
 
+    def _fresh_pools(self):
+        pools = self.model.init_paged_cache(
+            self.cfg, self.pages.n_pages, self.page_size, self.cache_dtype,
+            shardings={"kp": self._cache_sh["kp"],
+                       "vp": self._cache_sh["vp"]})
+        return pools["kp"], pools["vp"]
+
+    def _paged_cache_dict(self, kp, vp):
+        # pools were placed by _fresh_pools; commit table + lengths
+        cache = ServeEngine._paged_cache_dict(self, kp, vp)
+        cache["pt"] = jax.device_put(cache["pt"], self._cache_sh["pt"])
+        cache["len"] = jax.device_put(cache["len"], self._cache_sh["len"])
+        return cache
+
     def _empty_cache(self):
+        if self._paged_kv:
+            return ServeEngine._empty_cache(self)
         # created ON the mesh placement (models' sharding-annotated init)
         return self.model.init_cache(self.cfg, self.n_slots, self.max_seq,
                                      self.cache_dtype,

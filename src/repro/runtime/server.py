@@ -233,14 +233,34 @@ class ModelServer:
                 while sess.slots.n_free:
                     cands = [t for t in self._tenants_of[m]
                              if queues[t].has_ready(now)]
-                    if not cands:
+                    admitted = False
+                    while cands:
+                        t = pick_tenant(cands, in_flight, self.policies)
+                        req = queues[t].peek_ready(now)
+                        # paged engines gate admission on page supply and
+                        # the tenant's page quota BEFORE popping: a blocked
+                        # tenant is eliminated from this pass (its queue
+                        # order is preserved; another tenant may use the
+                        # slot — work-conserving), never dropped
+                        pol = self.policies[t]
+                        if pol.max_pages is not None:
+                            held = eng.tenant_pages(sess, tenant_of)
+                            if (held.get(t, 0) + eng.pages_needed(req)
+                                    > pol.max_pages):
+                                cands.remove(t)
+                                continue
+                        if not eng.can_admit(sess, req):
+                            cands.remove(t)
+                            continue
+                        queues[t].pop_ready(now)
+                        busy0 = sess.slots.n_busy
+                        now = eng.admit(sess, req, now)
+                        if sess.slots.n_busy > busy0:   # took a slot (not
+                            in_flight[t] += 1           # prefill-only retired)
+                        admitted = True
                         break
-                    t = pick_tenant(cands, in_flight, self.policies)
-                    req = queues[t].pop_ready(now)
-                    busy0 = sess.slots.n_busy
-                    now = eng.admit(sess, req, now)
-                    if sess.slots.n_busy > busy0:   # took a slot (not
-                        in_flight[t] += 1           # prefill-only retired)
+                    if not admitted:
+                        break
 
             # ---- one decode chunk per busy model (quota accounting lands
             # on the chunk boundary: step() syncs every retirement) ----------
@@ -333,7 +353,10 @@ def build_server(specs: Sequence[ModelSpec],
                  max_seq: int | None = None, n_contexts: int = 1,
                  tiles_per_context: int | None = None, aimc_cfg=None,
                  seed: int = 0, eos_id: int | None = None, mesh=None,
-                 cache_dtype=None, decode_chunk: int = 1) -> ModelServer:
+                 cache_dtype=None, decode_chunk: int = 1,
+                 page_size: int = 0, n_pages: int = 0,
+                 prefix_cache: bool = False,
+                 prefill_chunk: int = 0) -> ModelServer:
     """Initialize every registered model, co-program the AIMC members
     against ONE shared `TilePool`, and wrap the engines in a `ModelServer`.
 
@@ -341,7 +364,11 @@ def build_server(specs: Sequence[ModelSpec],
     ``mesh`` (a named JAX mesh) serves every model through
     `ShardedServeEngine` on that mesh. ``decode_chunk`` sets every
     engine's scanned-decode chunk size (tokens are chunk-invariant;
-    quota accounting lands on chunk boundaries). The default ``aimc_cfg`` uses the
+    quota accounting lands on chunk boundaries). ``page_size`` /
+    ``n_pages`` / ``prefix_cache`` / ``prefill_chunk`` configure the
+    paged slot cache (DESIGN.md §15) on every transformer-module engine
+    (recurrent engines take the snapshot path; other modules get the
+    dense cache). The default ``aimc_cfg`` uses the
     deployment configuration (fixed DAC input scale) so programmed output
     is batch-shape independent. Raises `core.program.CapacityError` when
     the co-programmed models exceed ``tiles_per_context`` together."""
@@ -395,6 +422,23 @@ def build_server(specs: Sequence[ModelSpec],
                   cache_dtype=cache_dtype, family=arch.family,
                   module=arch.module, program=program, eos_id=eos_id,
                   decode_chunk=decode_chunk)
+        if page_size > 0:
+            # only modules with a paged path take the flags; the rest of a
+            # mixed registry keeps the dense cache (documented above)
+            from repro.runtime.engine import RECURRENT_MODULES
+            rec = arch.module in RECURRENT_MODULES
+            legs_ok = (arch.family != "vlm"
+                       and not getattr(cfg, "is_moe", False)
+                       and cache_dtype == jnp.float32)
+            if arch.module == "transformer":
+                kw.update(page_size=page_size, n_pages=n_pages)
+                if legs_ok:
+                    kw.update(prefix_cache=prefix_cache,
+                              prefill_chunk=prefill_chunk)
+            elif rec and legs_ok and (prefix_cache or prefill_chunk):
+                kw.update(page_size=page_size, n_pages=n_pages,
+                          prefix_cache=prefix_cache,
+                          prefill_chunk=prefill_chunk)
         if mesh is not None:
             engines[spec.name] = ShardedServeEngine(model, cfg, exe, params,
                                                     mesh=mesh, **kw)

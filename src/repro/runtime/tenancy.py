@@ -58,13 +58,17 @@ class TenantPolicy:
     ``weight`` is the fair-share weight for decode slots on ``model``
     (entitlement = weight / sum of co-tenant weights); ``admission`` orders
     the tenant's OWN queue; the SLO targets are report-time verdicts, not
-    enforcement (the quota is the enforcement lever)."""
+    enforcement (the quota is the enforcement lever). ``max_pages`` caps
+    the tenant's NEWLY-allocated KV pages on a paged engine (shared prefix
+    pages are unbilled — `runtime.engine.pages_needed`); None = unlimited,
+    and it is simply ignored on a dense engine."""
     name: str
     model: str
     weight: float = 1.0
     admission: str = "fifo"
     slo_ttft_s: float | None = None       # p99 time-to-first-token target
     slo_tpot_s: float | None = None       # p99 per-output-token target
+    max_pages: int | None = None          # paged-engine KV page quota
 
     def __post_init__(self):
         if not self.name:
@@ -73,6 +77,9 @@ class TenantPolicy:
             raise ValueError(f"tenant {self.name!r}: model must be non-empty")
         if self.weight <= 0:
             raise ValueError(f"tenant {self.name!r}: weight must be > 0")
+        if self.max_pages is not None and self.max_pages <= 0:
+            raise ValueError(f"tenant {self.name!r}: max_pages must be > 0 "
+                             f"(None = unlimited)")
         if self.admission not in ADMISSION_POLICIES:
             raise ValueError(f"tenant {self.name!r}: unknown admission "
                              f"policy {self.admission!r} "

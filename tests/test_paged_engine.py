@@ -1,0 +1,445 @@
+"""Paged KV/state cache, prefix cache and chunked prefill
+(runtime/engine.py + runtime/pages.py + models.*.prefill_chunk).
+
+The contracts pinned here (ISSUE 9 acceptance criteria):
+  * paged decode (mode A and legged) is BIT-EQUAL to the dense engine on
+    synchronized AND ragged traces;
+  * shapes stay jit-stable: no closure recompiles after warmup, paged or
+    legged, on any trace;
+  * the page ledger reconciles exactly — every page attributed to exactly
+    one owner or the free list at finish();
+  * a prefix hit admits WITHOUT re-running the shared span's prefill: the
+    producer is billed once, sharers pay only their continuation (CM_*
+    ledgers still close exactly against `program.mvm_counts()`);
+  * 8 requests sharing one system prompt prefill the shared span exactly
+    once (the ci.sh --fast smoke mirrors this through launch.serve);
+  * recurrent engines reuse snapshot pages (deepest-boundary restore);
+  * pools outlive sessions (prefix pages stay resident across begin());
+  * invalid paged configs fail loudly at construction;
+  * the sharded engine inherits everything bit-equal on a forced 2-device
+    mesh (subprocess, slow).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_arch
+from repro.core.aimc import AimcConfig
+from repro.core.program import MappingPlan, program_model
+from repro.models.layers import Execution
+from repro.runtime.batcher import (Request, poisson_trace, reconcile,
+                                   synchronized_trace)
+from repro.runtime.engine import ServeEngine
+
+EXE = Execution(compute_dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tfm():
+    spec = get_arch("granite-8b")
+    cfg = spec.smoke_cfg
+    model = spec.model_module()
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return spec, cfg, model, params
+
+
+def make_engine(tfm, **kw):
+    spec, cfg, model, params = tfm
+    kw.setdefault("n_slots", 3)
+    kw.setdefault("prompt_pad", 8)
+    kw.setdefault("max_seq", 24)
+    kw.setdefault("family", spec.family)
+    kw.setdefault("module", spec.module)
+    return ServeEngine(model, cfg, EXE, kw.pop("params", params), **kw)
+
+
+def shared_prompt_trace(n, shared, suffix_len, vocab, max_new=5, seed=0):
+    """n requests sharing one system prompt + a unique per-request tail."""
+    import random
+    rng = random.Random(seed)
+    out = []
+    for i in range(n):
+        tail = tuple(rng.randint(1, vocab - 1) for _ in range(suffix_len))
+        out.append(Request(rid=i, prompt=tuple(shared) + tail,
+                           max_new=max_new, arrival=0.0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mode A: paged cache, dense prefill — bit-equality + ledger
+# ---------------------------------------------------------------------------
+
+def test_mode_a_bit_equal_sync_and_pages_all_freed(tfm):
+    spec, cfg, model, params = tfm
+    dense = make_engine(tfm)
+    dense.warmup()
+    paged = make_engine(tfm, page_size=4)
+    assert paged.warmup() == {"prefill": 1, "insert": 1, "decode": 1}
+    reqs = synchronized_trace(3, prompt_len=8, max_new=6, seed=1,
+                              vocab=cfg.vocab)
+    r1 = dense.serve(list(reqs))
+    r2 = paged.serve(list(reqs))
+    for r in reqs:
+        assert r1.tokens(r.rid) == r2.tokens(r.rid), \
+            f"req {r.rid}: paged decode diverged from dense"
+    # no prefix cache: at finish every page is back on the free list
+    assert r2.page_ledger_exact
+    assert r2.page_ledger["held"] == 0
+    assert r2.page_ledger["free"] == paged.pages.n_pages - 1
+    assert r2.observed_vectors == r2.useful_vectors
+
+
+def test_mode_a_ragged_bit_equal_no_recompile(tfm):
+    spec, cfg, model, params = tfm
+    dense = make_engine(tfm)
+    dense.warmup()
+    paged = make_engine(tfm, page_size=4)
+    counts = paged.warmup()
+    reqs = poisson_trace(10, rate=400.0, seed=5, prompt_len=(2, 8),
+                         max_new=(1, 7), vocab=cfg.vocab)
+    r1 = dense.serve(list(reqs))
+    r2 = paged.serve(list(reqs))
+    for r in reqs:
+        assert r1.tokens(r.rid) == r2.tokens(r.rid), \
+            f"req {r.rid}: paged decode diverged on the ragged trace"
+    assert paged.compile_counts() == counts, \
+        "ragged trace recompiled a paged closure after warmup"
+    assert r2.page_ledger_exact and r2.page_ledger["held"] == 0
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: shared span prefilled exactly once, billed exactly once
+# ---------------------------------------------------------------------------
+
+def test_prefix_shared_prompt_exactly_once_bit_equal_programmed(tfm):
+    spec, cfg, model, params = tfm
+    aimc = AimcConfig(impl="ref", input_scale=0.1)
+    exe = Execution(mode="aimc", aimc=aimc, compute_dtype="float32",
+                    programmed=True)
+    program = program_model(params, MappingPlan(), aimc,
+                            jax.random.PRNGKey(3))
+    installed = program.install(params)
+    kw = dict(n_slots=3, prompt_pad=12, max_seq=24, family=spec.family,
+              module=spec.module, program=program)
+    dense = ServeEngine(model, cfg, exe, installed, **kw)
+    dense.warmup()
+    paged = ServeEngine(model, cfg, exe, installed, page_size=4,
+                        prefix_cache=True, **kw)
+    counts = paged.warmup()
+    assert counts["prefill_chunk"] == 1 and counts["register"] == 1
+    shared = tuple(range(1, 9))                    # 8 tokens = 2 full pages
+    reqs = shared_prompt_trace(8, shared, suffix_len=3, vocab=cfg.vocab,
+                               max_new=4, seed=2)
+    r1 = dense.serve(list(reqs))
+    r2 = paged.serve(list(reqs))
+    for r in reqs:
+        assert r1.tokens(r.rid) == r2.tokens(r.rid), \
+            f"req {r.rid}: prefix-cache serving changed the output"
+    # exactly-once: the producer pays the full prompt, every sharer only
+    # its continuation past the 2 shared pages
+    recs = r2.records
+    assert recs[0].prefill_vectors == 11
+    for i in range(1, 8):
+        assert recs[i].prefill_vectors == 11 - 8, \
+            f"req {i} re-prefilled the shared span"
+    assert r2.prefix_hits == 7
+    assert r2.prefix_hit_vectors == 7 * 8
+    # never double-billed, never free: the books still close exactly
+    assert r2.observed_vectors == r2.useful_vectors
+    ledger_sum, static = reconcile(program, recs, r2.observed_vectors)
+    assert ledger_sum == static
+    # page ledger exact; only the cached prefix pages stay held
+    assert r2.page_ledger_exact
+    assert r2.page_ledger["held"] == len(paged.prefix)
+    assert paged.compile_counts() == counts
+
+
+def test_prefix_pool_outlives_session(tfm):
+    spec, cfg, model, params = tfm
+    eng = make_engine(tfm, n_slots=2, page_size=4, prefix_cache=True)
+    eng.warmup()
+    shared = tuple(range(3, 11))
+    reqs = shared_prompt_trace(2, shared, suffix_len=0, vocab=cfg.vocab,
+                               max_new=3, seed=4)
+    r1 = eng.serve(list(reqs))
+    # full-prompt sharing is capped one token short of the prompt (the legs
+    # must produce the first-token logits): 8 tokens / P=4 -> 1 page reused
+    assert r1.records[1].prefill_vectors == 8 - 4
+    # a SECOND session on the same engine still hits: the pool handles and
+    # the prefix entries survived finish()/begin()
+    reqs2 = shared_prompt_trace(2, shared, suffix_len=0, vocab=cfg.vocab,
+                                max_new=3, seed=5)
+    r2 = eng.serve(list(reqs2))
+    assert r2.prefix_hits == 2                    # both hit this time
+    for rec in r2.records.values():
+        assert rec.prefill_vectors == 8 - 4
+    assert r1.tokens(0) == r2.tokens(0)           # same prompt, same output
+    assert r2.page_ledger_exact
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_bit_equal_and_cuts_pad_waste(tfm):
+    spec, cfg, model, params = tfm
+    kw = dict(n_slots=3, prompt_pad=12, max_seq=24)
+    dense = make_engine(tfm, **kw)
+    dense.warmup()
+    paged = make_engine(tfm, page_size=4, prefill_chunk=4, **kw)
+    counts = paged.warmup()
+    reqs = poisson_trace(10, rate=400.0, seed=9, prompt_len=(2, 12),
+                         max_new=(1, 7), vocab=cfg.vocab)
+    r1 = dense.serve(list(reqs))
+    r2 = paged.serve(list(reqs))
+    for r in reqs:
+        assert r1.tokens(r.rid) == r2.tokens(r.rid), \
+            f"req {r.rid}: chunked prefill changed the output"
+    assert paged.compile_counts() == counts
+    # a prompt never pays more than one leg's padding; the dense engine
+    # pays prompt_pad - len on every prefill
+    assert r2.prefill_pad_vectors < r1.prefill_pad_vectors
+    assert r2.prefill_chunks >= r2.n_prefills
+    assert r2.observed_vectors == r2.useful_vectors
+    assert r2.page_ledger_exact and r2.page_ledger["held"] == 0
+
+
+def test_prefix_plus_chunk_interleaved_books_close(tfm):
+    spec, cfg, model, params = tfm
+    kw = dict(n_slots=2, prompt_pad=12, max_seq=24)
+    dense = make_engine(tfm, **kw)
+    dense.warmup()
+    paged = make_engine(tfm, page_size=4, prefix_cache=True,
+                        prefill_chunk=4, **kw)
+    counts = paged.warmup()
+    shared = tuple(range(5, 13))
+    reqs = shared_prompt_trace(6, shared, suffix_len=4, vocab=cfg.vocab,
+                               max_new=4, seed=6)
+    r1 = dense.serve(list(reqs))
+    r2 = paged.serve(list(reqs))
+    for r in reqs:
+        assert r1.tokens(r.rid) == r2.tokens(r.rid), \
+            f"req {r.rid}: interleaved prefix+chunk serving diverged"
+    # interleaved admission cannot promise exactly-once (a follower may be
+    # admitted before the producer's last leg registers), but the books
+    # and the page ledger must still close exactly
+    assert r2.observed_vectors == r2.useful_vectors
+    assert r2.page_ledger_exact
+    assert r2.page_ledger["held"] == len(paged.prefix)
+    assert paged.compile_counts() == counts
+
+
+# ---------------------------------------------------------------------------
+# recurrent snapshot pages
+# ---------------------------------------------------------------------------
+
+def test_recurrent_snapshot_hit_bit_equal():
+    spec = get_arch("xlstm-350m")
+    cfg = spec.smoke_cfg
+    model = spec.model_module()
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    kw = dict(n_slots=2, prompt_pad=6, max_seq=16, family=spec.family,
+              module=spec.module, cache_dtype=jnp.float32)
+    dense = ServeEngine(model, cfg, EXE, params, **kw)
+    dense.warmup()
+    snap = ServeEngine(model, cfg, EXE, params, page_size=2,
+                       prefix_cache=True, **kw)
+    counts = snap.warmup()
+    assert counts["snapshot"] == 1 and counts["restore"] == 1
+    shared = (3, 7, 11, 2, 9, 5)
+    reqs = [Request(rid=i, prompt=shared, max_new=4) for i in range(2)]
+    r1 = dense.serve(list(reqs))
+    r2 = snap.serve(list(reqs))
+    for r in reqs:
+        assert r1.tokens(r.rid) == r2.tokens(r.rid), \
+            f"req {r.rid}: snapshot restore changed the output"
+    # deepest usable snapshot: page boundary 4 of a 6-token prompt (the
+    # boundary at 6 is capped — the continuation must keep >= 1 token)
+    assert r2.records[0].prefill_vectors == 6
+    assert r2.records[1].prefill_vectors == 2
+    assert r2.prefix_hits == 1 and r2.prefix_hit_vectors == 4
+    assert r2.observed_vectors == r2.useful_vectors
+    assert r2.page_ledger_exact
+    assert snap.compile_counts() == counts
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_paged_config_validation(tfm):
+    with pytest.raises(ValueError, match="require page_size"):
+        make_engine(tfm, prefix_cache=True)
+    with pytest.raises(ValueError, match="require page_size"):
+        make_engine(tfm, prefill_chunk=4)
+    with pytest.raises(ValueError, match="> max_seq"):
+        make_engine(tfm, page_size=64)
+    with pytest.raises(ValueError, match="max-length request"):
+        make_engine(tfm, page_size=4, n_pages=4)   # needs 24/4 + 1 = 7
+    with pytest.raises(ValueError, match="float32"):
+        make_engine(tfm, page_size=4, prefix_cache=True,
+                    cache_dtype=jnp.bfloat16)
+    # mode A (no legs) serves any cache dtype
+    make_engine(tfm, page_size=4, cache_dtype=jnp.bfloat16)
+
+
+def test_moe_prefix_cache_rejected():
+    spec = get_arch("olmoe-1b-7b")
+    cfg = spec.smoke_cfg
+    model = spec.model_module()
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="MoE"):
+        ServeEngine(model, cfg, EXE, params, n_slots=2, prompt_pad=8,
+                    max_seq=16, family=spec.family, module=spec.module,
+                    page_size=4, prefix_cache=True)
+
+
+# ---------------------------------------------------------------------------
+# encdec paged helpers (unit: the engine rejects the audio family, but the
+# decoder self-attn pools must gather identically to the dense cache)
+# ---------------------------------------------------------------------------
+
+def test_encdec_paged_view_matches_dense_layout():
+    from repro.models import encdec
+    spec = get_arch("seamless-m4t-large-v2")
+    cfg = spec.smoke_cfg
+    pools = encdec.init_paged_cache(cfg, n_pages=5, page_size=2,
+                                    dtype=jnp.float32)
+    n_dec = pools["kp"].shape[0]
+    assert pools["kp"].shape[1:3] == (5, 2)
+    key = jax.random.PRNGKey(1)
+    kp = jax.random.normal(key, pools["kp"].shape)
+    vp = jax.random.normal(key, pools["vp"].shape)
+    pt = jnp.asarray([[1, 3], [4, 2]], jnp.int32)      # 2 slots, 2 pages
+    k, v = encdec.paged_view(kp, vp, pt, max_seq=4)
+    assert k.shape[:3] == (n_dec, 2, 4)
+    # the gathered view IS the named pages, row-for-row
+    assert jnp.array_equal(k[:, 0, :2], kp[:, 1])
+    assert jnp.array_equal(k[:, 0, 2:], kp[:, 3])
+    assert jnp.array_equal(v[:, 1, :2], vp[:, 4])
+    assert jnp.array_equal(v[:, 1, 2:], vp[:, 2])
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant server: paged registry + per-tenant page quotas
+# ---------------------------------------------------------------------------
+
+def test_tenant_policy_max_pages_validation():
+    from repro.runtime.tenancy import TenantPolicy
+    with pytest.raises(ValueError, match="max_pages"):
+        TenantPolicy(name="t", model="m", max_pages=0)
+    TenantPolicy(name="t", model="m", max_pages=3)     # positive is fine
+
+
+def test_server_paged_bit_equal_and_page_quota_blocks_hog():
+    from repro.runtime.server import ModelSpec, build_server
+    from repro.runtime.tenancy import TenantPolicy, TenantRequest
+
+    def reqs(tenant, rids, vocab):
+        import random
+        rng = random.Random(7)
+        return [TenantRequest(tenant=tenant, request=Request(
+            rid=r, prompt=tuple(rng.randint(1, vocab - 1) for _ in range(8)),
+            max_new=4, arrival=0.0)) for r in rids]
+
+    kw = dict(smoke=True, n_slots=2, prompt_pad=8, max_seq=16, seed=0)
+    srv_d = build_server([ModelSpec(name="lm", arch="granite-8b")], **kw)
+    srv_d.warmup()
+    srv_p = build_server([ModelSpec(name="lm", arch="granite-8b")],
+                         page_size=4, prefix_cache=True, **kw)
+    assert srv_p.engines["lm"].prefix is not None
+    srv_p.warmup()
+    vocab = srv_p.engines["lm"].cfg.vocab
+    trace = reqs("lm", range(4), vocab)
+    r1 = srv_d.serve(list(trace))
+    r2 = srv_p.serve(list(trace))
+    for tr in trace:
+        rid = tr.request.rid
+        assert (r1.model_reports["lm"].tokens(rid)
+                == r2.model_reports["lm"].tokens(rid)), \
+            f"req {rid}: paged serving through the server diverged"
+    assert all(v in (True, None) for v in srv_p.reconcile(r2).values())
+
+    # a tenant whose quota cannot cover even ONE request is never admitted;
+    # the co-tenant (no quota) is served normally — candidate elimination,
+    # not a drop or a stall
+    tenants = [TenantPolicy(name="hog", model="lm", max_pages=1),
+               TenantPolicy(name="ok", model="lm")]
+    srv_q = build_server([ModelSpec(name="lm", arch="granite-8b")],
+                         tenants, page_size=4, **kw)
+    srv_q.warmup()
+    trace = (reqs("hog", range(0, 3), vocab)
+             + reqs("ok", range(10, 13), vocab))
+    rep = srv_q.serve(list(trace))
+    served = set(rep.model_reports["lm"].records)
+    assert served == {10, 11, 12}, \
+        f"quota should block every hog request, served {sorted(served)}"
+    assert all(v in (True, None) for v in srv_q.reconcile(rep).values())
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: sharded paged serving, forced 2-device mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_paged_bit_equal_across_two_devices():
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=2 "
+            + os.environ.get("XLA_FLAGS", ""))
+        import jax, jax.numpy as jnp
+        assert jax.device_count() == 2, jax.devices()
+        from repro.configs import get_arch
+        from repro.launch.mesh import make_mesh
+        from repro.models.layers import Execution
+        from repro.runtime.batcher import poisson_trace, synchronized_trace
+        from repro.runtime.engine import ServeEngine, ShardedServeEngine
+
+        spec = get_arch("granite-8b"); cfg = spec.smoke_cfg
+        model = spec.model_module()
+        params = model.init(jax.random.PRNGKey(0), cfg)
+        exe = Execution(compute_dtype="float32")
+
+        def check(shape, paged_kw, trace):
+            mesh = make_mesh(shape, ("data", "model"))
+            kw = dict(n_slots=2, prompt_pad=8, max_seq=20,
+                      family=spec.family, module=spec.module, **paged_kw)
+            e1 = ServeEngine(model, cfg, exe, params, **kw); e1.warmup()
+            e2 = ShardedServeEngine(model, cfg, exe, params, mesh=mesh,
+                                    **kw)
+            counts = e2.warmup()
+            r1 = e1.serve(list(trace)); r2 = e2.serve(list(trace))
+            for r in trace:
+                assert r1.tokens(r.rid) == r2.tokens(r.rid), \\
+                    (shape, paged_kw, r.rid)
+            assert e2.compile_counts() == counts, (shape, paged_kw)
+            assert r2.page_ledger_exact, (shape, paged_kw)
+            assert r2.observed_vectors == r2.useful_vectors
+
+        sync = synchronized_trace(4, prompt_len=8, max_new=6, seed=1,
+                                  vocab=cfg.vocab)
+        ragged = poisson_trace(6, rate=300.0, seed=6, prompt_len=(3, 8),
+                               max_new=(1, 5), vocab=cfg.vocab)
+        check((2, 1), dict(page_size=4), sync)              # mode A, data
+        check((2, 1), dict(page_size=4), ragged)
+        check((1, 2), dict(page_size=4), sync)              # mode A, model
+        check((2, 1), dict(page_size=4, prefix_cache=True,
+                           prefill_chunk=4), ragged)        # legged
+        print("SHARDED_PAGED_BITEQUAL_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        ["src", env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SHARDED_PAGED_BITEQUAL_OK" in proc.stdout

@@ -1,0 +1,111 @@
+"""Page allocator + prefix cache invariants (runtime/pages.py).
+
+Deterministic units pin the API contract; the hypothesis property tests
+drive random alloc/retain/release/put/evict interleavings and assert the
+exact-partition ledger never drifts: no double free, no leak, and a shared
+page's refcount reaches zero exactly when its last sharer lets go."""
+
+import pytest
+
+from repro.runtime.pages import (SCRATCH, PageAllocator, PrefixCache,
+                                 page_keys)
+
+
+# ---------------------------------------------------------------------------
+# deterministic units
+# ---------------------------------------------------------------------------
+
+def test_scratch_reserved_and_alloc_shapes():
+    a = PageAllocator(8, page_size=4)
+    assert a.n_free == 7          # page 0 is scratch, never on the free list
+    pids = a.alloc(3, owner="r0")
+    assert SCRATCH not in pids and len(set(pids)) == 3
+    assert a.alloc(5, owner="r1") is None      # all-or-nothing shortage
+    assert a.n_free == 4                       # the failed grab left nothing
+    assert a.verify()
+
+
+def test_release_frees_exactly_at_zero():
+    a = PageAllocator(4, page_size=2)
+    (pid,) = a.alloc(1, owner="r0")
+    a.retain(pid)
+    assert a.release(pid) is False             # one sharer remains
+    assert a.n_free == 2
+    assert a.release(pid) is True              # last sharer -> freed
+    assert a.n_free == 3
+    with pytest.raises(ValueError, match="double free"):
+        a.release(pid)
+    assert a.verify()
+
+
+def test_retain_unheld_rejected():
+    a = PageAllocator(4, page_size=2)
+    with pytest.raises(ValueError):
+        a.retain(SCRATCH)
+    with pytest.raises(ValueError):
+        a.retain(2)
+
+
+def test_page_keys_chained():
+    p = 4
+    keys_ab = page_keys(list(range(8)), p)
+    keys_ab2 = page_keys(list(range(8)) + [99], p)      # partial page 3rd
+    assert len(keys_ab) == 2 and keys_ab == keys_ab2
+    # a differing FIRST page changes every downstream key (chained hash)
+    keys_cd = page_keys([7] + list(range(1, 8)), p)
+    assert keys_cd[0] != keys_ab[0] and keys_cd[1] != keys_ab[1]
+    # same page-1 content after a different page 0 must NOT collide
+    assert page_keys([0, 0, 0, 0, 4, 5, 6, 7], p)[1] != keys_ab[1]
+
+
+def test_prefix_cache_put_lookup_evict():
+    a = PageAllocator(8, page_size=4)
+    c = PrefixCache(a)
+    keys = page_keys(list(range(8)), 4)
+    pids = a.alloc(2, owner="r0")
+    for k, pid in zip(keys, pids):
+        assert c.put(k, pid)           # retains: refcount 2 (request+cache)
+    assert [a.refcount(p) for p in pids] == [2, 2]
+    assert c.lookup(keys) == pids
+    assert c.evictable() == 0          # producer still holds both
+    for pid in pids:
+        a.release(pid)                 # producer retires
+    assert c.evictable() == 2
+    assert c.evict(1) == 1             # LRU first
+    assert a.verify() and a.n_free == 6
+    got = c.lookup(keys, peek=True)
+    assert got.count(None) == 1
+
+
+def test_prefix_cache_adopt_takes_callers_ref():
+    a = PageAllocator(4, page_size=2)
+    c = PrefixCache(a)
+    (pid,) = a.alloc(1, owner="cache")
+    c.put(b"k", pid, adopt=True)
+    assert a.refcount(pid) == 1        # the cache's ref IS the alloc ref
+    assert c.evict(1) == 1
+    assert a.n_free == 3 and a.verify()
+
+
+def test_duplicate_put_first_producer_wins():
+    a = PageAllocator(8, page_size=2)
+    c = PrefixCache(a)
+    (p1,) = a.alloc(1, owner="r0")
+    (p2,) = a.alloc(1, owner="r1")
+    assert c.put(b"k", p1)
+    assert not c.put(b"k", p2)         # duplicate: no ref taken
+    assert a.refcount(p2) == 1
+    assert c.lookup([b"k"]) == [p1]
+
+
+def test_evict_respects_protect():
+    a = PageAllocator(4, page_size=2)
+    c = PrefixCache(a)
+    (pid,) = a.alloc(1, owner="r0")
+    c.put(b"k", pid)
+    a.release(pid)                      # cache is sole sharer
+    assert c.evictable(protect=[pid]) == 0
+    assert c.evict(1, protect=[pid]) == 0
+    assert c.evict(1) == 1
+
+

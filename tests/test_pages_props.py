@@ -1,0 +1,106 @@
+"""Property tests for the page allocator + prefix cache (hypothesis).
+
+Random alloc/retain/release/put/evict interleavings must never double-free
+or leak a page, and a shared page's refcount must reach zero exactly when
+its last sharer lets go. Deterministic API units live in test_pages.py;
+this module needs the optional hypothesis dep (importorskip per repo
+convention, mirroring test_isa_props.py)."""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the optional dep
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.pages import PageAllocator, PrefixCache, page_keys
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                          st.integers(1, 4)), max_size=60),
+       st.integers(4, 12))
+def test_alloc_release_never_leaks(ops, n_pages):
+    """Model-based check: a shadow refcount map tracks every alloc/retain/
+    release; the allocator's books must match it after every op, and
+    verify() (exact partition) must hold throughout."""
+    a = PageAllocator(n_pages, page_size=2)
+    model = {}          # pid -> refcount per the shadow model
+    handles = []        # pids we hold at least one reference on
+    for op, idx, n in ops:
+        if op == 0:     # alloc n pages
+            pids = a.alloc(n, owner=f"o{idx}")
+            if pids is None:
+                assert n > n_pages - 1 - len(model)
+            else:
+                for pid in pids:
+                    assert pid not in model
+                    model[pid] = 1
+                    handles.append(pid)
+        elif op == 1 and handles:   # retain an existing handle
+            pid = handles[idx % len(handles)]
+            a.retain(pid)
+            model[pid] += 1
+            handles.append(pid)
+        elif op == 2 and handles:   # release one reference
+            pid = handles.pop(idx % len(handles))
+            freed = a.release(pid)
+            model[pid] -= 1
+            assert freed == (model[pid] == 0)
+            if model[pid] == 0:
+                del model[pid]
+        elif op == 3:   # releasing an unheld pid must raise, not corrupt
+            victim = (idx % a.n_pages)
+            if victim not in model:
+                with pytest.raises(ValueError):
+                    a.release(victim)
+        assert a.verify()
+        assert {p: a.refcount(p) for p in model} == model
+        assert a.n_free == n_pages - 1 - len(model)
+    # drain: every page must come home
+    while handles:
+        pid = handles.pop()
+        model[pid] -= 1
+        a.release(pid)
+        if model[pid] == 0:
+            del model[pid]
+    assert not model and a.n_free == n_pages - 1 and a.verify()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 6), st.lists(st.integers(0, 1), max_size=12),
+       st.booleans())
+def test_prefix_sharers_drop_to_zero_exactly_at_last_retire(
+        n_sharers, order_bits, evict_first):
+    """A cached page outlives its producer and every sharer; it is freed
+    exactly when the LAST reference (cache eviction included) lets go —
+    never earlier (no dangling sharer) and never later (no leak)."""
+    a = PageAllocator(16, page_size=4)
+    c = PrefixCache(a)
+    (key,) = page_keys(list(range(4)), 4)
+    (pid,) = a.alloc(1, owner="producer")     # producer's ref
+    assert c.put(key, pid)                    # cache's ref
+    sharers = []
+    for _ in range(n_sharers):                # prefix hits retain
+        got = c.lookup([key])
+        assert got == [pid]
+        a.retain(pid)
+        sharers.append(pid)
+    assert a.refcount(pid) == 2 + n_sharers
+    releases = ["producer"] + ["sharer"] * n_sharers
+    # interleave retirement order by the drawn bits
+    order = sorted(range(len(releases)),
+                   key=lambda i: (order_bits[i % max(1, len(order_bits))]
+                                  if order_bits else 0, i))
+    for i, j in enumerate(order):
+        freed = a.release(pid)
+        assert a.verify()
+        assert freed is False                 # cache still holds its ref
+        assert a.refcount(pid) == 2 + n_sharers - 1 - i
+    # only the cache's ref remains: exactly one evictable entry
+    assert a.refcount(pid) == 1
+    assert c.evictable() == 1
+    if evict_first:
+        assert c.evict(1) == 1
+    else:
+        assert c.evict(1, protect=[pid]) == 0  # protected: still resident
+        assert c.evict(1) == 1
+    assert a.refcount(pid) == 0 and a.n_free == 15 and a.verify()
