@@ -4,7 +4,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 .PHONY: tier1 test test-fast test-all bench bench-pipeline bench-json \
         bench-serving bench-server serve-aimc serve-aimc-reprogram \
         serve-aimc-multicore serve-smoke serve-sharded serve-multi \
-        serve-chaos serve-drift serve-paged docs-check
+        serve-chaos serve-drift serve-paged serve-auto docs-check
 
 # Tier-1 verify: the gate every PR must keep green (runs everything).
 tier1:
@@ -113,6 +113,18 @@ serve-paged:
 	$(PY) -m repro.launch.serve --arch granite-8b --smoke --requests 8 \
 	    --prompt-len 12 --gen 6 --slots 4 --exec aimc \
 	    --page-size 4 --prefix-cache --shared-prefix 8 --paged-verify
+
+# Auto-placement smoke: the cost-model placer picks the analog/digital
+# split under a 2-tile budget — the smoke model overflows, so serving
+# time-multiplexes a 2-state rotation plan, billing CM_INITIALIZE per
+# swap (DESIGN.md §16). --placement-verify exits nonzero unless tokens
+# are bit-equal to the all-digital oracle, every state packs within
+# budget, and the swap books reconcile. Same invocation as the ci.sh
+# --fast placement smoke.
+serve-auto:
+	$(PY) -m repro.launch.serve --arch granite-8b --smoke --exec aimc \
+	    --placement auto:2 --tile-rows 64 --adc-alpha 0.5 --requests 4 \
+	    --prompt-len 8 --gen 6 --seed 89 --placement-verify
 
 # Multi-tenant serving smoke: two models resident in one process (granite
 # co-programmed on the shared TilePool, xlstm digital), interleaved

@@ -14,6 +14,9 @@ One module per paper table/figure (DESIGN.md §7):
                                      tok/s + latency percentiles on traces)
   bench_server    runtime/server    (multi-tenant multi-model serving: one
                                      crossbar pool, per-tenant SLOs/quotas)
+  bench_placement core/placement    (auto-placement: per-layer sums vs
+                                     evaluate/schedule at ratio 1.000,
+                                     measured-vs-modeled roofline fit)
   bench_roofline  §Roofline         (dry-run table; run dryrun first)
 
 ``--json PATH`` writes machine-readable results — per-case wall-clock,
@@ -33,8 +36,9 @@ import sys
 import time
 
 from benchmarks import (bench_accuracy, bench_cnn, bench_coupling,
-                        bench_kernels, bench_lstm, bench_mlp, bench_pipeline,
-                        bench_roofline, bench_server, bench_serving)
+                        bench_kernels, bench_lstm, bench_mlp,
+                        bench_pipeline, bench_placement, bench_roofline,
+                        bench_server, bench_serving)
 
 MODULES = [
     ("mlp", "MLP (paper Fig. 7/8)", bench_mlp),
@@ -49,6 +53,8 @@ MODULES = [
      bench_serving),
     ("server", "Multi-tenant model server (tenant quotas over one pool)",
      bench_server),
+    ("placement", "Auto-placement (placer sums vs model + roofline fit)",
+     bench_placement),
 ]
 
 

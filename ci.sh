@@ -79,6 +79,15 @@ if [[ "${1:-}" == "--fast" ]]; then
         --models granite-8b:aimc,xlstm-350m:digital \
         --tenants premium:granite-8b:2,standard:granite-8b:1:sjf,batch:xlstm-350m \
         --requests 8 --prompt-len 8 --gen 4 --slots 2 --trace poisson:200
+    echo "== placement smoke: auto split, forced overflow rotation =="
+    # budget 2 overflows the smoke model: serving time-multiplexes a
+    # 2-state rotation plan; --placement-verify exits nonzero unless all
+    # requests are served bit-equal to the all-digital oracle, every
+    # rotation state packs within budget, the per-swap CM_INITIALIZE
+    # books reconcile, and nothing recompiled after warmup (DESIGN.md §16)
+    python -m repro.launch.serve --arch granite-8b --smoke --exec aimc \
+        --placement auto:2 --tile-rows 64 --adc-alpha 0.5 --requests 4 \
+        --prompt-len 8 --gen 6 --seed 89 --placement-verify
     echo "== perf-smoke: bench_kernels (interpret mode) =="
     exec python -m benchmarks.bench_kernels --json BENCH_kernels.json
 fi

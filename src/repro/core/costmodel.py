@@ -391,3 +391,47 @@ def evaluate(w: Workload, sys: SystemConfig, p: CalibratedParams = CALIB) -> Res
 def speedup(digital: Result, analog: Result) -> tuple[float, float]:
     """(perf gain, energy gain) of analog over digital — the paper's headline."""
     return digital.time_s / analog.time_s, digital.energy_j / analog.energy_j
+
+
+# ---------------------------------------------------------------------------
+# Per-layer stage builders (core.placement's pricing substrate)
+# ---------------------------------------------------------------------------
+
+def digital_mvm_stage(k: int, n: int, count: int = 1,
+                      conv: bool = False) -> Stage:
+    """One layer's digital MVM as a single-op stage: SIMD gemv time plus
+    the working-set stall of streaming its float32 weights every
+    inference. ``count`` is the instance multiplicity (stacked layers /
+    experts), each firing once per token vector."""
+    return Stage(ops=(Op(kind="mvm", k=k, n=n, count=count, conv=conv),),
+                 weights_bytes=count * k * n * 4)
+
+
+def analog_mvm_stage(k: int, n: int, count: int = 1,
+                     epilogue: str = "") -> Stage:
+    """One layer's AIMC MVM as a single-op stage: queue/process/dequeue
+    traffic priced through `aimc_mvm_time` — weights are stationary on the
+    crossbar, so no working-set bytes."""
+    return Stage(ops=(Op(kind="mvm", k=k, n=n, count=count, aimc=True,
+                         epilogue=epilogue),))
+
+
+def split_workload(name: str, layers, analog, tile_rows: int = 1024,
+                   coupling: str = "tight") -> Workload:
+    """A sequential Workload for a mixed analog/digital layer split.
+
+    ``layers`` is ``(path, k, n, instances)`` per layer in execution order;
+    ``analog`` the set of paths mapped to crossbars. Each layer becomes its
+    OWN one-stage phase, so `evaluate()`'s sequential law (sum over phases
+    of max-in-phase) degenerates to the exact per-layer sum — the identity
+    `core.placement` relies on: the placer's per-layer time sums equal the
+    full-model evaluation at ratio 1.000 by construction (gated in
+    benchmarks/bench_placement.py)."""
+    analog = set(analog)
+    phases = []
+    for path, k, n, instances in layers:
+        stage = (analog_mvm_stage(k, n, instances) if path in analog
+                 else digital_mvm_stage(k, n, instances))
+        phases.append((stage,))
+    return Workload(name=name, phases=tuple(phases), pipelined=False,
+                    coupling=coupling, tile_rows=tile_rows)

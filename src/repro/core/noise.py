@@ -60,6 +60,24 @@ class NoiseModel:
     def compensation_gain(self) -> float:
         return 1.0 / self.drift_gain() if self.drift_compensate else 1.0
 
+    def compensation_gain_at(self, t_since_program: float,
+                             nu: float | None = None) -> float:
+        """Digital dequant-scale correction for a program of age
+        ``t_since_program`` — the inverse of the NOMINAL power law.
+
+        Global drift compensation in the PCM literature is a single scalar
+        (t/t0)^{+nu} folded into the ADC dequant scale; the compensator
+        knows only the nominal exponent, NOT each core's actual one, so
+        with `drift_core_spread > 0` the cancellation is approximate (the
+        residual is exactly what the health probes measure). Static
+        `compensation_gain` is the t-ratio snapshot of this law; serving
+        uses this age-based form between recals (satellite: the static
+        gain never tracked program age)."""
+        if not (self.enabled and self.drift_compensate):
+            return 1.0
+        g = self.drift_gain_at(t_since_program, nu)
+        return 1.0 / g if g > 0.0 else 1.0
+
     def drift_gain_at(self, t_since_program: float, nu: float | None = None) -> float:
         """G(t)/G(t0) for a program of age `t_since_program` seconds.
 
@@ -88,16 +106,21 @@ DISABLED = NoiseModel(enabled=False)
 
 
 def drift_only(nu: float = 0.05, t0: float = 1.0,
-               core_spread: float = 0.0) -> NoiseModel:
+               core_spread: float = 0.0,
+               compensate: bool = False) -> NoiseModel:
     """A NoiseModel that drifts with program age but is otherwise ideal.
 
-    Programming/read noise are zeroed and compensation is off, so a serving
-    stack built on this model stays bit-deterministic: the ONLY time-varying
-    effect is the multiplicative power-law decay `drift_gain_at`. This is the
-    model the drift-aware serve loop (runtime.health) evolves online."""
+    Programming/read noise are zeroed and compensation defaults off, so a
+    serving stack built on this model stays bit-deterministic: the ONLY
+    time-varying effect is the multiplicative power-law decay
+    `drift_gain_at`. This is the model the drift-aware serve loop
+    (runtime.health) evolves online. ``compensate=True`` turns on the
+    age-based dequant correction (`compensation_gain_at`) — still
+    deterministic; with ``core_spread == 0`` it cancels the decay
+    exactly."""
     return NoiseModel(enabled=True, sigma_prog_min=0.0, sigma_prog_max=0.0,
                       sigma_read=0.0, drift_nu=nu, drift_t_ratio=1.0,
-                      drift_compensate=False, drift_t0=t0,
+                      drift_compensate=compensate, drift_t0=t0,
                       drift_core_spread=core_spread)
 
 

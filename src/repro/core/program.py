@@ -179,6 +179,21 @@ class MappingPlan:
                 return True
         return False
 
+    @staticmethod
+    def for_names(names, *, n_contexts: int = 1,
+                  tiles_per_context: int | None = None) -> "MappingPlan":
+        """A plan selecting EXACTLY the given tree paths — the form
+        `core.placement` emits once the search has chosen the analog set.
+
+        Each path becomes a fully-escaped include pattern matched against
+        the whole ``/``-joined path (slash-free top-level paths get an
+        optional-slash prefix so `selects` still full-path-matches them);
+        the exclude list is empty, so membership is literal."""
+        pats = tuple(re.escape(p) if "/" in p else "/?" + re.escape(p)
+                     for p in names)
+        return MappingPlan(include=pats, exclude=(), n_contexts=n_contexts,
+                           tiles_per_context=tiles_per_context)
+
     def selects(self, path: str, shape: tuple[int, ...]) -> bool:
         """Should the float leaf at `path` (full stacked shape) be mapped?"""
         if len(shape) < 2:
@@ -424,6 +439,29 @@ class AimcProgram:
         entries = dict(zip(self.names, abstract.states))
         flat, treedef = jax.tree_util.tree_flatten_with_path(
             params_shape, is_leaf=_is_quantized_leaf)
+        leaves = [entries.get(_path_key(path), leaf) for path, leaf in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def install_subset(self, params, names):
+        """`install`, restricted to ``names``: only those matrices' states
+        replace their raw leaves; every other mapped weight STAYS digital.
+
+        This is the rotation substrate (core.placement, DESIGN.md §16): one
+        uncapped program holds every layer that ever goes analog, and each
+        time-multiplexed rotation state is an `install_subset` over its
+        resident hot + cold-group names — same keyspace, same states, so a
+        layer computes identically in every state that carries it. Unknown
+        names raise (a silently-skipped name would serve digital while the
+        swap books bill analog reprogramming)."""
+        names = set(names)
+        unknown = names - set(self.names)
+        if unknown:
+            raise KeyError(f"install_subset: unmapped matrices "
+                           f"{sorted(unknown)}")
+        entries = {n: st for n, st in zip(self.names, self.states)
+                   if n in names}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=_is_quantized_leaf)
         leaves = [entries.get(_path_key(path), leaf) for path, leaf in flat]
         return jax.tree_util.tree_unflatten(treedef, leaves)
 

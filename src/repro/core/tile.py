@@ -199,3 +199,28 @@ def plan_linear(matrix_id: str, in_features: int, out_features: int,
     alloc = TileAllocator(tile_rows, tile_cols)
     alloc.map_matrix(matrix_id, in_features, out_features)
     return alloc.finalize()
+
+
+def pack_contexts(items: Sequence[tuple[str, int, int, int]],
+                  n_contexts: int, tile_rows: int,
+                  tile_cols: int) -> tuple[int, ...]:
+    """Per-context tile counts of packing ``items`` exactly the way
+    `core.program.ProgramBuilder` would — the placer's feasibility oracle.
+
+    ``items`` are ``(matrix_id, rows, cols, instances)`` in PROGRAMMING
+    ORDER (the `iter_mapped_leaves` tree walk). The simulation reproduces
+    the builder's policy bit-for-bit: each matrix goes to the least-loaded
+    context (min `n_tiles`, lowest index on ties), each instance mapped as
+    ``id`` / ``id[i]`` through the same first-fit shelf packer. Because the
+    policies are identical (pinned by tests/test_placement.py against a
+    real builder), a subset whose packed max fits `tiles_per_context` here
+    is GUARANTEED to program without `CapacityError` there."""
+    if n_contexts < 1:
+        raise ValueError("n_contexts must be >= 1")
+    allocs = [TileAllocator(tile_rows, tile_cols) for _ in range(n_contexts)]
+    for mid, rows, cols, instances in items:
+        ctx = min(range(n_contexts), key=lambda i: allocs[i].n_tiles)
+        for i in range(instances):
+            inst = mid if instances == 1 else f"{mid}[{i}]"
+            allocs[ctx].map_matrix(inst, rows, cols)
+    return tuple(a.n_tiles for a in allocs)

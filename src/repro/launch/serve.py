@@ -214,7 +214,68 @@ def parse_args(argv=None):
                          "crossbar tiles per context (0: uncapped); "
                          "co-programmed models exceeding it together fail "
                          "with CapacityError at program time")
+    ap.add_argument("--placement", default="",
+                    help="auto[:BUDGET] — search the analog/digital split "
+                         "per layer with the cost-model placer "
+                         "(core.placement, DESIGN.md §16) instead of the "
+                         "default MappingPlan patterns. BUDGET caps the "
+                         "crossbar tiles per context; a model whose "
+                         "profitable layers exceed it serves through a "
+                         "time-multiplexed rotation plan, reprogramming "
+                         "cold groups at decode-chunk boundaries (billed "
+                         "as CM_INITIALIZE per swap). Needs --exec aimc")
+    ap.add_argument("--placement-verify", dest="placement_verify",
+                    action="store_true",
+                    help="hard acceptance for a --placement run: exit "
+                         "nonzero unless every request served, tokens are "
+                         "bit-equal to the all-digital static oracle, "
+                         "every rotation state packs within the budget, "
+                         "the per-swap CM_INITIALIZE books close exactly, "
+                         "and no closure recompiled after warmup")
+    ap.add_argument("--swap-every", dest="swap_every", type=int, default=1,
+                    help="with an overflowing --placement auto:BUDGET: "
+                         "advance the rotation one state every this many "
+                         "decode chunks (default 1)")
+    ap.add_argument("--tile-rows", dest="tile_rows", type=int, default=0,
+                    help="crossbar word lines per physical tile "
+                         "(0: AimcConfig default, 512). Smaller tiles "
+                         "split matrices into more row blocks — the knob "
+                         "CI uses to force capacity overflow on smoke "
+                         "models")
+    ap.add_argument("--adc-alpha", dest="adc_alpha", type=float, default=0.0,
+                    help="ADC clipping alpha (0: AimcConfig default)")
     args = ap.parse_args(argv)
+    args.placement_budget = 0
+    if args.placement:
+        mode, _, budget = args.placement.partition(":")
+        if mode != "auto" or (budget and not budget.isdigit()):
+            ap.error(f"--placement {args.placement!r}: expected "
+                     "auto or auto:BUDGET (BUDGET a positive integer)")
+        if budget and int(budget) < 1:
+            ap.error(f"--placement budget must be >= 1, got {budget}")
+        args.placement_budget = int(budget) if budget else 0
+        if args.exec_mode != "aimc" or args.reprogram:
+            ap.error("--placement searches the programmed AIMC path "
+                     "(--exec aimc, without --reprogram)")
+        for on, name in [(args.models, "--models"),
+                         (args.static, "--static"),
+                         (args.drift, "--drift"), (args.chaos, "--chaos"),
+                         (args.prefix_cache, "--prefix-cache"),
+                         (args.prefill_chunk, "--prefill-chunk")]:
+            if on:
+                ap.error(f"--placement cannot combine with {name} "
+                         "(rotation swaps and cached/chunked prefill "
+                         "spans or mid-trace repairs do not compose)")
+    if args.placement_verify:
+        if not args.placement:
+            ap.error("--placement-verify requires --placement")
+        if args.trace or args.arrivals or args.eos >= 0:
+            ap.error("--placement-verify compares against the synchronized "
+                     "static oracle: drop --trace/--arrivals/--eos")
+    if args.swap_every < 1:
+        ap.error(f"--swap-every must be >= 1, got {args.swap_every}")
+    if args.tile_rows < 0 or args.adc_alpha < 0:
+        ap.error("--tile-rows/--adc-alpha must be >= 0")
     if args.chaos or args.drift:
         flag = "--chaos" if args.chaos else "--drift"
         if args.exec_mode != "aimc" or args.reprogram:
@@ -542,7 +603,12 @@ def main(argv=None):
                          "the sharded engine needs the named-mesh engine "
                          "path (drop --static or use the legacy DxM syntax)")
     mesh = make_mesh(shape, axes)
-    aimc_cfg = AimcConfig(impl="ref")
+    aimc_kw = {}
+    if args.tile_rows:
+        aimc_kw["tile_rows"] = args.tile_rows
+    if args.adc_alpha:
+        aimc_kw["adc_alpha"] = args.adc_alpha
+    aimc_cfg = AimcConfig(impl="ref", **aimc_kw)
     exe = (Execution(mode="aimc", aimc=aimc_cfg, compute_dtype="float32",
                      programmed=not args.reprogram)
            if args.exec_mode == "aimc"
@@ -571,6 +637,10 @@ def main(argv=None):
         schedule = None
         health = None
         chaos = None
+        rotation = None
+        rotation_params = None
+        placement = None
+        params_raw = params
         if args.exec_mode == "aimc" and not args.reprogram:
             # CM_INITIALIZE: program the whole network once, outside the
             # serving loop (paper §IV-B). --cores spreads the matrices over
@@ -579,10 +649,33 @@ def main(argv=None):
             from repro.core.schedule import CoreSchedule
             t0 = time.time()
             plan = MappingPlan(n_contexts=args.cores)
+            if args.placement:
+                # cost-model-driven auto-placement (DESIGN.md §16): search
+                # the analog/digital split under the tile budget; an
+                # overflowing model gets a rotation plan whose states
+                # time-multiplex the freed headroom
+                from repro.core.placement import plan_placement
+                placement = plan_placement(
+                    params, plan, aimc_cfg,
+                    tiles_per_context=args.placement_budget or None,
+                    n_contexts=args.cores, swap_every=args.swap_every)
+                print(f"[serve] {placement.summary()}")
+                plan = (placement.rotation.plan()
+                        if placement.rotation is not None
+                        else placement.plan)
             prog_key = jax.random.PRNGKey(args.seed + 2)
-            params_raw = params
             program = program_model(params, plan, aimc_cfg, prog_key)
-            params = program.install(params)
+            if placement is not None and placement.rotation is not None:
+                # one uncapped program over every sometimes-analog layer;
+                # each rotation state installs only its resident subset
+                # (the rest serve digitally from the raw weights)
+                rotation = placement.rotation
+                rotation_params = tuple(
+                    program.install_subset(params_raw, ns)
+                    for ns in rotation.states())
+                params = rotation_params[0]
+            else:
+                params = program.install(params)
             jax.block_until_ready(
                 [st.w_q for st in program.states])
             print(f"[serve] programmed in {time.time() - t0:.2f}s: "
@@ -638,7 +731,8 @@ def main(argv=None):
                       page_size=args.page_size, n_pages=args.pages,
                       prefix_cache=args.prefix_cache,
                       prefill_chunk=args.prefill_chunk,
-                      health=health, chaos=chaos, heartbeat=heartbeat)
+                      health=health, chaos=chaos, heartbeat=heartbeat,
+                      rotation=rotation, rotation_params=rotation_params)
         if sharded:
             engine = ShardedServeEngine(model, cfg, exe, params, mesh=mesh,
                                         **common)
@@ -675,7 +769,26 @@ def main(argv=None):
                   f"retries {report.retries}, "
                   f"stragglers {len(report.stragglers)}")
 
-        if program is not None:
+        if program is not None and rotation is not None:
+            # rotation books: the per-vector CM_* split varies by state, so
+            # the per-request ledgers are ill-defined; what must close
+            # exactly instead is the per-swap CM_INITIALIZE bill
+            from repro.core.placement import reconcile_swaps
+            init = program.initialize_counts()
+            print(f"  CM_INITIALIZE: {init.initialize} device writes for "
+                  f"the initial program ({rotation.n_states} rotation "
+                  f"states over {len(rotation.all_names)} analog matrices)")
+            print(f"  rotation: {report.n_swaps} swaps "
+                  f"(every {rotation.swap_every} chunk(s)), swap "
+                  f"CM_INITIALIZE={report.swap_initialize}, "
+                  f"{report.wall_swap_s * 1e3:.0f}ms swap wall")
+            for ev in report.swap_events[:3]:
+                print(f"    swap@chunk{ev.chunk} -> state {ev.state}: "
+                      f"{len(ev.incoming)} matrices, "
+                      f"CM_INITIALIZE={ev.initialize}")
+            print(f"  per-swap CM_INITIALIZE books close exactly: "
+                  f"{reconcile_swaps(program, report)}")
+        elif program is not None:
             init = program.initialize_counts()
             per_vec = program.mvm_counts()
             n_vec = report.useful_vectors
@@ -718,6 +831,10 @@ def main(argv=None):
                   f"prompt-pad waste {report.prefill_pad_vectors} vectors")
             if args.paged_verify:
                 _verify_paged(engine, report, requests, args, counts0)
+        if args.placement_verify:
+            _verify_placement(engine, report, requests, args, placement,
+                              program, params_raw, model, cfg, exe,
+                              counts0, max_seq, jnp)
         _print_schedule(args, schedule)
         for rid in sorted(report.records)[:3]:
             rec = report.records[rid]
@@ -862,6 +979,69 @@ def _verify_paged(engine, report, requests, args, counts0):
              if args.shared_prefix and args.prefix_cache
              and not args.prefill_chunk and not args.trace
              and not engine.recurrent else ""))
+
+
+def _verify_placement(engine, report, requests, args, placement, program,
+                      params_raw, model, cfg, exe, counts0, max_seq, jnp):
+    """Hard acceptance for a --placement run — the CI placement smoke
+    rides on this: exit nonzero unless every request retired, every token
+    is bit-equal to the ALL-DIGITAL static oracle on the raw weights (the
+    equality bar of DESIGN.md §16 — analog layers must be exact, not
+    approximately right), every rotation state packs within the budget,
+    the per-swap CM_INITIALIZE books close (`placement.reconcile_swaps`),
+    an overflowing trace actually swapped, and nothing recompiled after
+    warmup (swaps reuse the per-state executables)."""
+    import dataclasses as _dc
+
+    from repro.core.placement import reconcile_swaps
+    from repro.core.tile import pack_contexts
+    from repro.runtime.engine import static_generate
+    failures = []
+    if len(report.records) != len(requests):
+        lost = {r.rid for r in requests} - set(report.records)
+        failures.append(f"{len(lost)} request(s) never served: "
+                        f"{sorted(lost)}")
+    dig_exe = _dc.replace(exe, mode="digital")
+    prompts = jnp.asarray([r.prompt for r in requests], jnp.int32)
+    oracle, _ = static_generate(model, cfg, dig_exe, params_raw, prompts,
+                                args.gen, max_seq=max_seq,
+                                cache_dtype=jnp.float32)
+    bad = [r.rid for i, r in enumerate(requests)
+           if r.rid in report.records
+           and report.tokens(r.rid) != [int(t) for t in oracle[i]]]
+    if bad:
+        failures.append(f"tokens diverge from the all-digital oracle for "
+                        f"request(s) {bad}")
+    rot = engine.rotation
+    if rot is not None:
+        for i, names in enumerate(rot.states()):
+            resident = set(names)
+            per = pack_contexts([c.item for c in placement.costs
+                                 if c.path in resident],
+                                rot.n_contexts, engine.program.cfg.tile_rows,
+                                engine.program.cfg.tile_cols)
+            if max(per) > rot.tiles_per_context:
+                failures.append(
+                    f"rotation state {i} packs to {max(per)} tiles > "
+                    f"budget {rot.tiles_per_context}")
+        if rot.n_states > 1 and report.n_swaps == 0:
+            failures.append("overflowing plan never swapped (trace too "
+                            "short for the swap cadence?)")
+        if not reconcile_swaps(program, report):
+            failures.append("per-swap CM_INITIALIZE books do not close")
+    counts = engine.compile_counts()
+    if counts != counts0:
+        failures.append(f"closures recompiled after warmup: {counts0} -> "
+                        f"{counts}")
+    if failures:
+        for f in failures:
+            print(f"  PLACEMENT FAILURE: {f}")
+        raise SystemExit(1)
+    print("  placement books close exactly: all requests served, tokens "
+          "bit-equal to the all-digital oracle"
+          + (f", {report.n_swaps} swaps billed + reconciled"
+             if rot is not None else "")
+          + ", no recompiles")
 
 
 def _print_schedule(args, schedule):

@@ -192,6 +192,16 @@ class ServeReport:
     # ledger snapshot taken at finish() — every page attributed to exactly
     # one owner or the free list (`page_ledger_exact` is the allocator's
     # exact-partition verify()).
+    # capacity-overflow rotation books (core.placement / DESIGN.md §16):
+    # state swaps performed, the CM_INITIALIZE writes they charged (per
+    # `AimcProgram.reprogram_counts` on each swap's incoming group —
+    # reconciled exactly by placement.reconcile_swaps), and the host wall
+    # spent swapping (billed apart from decode, overlap-exempt like
+    # wall_health_s).
+    n_swaps: int = 0
+    swap_initialize: int = 0
+    swap_events: list = dataclasses.field(default_factory=list)
+    wall_swap_s: float = 0.0
     prefix_hits: int = 0           # admissions that reused >= 1 page/snapshot
     prefix_hit_vectors: int = 0    # prompt vectors NOT re-prefilled (shared span)
     prefill_chunks: int = 0        # prefill legs executed
@@ -291,6 +301,8 @@ class _PendingChunk:
     n: int             # dispatched chunk length (a ladder size)
     health0: float = 0.0   # report.wall_health_s at dispatch (overlap bill)
     recals0: int = 0       # report.n_recals at dispatch (straggler exemption)
+    swap0: float = 0.0     # report.wall_swap_s at dispatch (overlap bill)
+    swaps0: int = 0        # report.n_swaps at dispatch (straggler exemption)
 
 
 @dataclasses.dataclass
@@ -344,7 +356,8 @@ class ServeEngine:
                  admission: str = "fifo", decode_chunk: int = 1,
                  health=None, chaos=None, heartbeat=None,
                  page_size: int = 0, n_pages: int = 0,
-                 prefix_cache: bool = False, prefill_chunk: int = 0):
+                 prefix_cache: bool = False, prefill_chunk: int = 0,
+                 rotation=None, rotation_params=None):
         if family == "audio":
             raise ValueError("ServeEngine serves decoder-only LMs; the "
                              "enc-dec audio family decodes via launch.steps")
@@ -458,6 +471,43 @@ class ServeEngine:
         if chaos is not None and health is None:
             raise ValueError("chaos injection requires a HealthMonitor to "
                              "detect and repair the faults it fires")
+
+        # ---- capacity-overflow rotation (core.placement, DESIGN.md §16) ----
+        # A `RotationPlan` time-multiplexes analog layer groups through a
+        # tile budget the model exceeds: the engine holds ONE uncapped
+        # program plus one installed parameter tree PER rotation state
+        # (`AimcProgram.install_subset` — layers outside a state serve
+        # digitally from the raw weights), and `_placement_tick` advances
+        # the state at chunk boundaries, billing each swap's incoming
+        # group as CM_INITIALIZE. Different states install different
+        # leaves (different treedefs), so each state compiles its own
+        # prefill/decode executables — ALL warmed in `warmup`.
+        self.rotation = rotation
+        self._rotation_params = (tuple(rotation_params)
+                                 if rotation_params is not None else None)
+        self._rot_state = 0
+        self._swaps_done = 0
+        if rotation is not None:
+            if program is None:
+                raise ValueError("rotation serving requires the backing "
+                                 "AimcProgram (swap billing is shape-based)")
+            if (self._rotation_params is None
+                    or len(self._rotation_params) != rotation.n_states):
+                got = (len(self._rotation_params)
+                       if self._rotation_params is not None else None)
+                raise ValueError(
+                    f"rotation needs one installed parameter tree per "
+                    f"state ({rotation.n_states}), got {got}")
+            if health is not None or chaos is not None:
+                raise ValueError(
+                    "rotation cannot combine with health/chaos: a hot "
+                    "recal would repair only the current state's tree")
+            if prefix_cache or prefill_chunk:
+                raise ValueError(
+                    "rotation cannot combine with prefix_cache / "
+                    "prefill_chunk: a cached span replayed under a "
+                    "different rotation state would not be bit-stable")
+            self.params = self._rotation_params[0]
 
         # per-leaf batch axes of the decode cache (probed, not hardcoded:
         # transformer KV stacks batch at axis 1, recurrent state trees too,
@@ -834,10 +884,15 @@ class ServeEngine:
 
     def warmup(self):
         """Compile every closure (prefill, insert, and one decode
-        executable per ladder length) once, outside the serving clock."""
+        executable per ladder length) once, outside the serving clock.
+        Under rotation, prefill/decode compile once PER rotation state
+        (states install different leaves, hence different treedefs), so
+        mid-trace swaps never hit the serving clock with a compile."""
         tokens = jnp.zeros((1, self.prompt_pad), jnp.int32)
         vl = jnp.ones((1,), jnp.int32)
-        tok1, cache1 = self._jit_prefill(self.params, tokens, vl)
+        param_sets = self._rotation_params or (self.params,)
+        for ps in param_sets:
+            tok1, cache1 = self._jit_prefill(ps, tokens, vl)
         tok_buf = self._empty_tok_buf()
         state = self._empty_state()
         if self._paged_kv:
@@ -890,9 +945,10 @@ class ServeEngine:
                 cache, tok_buf, state = self._jit_insert(
                     cache, cache1, tok_buf, tok1, state, jnp.int32(0),
                     jnp.int32(1), jnp.int32(1))
-        for n in self._ladder:
-            tok_buf, cache, state, ys = self._decode_jits[n](
-                self.params, cache, tok_buf, state)
+        for ps in param_sets:
+            for n in self._ladder:
+                tok_buf, cache, state, ys = self._decode_jits[n](
+                    ps, cache, tok_buf, state)
         jax.block_until_ready(ys)
         return self.compile_counts()
 
@@ -994,6 +1050,43 @@ class ServeEngine:
                     report.n_recals += 1
         wall = time.perf_counter() - t0
         report.wall_health_s += wall
+        return now + wall
+
+    # -- capacity-overflow rotation (core.placement, DESIGN.md §16) ----------
+    def _placement_tick(self, sess: "EngineSession", now: float) -> float:
+        """Chunk-boundary rotation swap: when the swap cadence is due,
+        advance ONE rotation state, install its parameter tree, and bill
+        the incoming group's reprogram as CM_INITIALIZE plus the host wall
+        spent swapping.
+
+        Swaps land BETWEEN chunk dispatches only — the in-flight chunk ran
+        entirely under the previous state's tree, so no token is ever
+        produced by a half-swapped program. Decode lanes are row-
+        independent and every state is bit-validated against the digital
+        oracle separately (`launch.serve --placement-verify`), so the
+        rotation schedule never changes what a request generates."""
+        rot = self.rotation
+        if rot is None or rot.n_states < 2:
+            return now
+        due = self._chunks_dispatched // rot.swap_every
+        if due <= self._swaps_done:
+            return now
+        from repro.core.placement import SwapEvent
+        t0 = time.perf_counter()
+        report = sess.report
+        self._swaps_done = due
+        self._rot_state = (self._rot_state + 1) % rot.n_states
+        self._set_params(self._rotation_params[self._rot_state])
+        incoming = rot.incoming(self._rot_state)
+        cm = self.program.reprogram_counts(incoming)
+        wall = time.perf_counter() - t0
+        ev = SwapEvent(t=now, chunk=self._chunks_dispatched,
+                       state=self._rot_state, incoming=incoming,
+                       initialize=cm.initialize, wall_s=wall)
+        report.swap_events.append(ev)
+        report.swap_initialize += cm.initialize
+        report.n_swaps += 1
+        report.wall_swap_s += wall
         return now + wall
 
     # -- request plumbing ----------------------------------------------------
@@ -1482,7 +1575,9 @@ class ServeEngine:
         return _PendingChunk(ys=ys, t_wall=t0,
                              prefill0=sess.report.wall_prefill_s, n=n,
                              health0=sess.report.wall_health_s,
-                             recals0=sess.report.n_recals)
+                             recals0=sess.report.n_recals,
+                             swap0=sess.report.wall_swap_s,
+                             swaps0=sess.report.n_swaps)
 
     def _process_chunk(self, sess: "EngineSession", pend: _PendingChunk,
                        now: float) -> float:
@@ -1497,7 +1592,8 @@ class ServeEngine:
         # first-token reads cost a host copy, not a wait
         self._resolve_firsts(sess)
         overlap = ((report.wall_prefill_s - pend.prefill0)
-                   + (report.wall_health_s - pend.health0))
+                   + (report.wall_health_s - pend.health0)
+                   + (report.wall_swap_s - pend.swap0))
         dt = max(time.perf_counter() - pend.t_wall - overlap, 0.0)
         now += dt
         report.wall_decode_s += dt
@@ -1514,7 +1610,8 @@ class ServeEngine:
         # an operator for behavior the engine itself caused, and the
         # inflated sample would poison the baseline)
         self.monitor.record(self._step_no, dt / max(ran, 1),
-                            exempt=report.n_recals > pend.recals0)
+                            exempt=(report.n_recals > pend.recals0
+                                    or report.n_swaps > pend.swaps0))
         if self.heartbeat is not None:
             self.heartbeat.beat(
                 self._step_no, slots_busy=sess.slots.n_busy,
@@ -1558,6 +1655,7 @@ class ServeEngine:
         and quota accounting land on chunk boundaries; `serve()` instead
         double-buffers dispatch/process for comm/compute overlap."""
         now = self._resilience_tick(sess, now)
+        now = self._placement_tick(sess, now)
         return self._process_chunk(sess, self._dispatch_chunk(sess), now)
 
     def cancel_active(self, sess: "EngineSession", now: float):
@@ -1641,6 +1739,9 @@ class ServeEngine:
             # ---- chunk-boundary resilience (drift / chaos / recal) ---------
             now = self._resilience_tick(sess, now)
 
+            # ---- chunk-boundary rotation swap (capacity overflow) ----------
+            now = self._placement_tick(sess, now)
+
             if not sess.slots.n_busy and pending is None:
                 nxt = queue.next_arrival()
                 if nxt is None:
@@ -1670,6 +1771,11 @@ class ServeEngine:
         from repro.runtime.batcher import request_ledgers
         if self.program is None:
             raise ValueError("CM_* ledgers require an AimcProgram")
+        if self.rotation is not None:
+            raise ValueError(
+                "per-request CM_* ledgers are ill-defined under rotation: "
+                "a request's vectors span states with different analog "
+                "sets; use report.swap_events + placement.reconcile_swaps")
         return request_ledgers(self.program, report.records)
 
     def core_ledgers(self, report: ServeReport) -> dict:
@@ -1715,6 +1821,11 @@ class ShardedServeEngine(ServeEngine):
 
     def __init__(self, model, cfg, exe: Execution, params, *, mesh,
                  model_axis: str = "model", **kw):
+        if kw.get("rotation") is not None:
+            raise ValueError(
+                "ShardedServeEngine does not serve rotation plans: state "
+                "swaps would re-place every parameter tree on the mesh "
+                "mid-trace (use the single-device engine for overflow)")
         self.mesh = mesh
         self.model_axis = model_axis
         super().__init__(model, cfg, exe, params, **kw)

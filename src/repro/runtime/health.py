@@ -178,10 +178,21 @@ class HealthMonitor:
     def drifted_entries(self, t_now: float) -> dict[str, AimcLinearState]:
         """Decayed views of the current program at ``t_now`` — {} when the
         gains have not moved since the last application (avoids re-device-
-        putting identical states every chunk)."""
+        putting identical states every chunk).
+
+        With `drift_compensate` on, each matrix's decay gain (per-core
+        actual exponent) is multiplied by the age-based dequant correction
+        `compensation_gain_at` (NOMINAL exponent — the compensator cannot
+        see per-core variation). At zero core spread the product is exactly
+        1.0 between recals; with spread, the probe error collapses from
+        ~(1-g) to the nominal/actual residual."""
         if not self.drift_active:
             return {}
         gains = self.program.drift_gains(t_now, self.noise, self.policy.seed)
+        if self.noise.drift_compensate:
+            ages = self.program.ages(t_now)
+            gains = {n: g * self.noise.compensation_gain_at(ages[n])
+                     for n, g in gains.items()}
         if gains == self._applied_gains:
             return {}
         self._applied_gains = gains

@@ -161,6 +161,14 @@ class ModelServer:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names: {names}")
         self.engines = dict(engines)
+        for m, eng in self.engines.items():
+            if getattr(eng, "rotation", None) is not None:
+                raise ValueError(
+                    f"model {m!r} serves a capacity-overflow rotation plan "
+                    f"(core.placement); the multi-tenant server interleaves "
+                    f"engines under one clock, so a swap from one model's "
+                    f"cadence would stall every tenant — serve rotation "
+                    f"plans single-model via ServeEngine.serve")
         self.policies = {p.name: p for p in tenants}
         for p in tenants:
             if p.model not in self.engines:

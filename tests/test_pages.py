@@ -109,3 +109,49 @@ def test_evict_respects_protect():
     assert c.evict(1) == 1
 
 
+
+
+# ---------------------------------------------------------------------------
+# eviction pressure at pool sizes near one request (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+def _pressured_cache():
+    """A pool of 4 pages fully tenanted by cache-only entries k0..k3,
+    touched in insertion order (k0 is LRU)."""
+    a = PageAllocator(5, page_size=2)          # 4 usable + null page
+    c = PrefixCache(a)
+    for i in range(4):
+        (pid,) = a.alloc(1, owner=f"r{i}")
+        c.put(f"k{i}".encode(), pid)
+        a.release(pid)                         # cache is sole sharer
+    return a, c
+
+
+def test_eviction_order_is_lru_and_deterministic():
+    a1, c1 = _pressured_cache()
+    a2, c2 = _pressured_cache()
+    # identical state -> identical victims, oldest tick first
+    assert c1.evict(2) == 2 and c2.evict(2) == 2
+    for c in (c1, c2):
+        assert b"k0" not in c and b"k1" not in c
+        assert b"k2" in c and b"k3" in c
+    assert a1.ledger() == a2.ledger()
+    # a lookup REFRESHES the tick: the touched entry survives the next wave
+    c1.lookup([b"k2"])
+    assert c1.evict(1) == 1
+    assert b"k2" in c1 and b"k3" not in c1
+    assert a1.verify()
+
+
+def test_full_pool_of_cache_entries_is_fully_reclaimable():
+    a, c = _pressured_cache()
+    assert a.n_free == 0 and c.evictable() == 4
+    # a new request the size of the WHOLE pool gets in after eviction
+    assert a.alloc(4, owner="big") is None
+    assert c.evict(4) == 4
+    pids = a.alloc(4, owner="big")
+    assert pids is not None and len(pids) == 4
+    assert a.verify() and len(c) == 0
+    # books: every page held by the request, none lost to the cache
+    led = a.ledger()
+    assert led["held"] == 4 and led["free"] == 0

@@ -1,0 +1,171 @@
+"""Property tests for the cost-model placer (hypothesis).
+
+Randomized layer sets drive the packing/feasibility/rotation machinery
+the deterministic suite (test_placement.py) pins on the smoke model:
+
+  * `pack_contexts` is deterministic and prefix-monotone (no tile
+    conservation law exists — see the NOTE below);
+  * `_feasible_prefix_len` is monotone in the budget, its prefix always
+    packs within the budget, and one more layer never does;
+  * `_build_rotation` never emits a state over budget, partitions the
+    candidate set exactly (hot / rotating groups / permanently digital —
+    nothing silently dropped), and classifies as permanently digital
+    exactly the layers that cannot fit even alone;
+  * `plan_placement` on synthetic parameter trees honors the cap, is
+    monotone non-worsening in budget, and never loses to all-digital.
+
+Deterministic API units live in test_placement.py; this module needs the
+optional hypothesis dep (importorskip per repo convention, mirroring
+test_isa_props.py)."""
+
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the optional dep
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aimc import AimcConfig
+from repro.core.placement import (LayerCost, _build_rotation,
+                                  _feasible_prefix_len, _packmax,
+                                  plan_placement)
+from repro.core.program import MappingPlan
+from repro.core.tile import pack_contexts
+
+CFG = AimcConfig(impl="ref", tile_rows=64, tile_cols=64)
+
+
+def _tiles(k, n, inst):
+    """Standalone packed tile count (the shelf packer, not a ceil formula —
+    the packer shares tiles across column spans)."""
+    return sum(pack_contexts([("x", k, n, inst)], 1,
+                             CFG.tile_rows, CFG.tile_cols))
+
+
+# strategy: a list of layers as (k, n, instances); names are positional
+layers_st = st.lists(st.tuples(st.integers(1, 300), st.integers(1, 300),
+                               st.integers(1, 3)),
+                     min_size=1, max_size=8)
+
+
+def _costs(layers, savings_sign=None):
+    """Synthesize a LayerCost tuple; savings_sign[i] > 0 makes layer i a
+    candidate (t_digital > t_analog), else it prefers digital."""
+    out = []
+    for i, (k, n, inst) in enumerate(layers):
+        pos = True if savings_sign is None else savings_sign[i]
+        t_a = 1e-6 * (i + 1)
+        t_d = t_a * (2.0 if pos else 0.5)
+        out.append(LayerCost(path=f"l{i}", k=k, n=n, instances=inst,
+                             fold_index=i, t_digital=t_d, t_analog=t_a,
+                             tiles_alone=_tiles(k, n, inst)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# pack_contexts: determinism + prefix monotonicity
+# ---------------------------------------------------------------------------
+# NOTE deliberately absent: tile "conservation" laws. The shelf packer can
+# both SHARE one tile across matrices (joint < standalone sum) and
+# FRAGMENT shelves first-fit (joint > standalone sum), so neither
+# inequality holds in general. The binding contract — pack_contexts
+# reproduces the real ProgramBuilder bit-for-bit — is pinned against a
+# real program in test_placement.py.
+
+@settings(max_examples=100, deadline=None)
+@given(layers_st, st.integers(1, 4))
+def test_pack_contexts_deterministic_and_prefix_monotone(layers,
+                                                         n_contexts):
+    items = [(f"l{i}", k, n, inst)
+             for i, (k, n, inst) in enumerate(layers)]
+    per = pack_contexts(items, n_contexts, CFG.tile_rows, CFG.tile_cols)
+    assert len(per) == n_contexts
+    assert all(c >= 0 for c in per) and max(per) >= 1
+    # deterministic: same items -> same packing
+    assert per == pack_contexts(items, n_contexts, CFG.tile_rows,
+                                CFG.tile_cols)
+    # the simulation is sequential (later items cannot change earlier
+    # placements): packing any prefix never exceeds the full run
+    for i in range(len(items)):
+        pre = pack_contexts(items[:i + 1], n_contexts, CFG.tile_rows,
+                            CFG.tile_cols)
+        assert all(a <= b for a, b in zip(pre, per))
+
+
+# ---------------------------------------------------------------------------
+# feasibility frontier
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=150, deadline=None)
+@given(layers_st, st.integers(1, 30))
+def test_feasible_prefix_is_tight_and_monotone(layers, budget):
+    costs = _costs(layers)
+    order = sorted(costs, key=lambda c: (-c.density, c.path))
+    m = _feasible_prefix_len(costs, order, budget, 1, CFG)
+    chosen = {c.path for c in order[:m]}
+    assert _packmax(costs, chosen, 1, CFG) <= budget
+    if m < len(order):
+        # the frontier is tight: the running max over the NEXT prefix
+        # (what the placer actually guards) busts the budget
+        grown = max(_packmax(costs, {c.path for c in order[:i + 1]}, 1, CFG)
+                    for i in range(m + 1))
+        assert grown > budget
+    # more budget never shrinks the feasible prefix
+    m2 = _feasible_prefix_len(costs, order, budget + 1, 1, CFG)
+    assert m2 >= m
+
+
+# ---------------------------------------------------------------------------
+# rotation construction: capped states, exact partition
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=150, deadline=None)
+@given(layers_st, st.integers(1, 12))
+def test_rotation_states_capped_and_partition_exact(layers, budget):
+    costs = _costs(layers)
+    candidates = sorted(costs, key=lambda c: (-c.density, c.path))
+    m_res = _feasible_prefix_len(costs, candidates, budget, 1, CFG)
+    rot = _build_rotation(costs, candidates, m_res, budget, 1, CFG,
+                          swap_every=1)
+    # every rotation state fits the cap
+    for state in rot.states():
+        assert _packmax(costs, set(state), 1, CFG) <= budget
+    # hot + groups + permanent-digital is an exact partition of candidates
+    rotated = [p for g in rot.groups for p in g]
+    everything = list(rot.hot) + rotated + list(rot.digital)
+    assert sorted(everything) == sorted(c.path for c in candidates)
+    # permanently digital iff the layer cannot fit even alone
+    for c in candidates:
+        alone = _packmax(costs, {c.path}, 1, CFG) <= budget
+        assert (c.path in rot.digital) == (not alone)
+    # groups are nonempty and swap cadence survives
+    assert all(g for g in rot.groups)
+    assert rot.swap_every == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end placer law on synthetic parameter trees
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(8, 200), st.integers(8, 200)),
+                min_size=1, max_size=4),
+       st.integers(1, 6))
+def test_plan_placement_cap_monotone_dominates(shapes, budget):
+    params = {"blocks": {f"w_l{i}": jnp.ones((k, n), jnp.float32)
+                         for i, (k, n) in enumerate(shapes)}}
+    res = plan_placement(params, MappingPlan(), CFG,
+                         tiles_per_context=budget, n_contexts=1)
+    resident = [c.item for c in res.costs if c.path in set(res.analog)]
+    per = pack_contexts(resident, 1, CFG.tile_rows, CFG.tile_cols)
+    assert max(per, default=0) <= budget
+    res2 = plan_placement(params, MappingPlan(), CFG,
+                          tiles_per_context=budget + 1, n_contexts=1)
+    assert res2.predicted_s <= res.predicted_s + 1e-15
+    assert res.predicted_s <= res.predicted_digital_s + 1e-15
+    if res.overflow:
+        assert res.rotation is not None
+        for state in res.rotation.states():
+            sn = set(state)
+            items = [c.item for c in res.costs if c.path in sn]
+            assert max(pack_contexts(items, 1, CFG.tile_rows,
+                                     CFG.tile_cols)) <= budget

@@ -481,3 +481,70 @@ def test_engine_validates_health_and_chaos_wiring(tfm, programmed):
     with pytest.raises(ValueError, match="requires a HealthMonitor"):
         _make_engine(tfm, program, params_raw,
                      chaos=parse_chaos("kill:1@2"))
+
+
+# ---------------------------------------------------------------------------
+# drift compensation folded into the dequant scale (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+def test_compensation_gain_inverts_the_power_law():
+    nm = noise_lib.drift_only(nu=0.1, t0=1.0, compensate=True)
+    # between recals the dequant correction is exactly 1/G(t)
+    assert nm.compensation_gain_at(10.0) == pytest.approx(10.0 ** 0.1)
+    assert nm.compensation_gain_at(10.0) * nm.drift_gain_at(10.0) \
+        == pytest.approx(1.0)
+    # inside the reference window nothing has decayed -> no correction
+    assert nm.compensation_gain_at(0.5) == 1.0
+    # compensation off (the pre-fix static-per-program behavior) or model
+    # disabled: the hook is inert
+    assert noise_lib.drift_only(nu=0.1).compensation_gain_at(10.0) == 1.0
+    assert noise_lib.NoiseModel(enabled=False,
+                                drift_compensate=True
+                                ).compensation_gain_at(1e6) == 1.0
+
+
+def test_drift_compensation_collapses_probe_error(programmed):
+    """Before/after pin of the satellite fix: with zero core spread the
+    age-based dequant correction cancels the decay EXACTLY, so the probe
+    error collapses from ~(1 - G(t)) to ~0 between recals."""
+    program, plan, key, params_raw, _ = programmed
+    t = 100.0
+    raw = build_health(program, params_raw, plan, key,
+                       noise=noise_lib.drift_only(nu=0.1, t0=1.0))
+    comp = build_health(program, params_raw, plan, key,
+                        noise=noise_lib.drift_only(nu=0.1, t0=1.0,
+                                                   compensate=True))
+    fresh = dict(zip(program.names, program.states))
+    # uncompensated: a pure gain g reads back as error exactly 1 - g
+    g = 100.0 ** -0.1
+    s_raw = raw.probe({**fresh, **raw.drifted_entries(t)}, t)
+    assert all(e == pytest.approx(1.0 - g, abs=1e-5)
+               for e in s_raw.errors.values())
+    assert raw.failing_cores(s_raw) != ()
+    # compensated: decay x correction cancels, no core trips the probe
+    s_comp = comp.probe({**fresh, **comp.drifted_entries(t)}, t)
+    assert all(e == pytest.approx(0.0, abs=1e-5)
+               for e in s_comp.errors.values())
+    assert comp.failing_cores(s_comp) == ()
+
+
+def test_drift_compensation_with_core_spread_leaves_residual(programmed):
+    """With per-core nu variation the compensator (which only knows the
+    NOMINAL exponent) cannot cancel exactly: the error drops vs the raw
+    decay but stays nonzero — recalibration still has a job."""
+    program, plan, key, params_raw, _ = programmed
+    t = 100.0
+    raw = build_health(program, params_raw, plan, key,
+                       noise=noise_lib.drift_only(nu=0.1, t0=1.0,
+                                                  core_spread=0.5))
+    comp = build_health(program, params_raw, plan, key,
+                        noise=noise_lib.drift_only(nu=0.1, t0=1.0,
+                                                   core_spread=0.5,
+                                                   compensate=True))
+    fresh = dict(zip(program.names, program.states))
+    s_raw = raw.probe({**fresh, **raw.drifted_entries(t)}, t)
+    s_comp = comp.probe({**fresh, **comp.drifted_entries(t)}, t)
+    for core, e_raw in s_raw.errors.items():
+        e_comp = s_comp.errors[core]
+        assert e_comp < e_raw, (core, e_comp, e_raw)
+        assert e_comp > 0.0, core
